@@ -1,0 +1,30 @@
+"""Benchmark utilities: the paper's timing protocol (§6) — N warm-up runs
+then an average over M timed runs; throughput in gigasamples/second via
+the paper's formula
+
+    Gsps := floatsProcessed / (milliseconds * 1e9 / 1000)          (eq. 3)
+
+where floatsProcessed counts every floating-point value in all queries of
+the batch.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, runs: int = 10) -> float:
+    """-> average seconds per call (block_until_ready on every run)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(runs):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / runs
+
+
+def gsps(floats_processed: int, seconds: float) -> float:
+    ms = seconds * 1e3
+    return floats_processed / (ms * 1e9 / 1e3)

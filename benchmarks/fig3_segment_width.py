@@ -1,0 +1,64 @@
+"""Paper Fig. 3: throughput vs segment width (thread coarsening).
+
+On AMD the paper found a peak near width 14 (+30% over width 2) for its
+512x2000-vs-100k workload. On TPU the analogous knob is the Pallas
+kernel's per-lane reference segment width; sublane alignment favours
+multiples of 8 (DESIGN.md §8.3). The sweep runs the kernel in interpret
+mode for structural truth on CPU and also sweeps the XLA engine (which
+has no such knob — flat line, the control).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gsps, time_fn
+from repro.configs.paper_sdtw import SMALL, PAPER
+from repro.core.normalize import normalize_batch
+from repro.data.cbf import make_cylinder_bell_funnel
+from repro.kernels import ops as kops
+
+WIDTHS = (2, 4, 8, 14, 16, 24, 32)
+
+
+def run(full: bool = False, widths=WIDTHS, csv=None):
+    wl = PAPER if full else SMALL
+    rng = np.random.default_rng(0)
+    q = normalize_batch(jnp.asarray(
+        make_cylinder_bell_funnel(rng, wl.batch, wl.query_len)))
+    r = normalize_batch(jnp.asarray(
+        make_cylinder_bell_funnel(rng, 1, wl.ref_len)[0]))
+    floats = wl.batch * wl.query_len
+
+    print(f"# Fig 3 (workload: batch={wl.batch} M={wl.query_len} "
+          f"N={wl.ref_len}) — Pallas interpret mode")
+    print(f"{'segment_width':>14s} {'ms':>12s} {'Gsps':>12s}")
+    best = None
+    for w in widths:
+        t = time_fn(functools.partial(
+            kops.sdtw_wavefront, segment_width=w, interpret=True),
+            q, r, warmup=1, runs=1)
+        g = gsps(floats, t)
+        best = (w, g) if best is None or g > best[1] else best
+        print(f"{w:14d} {t * 1e3:12.2f} {g:12.6f}")
+        if csv is not None:
+            csv.append({"bench": "fig3", "segment_width": w,
+                        "ms": t * 1e3, "gsps": g})
+    print(f"# peak at width {best[0]} (paper: 14 on AMD)")
+    return best
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--widths", type=int, nargs="*", default=list(WIDTHS))
+    args = ap.parse_args(argv)
+    run(full=args.full, widths=args.widths)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark driver: one bench per paper table/figure + framework-level
+benches. Writes benchmarks/out/results.csv.
+
+  python -m benchmarks.run            # reduced CPU workloads
+  python -m benchmarks.run --full     # paper's exact sizes (slow on CPU)
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--kernel", action="store_true", default=True)
+    ap.add_argument("--out", default="benchmarks/out")
+    args = ap.parse_args(argv)
+
+    rows: list[dict] = []
+
+    from benchmarks import table1_throughput, fig3_segment_width
+    from benchmarks import train_step_bench, sdtw_scaling
+
+    print("=" * 70)
+    table1_throughput.run(full=args.full, kernel=args.kernel, csv=rows)
+    print("=" * 70)
+    fig3_segment_width.run(full=args.full, csv=rows)
+    print("=" * 70)
+    sdtw_scaling.run(csv=rows)
+    print("=" * 70)
+    train_step_bench.run(csv=rows)
+
+    os.makedirs(args.out, exist_ok=True)
+    keys = sorted({k for r in rows for k in r})
+    path = os.path.join(args.out, "results.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+    print(f"wrote {len(rows)} rows -> {path}")
+
+
+if __name__ == "__main__":
+    main()

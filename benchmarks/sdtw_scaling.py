@@ -1,0 +1,40 @@
+"""Scaling study (beyond the paper's single workload): engine throughput
+vs batch size and reference length — verifies the linear-in-(B, N)
+behaviour the wavefront structure promises.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gsps, time_fn
+from repro.core.engine import sdtw_engine
+from repro.core.normalize import normalize_batch
+from repro.data.cbf import make_cylinder_bell_funnel
+
+
+def run(csv=None):
+    rng = np.random.default_rng(0)
+    M = 64
+    print("# sDTW engine scaling (M=64)")
+    print(f"{'B':>6s} {'N':>8s} {'ms':>10s} {'Gsps':>10s}")
+    for B in (8, 32, 128):
+        for N in (512, 2048, 8192):
+            q = normalize_batch(jnp.asarray(
+                make_cylinder_bell_funnel(rng, B, M)))
+            r = normalize_batch(jnp.asarray(
+                make_cylinder_bell_funnel(rng, 1, N)[0]))
+            t = time_fn(functools.partial(sdtw_engine), q, r,
+                        warmup=1, runs=3)
+            g = gsps(B * M, t)
+            print(f"{B:6d} {N:8d} {t * 1e3:10.2f} {g:10.6f}")
+            if csv is not None:
+                csv.append({"bench": "sdtw_scaling", "B": B, "N": N,
+                            "ms": t * 1e3, "gsps": g})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,99 @@
+"""Paper Table 1: average throughput (Gsps) + execution time of the sDTW
+kernel and the normalizer kernel, 10 timed runs after 2 warm-ups.
+
+The paper's full workload is 512 queries x 2,000 samples against a
+100,000-sample reference on an AMD GPU; this container is CPU-only, so
+the default is the reduced same-structure workload (``--full`` runs the
+paper's exact sizes — slow on CPU). Backends:
+
+  * engine  — anti-diagonal XLA engine (the paper's wavefront at the HLO
+              level; what a TPU would run fastest today)
+  * kernel  — Pallas TPU kernel in interpret mode (correctness-true to
+              the TPU kernel, interpreter-speed on CPU)
+
+Paper reference numbers (Table 1): sDTW 9.27e-4 Gsps / 11,036 ms;
+normalizer 4.82 Gsps / 0.0214 ms.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import gsps, time_fn
+from repro.configs.paper_sdtw import PAPER, SMALL
+from repro.core.engine import sdtw_engine
+from repro.core.normalize import normalize_batch
+from repro.data.cbf import make_cylinder_bell_funnel
+from repro.kernels import ops as kops
+
+
+def run(full: bool = False, kernel: bool = False, runs: int = None,
+        csv=None):
+    wl = PAPER if full else SMALL
+    runs = runs or wl.timed_runs
+    rng = np.random.default_rng(0)
+    queries = make_cylinder_bell_funnel(rng, wl.batch, wl.query_len)
+    reference = make_cylinder_bell_funnel(rng, 1, wl.ref_len)[0]
+    q = jnp.asarray(queries)
+    r = jnp.asarray(reference)
+    rows = []
+
+    # --- normalizer
+    t = time_fn(functools.partial(normalize_batch), q,
+                warmup=wl.warmup_runs, runs=runs)
+    floats = wl.batch * wl.query_len
+    rows.append(("normalizer(engine)", t * 1e3, gsps(floats, t)))
+
+    t = time_fn(functools.partial(kops.normalize, interpret=True), q,
+                warmup=1, runs=max(runs // 3, 1))
+    rows.append(("normalizer(pallas-interpret)", t * 1e3, gsps(floats, t)))
+
+    # --- sDTW
+    qn = normalize_batch(q)
+    rn = normalize_batch(r)
+    t = time_fn(functools.partial(sdtw_engine), qn, rn,
+                warmup=wl.warmup_runs, runs=runs)
+    rows.append(("sdtw(engine)", t * 1e3, gsps(floats, t)))
+
+    # beyond-paper: the paper's §8 uint8-codebook future work
+    from repro.core.quantized import sdtw_quantized
+    t = time_fn(functools.partial(sdtw_quantized, normalize=False),
+                qn, rn, warmup=wl.warmup_runs, runs=runs)
+    rows.append(("sdtw(uint8-codebook)", t * 1e3, gsps(floats, t)))
+
+    if kernel:
+        t = time_fn(functools.partial(
+            kops.sdtw_wavefront, segment_width=wl.segment_width,
+            interpret=True), qn, rn, warmup=1, runs=1)
+        rows.append(("sdtw(pallas-interpret)", t * 1e3, gsps(floats, t)))
+
+    print(f"# Table 1 (workload: batch={wl.batch} M={wl.query_len} "
+          f"N={wl.ref_len}, runs={runs})")
+    print(f"{'kernel':32s} {'ms':>12s} {'Gsps':>12s}")
+    for name, ms, g in rows:
+        print(f"{name:32s} {ms:12.3f} {g:12.6f}")
+        if csv is not None:
+            csv.append({"bench": "table1", "name": name, "ms": ms,
+                        "gsps": g, "batch": wl.batch, "M": wl.query_len,
+                        "N": wl.ref_len})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper's exact 512x2000 vs 100k workload")
+    ap.add_argument("--kernel", action="store_true",
+                    help="also time the Pallas kernel in interpret mode")
+    ap.add_argument("--runs", type=int, default=None)
+    args = ap.parse_args(argv)
+    run(full=args.full, kernel=args.kernel, runs=args.runs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Framework-level bench: wall-clock train_step on reduced configs (CPU)
+— regression guard for the step-builder + model stack plumbing."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro import configs
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import TrainState, make_train_step
+from repro.optim.adamw import adamw_init
+
+ARCHS = ("mamba2_130m", "gemma3_27b", "qwen2_moe_a2_7b")
+B, S = 4, 64
+
+
+def run(csv=None):
+    print("# train_step wall-clock (reduced configs, CPU)")
+    print(f"{'arch':24s} {'ms/step':>10s} {'tok/s':>10s}")
+    for arch in ARCHS:
+        cfg = configs.get_smoke(arch)
+        model = Model(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        state = TrainState(params=params, opt=adamw_init(params)).tree()
+        step = jax.jit(make_train_step(model, AdamWConfig()))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+            "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+        if not cfg.embed_inputs:
+            batch = {"embeds": jnp.zeros((B, S, cfg.d_model)),
+                     "labels": batch["labels"]}
+        if cfg.n_enc_layers:
+            batch["enc_embeds"] = jnp.zeros((B, S, cfg.d_model))
+        t = time_fn(lambda s, b: step(s, b)[0], state, batch,
+                    warmup=1, runs=3)
+        print(f"{arch:24s} {t * 1e3:10.1f} {B * S / t:10.0f}")
+        if csv is not None:
+            csv.append({"bench": "train_step", "name": arch,
+                        "ms": t * 1e3})
+
+
+if __name__ == "__main__":
+    run()

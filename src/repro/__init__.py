@@ -1,0 +1,7 @@
+"""repro — multi-pod JAX framework around subsequence-DTW (sDTW).
+
+Reproduction + scale-out of "Optimizing sDTW for AMD GPUs" (CS.DC 2024),
+adapted to TPU per DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,36 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt; unverified].
+
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144. Layer pattern
+(L,L,L,L,L,G): sliding-window 1024 locals (rope theta 10k) with every
+6th layer global (rope theta 1M). qk-norm, tied embeddings, head_dim 128.
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    d_ff=21504,
+    vocab_size=262144,
+    head_dim=128,
+    qk_norm=True,
+    layer_pattern=("L", "L", "L", "L", "L", "G"),
+    local_window=1024,
+    rope_theta=1_000_000.0,
+    rope_theta_local=10_000.0,
+    tie_embeddings=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=8, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=512, local_window=32,
+        remat=False)

@@ -1,0 +1,37 @@
+"""llama4-scout-17b-a16e [moe] — MoE, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 16 experts
+top-1 routing + 1 always-on shared expert (every layer is MoE in the
+16E config). 16 experts divide the model=16 mesh axis exactly -> true
+expert parallelism (DESIGN.md §5).
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    head_dim=128,
+    n_experts=16,
+    n_shared_experts=1,
+    top_k=1,
+    expert_d_ff=8192,
+    rope_theta=500_000.0,
+    moe_impl="sort",        # §Perf: see qwen2_moe_a2_7b.py / EXPERIMENTS.md
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, expert_d_ff=128, n_experts=4, top_k=1,
+        n_shared_experts=1, vocab_size=512, remat=False)

@@ -1,0 +1,32 @@
+"""mamba2-130m [ssm] — SSD (state-space duality) [arXiv:2405.21060; unverified].
+
+24L d_model=768 (attention-free) vocab=50280, ssm_state=128. O(1) decode
+state -> runs the long_500k assigned shape (DESIGN.md §4).
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_chunk=64,
+    conv_width=4,
+    tie_embeddings=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, ssm_state=16, ssm_headdim=16,
+        ssm_chunk=16, vocab_size=512, remat=False)

@@ -1,0 +1,25 @@
+"""The paper's own workload config (Table 1 / Fig. 3).
+
+Batch of 512 queries x 2,000 samples each, reference series of 100,000
+samples; segment-width sweep around the paper's AMD optimum of 14
+(re-swept for TPU sublane alignment in benchmarks/fig3_segment_width.py).
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SDTWWorkload:
+    batch: int = 512          # queries per batch (paper §6)
+    query_len: int = 2_000    # samples per query
+    ref_len: int = 100_000    # reference series length
+    segment_width: int = 8    # TPU re-swept default (paper AMD optimum: 14)
+    warmup_runs: int = 2
+    timed_runs: int = 10
+
+
+PAPER = SDTWWorkload()
+
+# reduced workload for CPU-bound tests/benches of the same code paths
+SMALL = SDTWWorkload(batch=16, query_len=64, ref_len=1_024,
+                     warmup_runs=1, timed_runs=3)

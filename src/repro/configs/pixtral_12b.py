@@ -1,0 +1,32 @@
+"""pixtral-12b [vlm] — pixtral-ViT + mistral-nemo backbone
+[hf:mistralai/Pixtral-12B-2409; unverified].
+
+40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072. The vision
+frontend (pixtral-ViT patch encoder) is a STUB: ``input_specs()`` feeds
+precomputed patch/text embeddings at train/prefill (embed_inputs=False);
+decode consumes generated text tokens through the embedding table.
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=131072,
+    head_dim=128,
+    rope_theta=1_000_000.0,     # mistral-nemo long-context base
+    embed_inputs=False,         # ViT frontend stub provides embeddings
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=512, remat=False)

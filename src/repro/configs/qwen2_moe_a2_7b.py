@@ -1,0 +1,43 @@
+"""qwen2-moe-a2.7b — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B; hf].
+
+24L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=151936, MoE 60 experts
+top-4, 4 shared experts (shared hidden = 4x1408 = 5632). 60 experts do
+NOT divide model=16 -> experts stay replicated with TP inside each
+expert's FFN (expert_d_ff=1408 does divide; DESIGN.md §5).
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    n_experts=60,
+    n_shared_experts=4,
+    top_k=4,
+    expert_d_ff=1408,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    # §Perf iteration 2: sort-based dispatch (see EXPERIMENTS.md §Perf) —
+    # the GShard one-hot dispatch einsums cost ~75x this model's useful
+    # FLOPs (small experts, D=2048); "einsum" re-selects the baseline.
+    moe_impl="sort",
+    # §Perf iteration: 60 experts don't divide model=16 (no EP anyway) and
+    # the TP activation psums dominate a 2.7B-active model -> ZeRO-3-only
+    # train layout, like recurrentgemma (EXPERIMENTS.md §Perf).
+    layout="fsdp",
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=96, expert_d_ff=96, n_experts=8, top_k=2,
+        n_shared_experts=2, vocab_size=512, remat=False)

@@ -1,0 +1,41 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attn, 1:2 ratio
+[arXiv:2402.19427; unverified].
+
+38L d_model=4096 16H (GQA kv=1, i.e. MQA) d_ff=12288 vocab=256000.
+Layer pattern (R,R,L): two RG-LRU recurrent blocks per sliding-window
+(2048) attention block. O(1) recurrent state + bounded KV window ->
+runs the long_500k assigned shape (DESIGN.md §4).
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    layer_pattern=("R", "R", "L"),
+    local_window=2048,
+    lru_width=4096,
+    conv_width=4,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    # §Perf iteration 5: at 9B params / 1M tokens-per-step the Megatron-TP
+    # activation all-reduces cost ~14x the pure-FSDP weight all-gathers;
+    # train cells use ZeRO-3-only layout (EXPERIMENTS.md §Perf).
+    layout="fsdp",
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=1,
+        head_dim=16, d_ff=128, vocab_size=512, local_window=32,
+        lru_width=64, remat=False)

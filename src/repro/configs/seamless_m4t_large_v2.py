@@ -1,0 +1,30 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+24L d_model=1024 16H (GQA kv=16) d_ff=8192 vocab=256206. The speech
+frontend (conformer feature extractor) is a STUB: ``input_specs()``
+provides precomputed frame embeddings to the encoder (system prompt,
+[audio] note); the text decoder embeds tokens normally.
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,                # decoder
+    n_enc_layers=24,            # encoder (frame-embedding stub input)
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    rope_theta=10_000.0,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, n_enc_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=512, remat=False)

@@ -1,0 +1,58 @@
+"""Public sDTW API — the paper's end-to-end flow (§5):
+
+    normalize(reference); normalize(batch of queries); runSDTW(batch)
+
+with selectable execution backends:
+  * ``"ref"``    — trusted scan oracle (slow, for validation)
+  * ``"engine"`` — anti-diagonal XLA engine (default)
+  * ``"kernel"`` — Pallas TPU wavefront kernel (interpret=True on CPU)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import engine as _engine
+from repro.core import ref as _ref
+from repro.core.normalize import normalize_batch
+
+
+def sdtw_batch(queries, reference, *, normalize: bool = True,
+               backend: str = "engine", segment_width: int = 8,
+               interpret: bool | None = None):
+    """Align a batch of queries against one reference.
+
+    queries: (B, M); reference: (N,). Returns (costs (B,), end_idx (B,)).
+
+    Mirrors the paper's pipeline: optional z-normalization of both inputs
+    (§5.1), then the batched subsequence-DTW sweep (§5.2). ``end_idx`` is
+    the reference index where the best alignment ends (the paper only
+    reports the min cost; the end index falls out of the same fold).
+    """
+    queries = jnp.asarray(queries)
+    reference = jnp.asarray(reference)
+    if normalize:
+        queries = normalize_batch(queries)
+        reference = normalize_batch(reference)
+    if backend == "ref":
+        return _ref.sdtw_ref(queries, reference)
+    if backend == "engine":
+        return _engine.sdtw_engine(queries, reference)
+    if backend == "kernel":
+        from repro.kernels import ops as _ops  # deferred: pallas import
+        return _ops.sdtw_wavefront(
+            queries, reference, segment_width=segment_width,
+            interpret=True if interpret is None else interpret)
+    if backend == "quantized":
+        # uint8 codebook sDTW — the paper's §8 future work (inputs were
+        # already normalized above when requested)
+        from repro.core.quantized import sdtw_quantized
+        return sdtw_quantized(queries, reference, normalize=False)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def sdtw_search(query, reference, **kw):
+    """Single-query convenience wrapper around :func:`sdtw_batch`."""
+    q = jnp.asarray(query)[None, :]
+    cost, end = sdtw_batch(q, reference, **kw)
+    return cost[0], end[0]

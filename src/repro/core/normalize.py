@@ -1,0 +1,32 @@
+"""Batch z-normalization (the paper's normalizer, §5.1).
+
+Standardizes each series to mean 0 / std 1 using the cuDTW++ moment
+formulation the paper adopts::
+
+    sum   /= n
+    sumSq  = sumSq/n - sum*sum      # biased variance via E[x^2] - E[x]^2
+
+The Pallas kernel in ``repro.kernels.normalizer`` implements the same
+computation with an explicit VMEM reduction; this module is the public
+API and the pure-jnp reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normalize_batch(x: jnp.ndarray, *, eps: float = 1e-12,
+                    accum_dtype=jnp.float32) -> jnp.ndarray:
+    """Z-normalize along the last axis. x: (..., L)."""
+    xf = x.astype(accum_dtype)
+    n = x.shape[-1]
+    s = jnp.sum(xf, axis=-1, keepdims=True) / n
+    sq = jnp.sum(xf * xf, axis=-1, keepdims=True) / n - s * s
+    # clamp tiny negative variance from the E[x^2]-E[x]^2 formulation
+    std = jnp.sqrt(jnp.maximum(sq, eps))
+    return ((xf - s) / std).astype(x.dtype)
+
+
+normalize = jax.jit(normalize_batch)

@@ -1,0 +1,108 @@
+"""Reference (oracle) implementations of subsequence DTW.
+
+These are the *trusted baselines* every optimized path (anti-diagonal
+engine, Pallas kernels, distributed pipeline) is validated against.
+
+Subsequence DTW (sDTW) recurrence, 0-based query rows ``i`` and reference
+columns ``j``::
+
+    D[i, j] = (q[i] - r[j])**2 + min(D[i-1, j], D[i, j-1], D[i-1, j-1])
+
+with the *subsequence* boundary condition ``D[-1, j] = 0`` for every j
+(an alignment may start anywhere in the reference) and ``D[i, -1] = inf``
+for ``i >= 0``.  The result is ``min_j D[M-1, j]`` — the best alignment
+cost of the whole query against *some* contiguous window of the
+reference (paper §2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+INF = jnp.inf
+
+
+def sdtw_numpy(q: np.ndarray, r: np.ndarray) -> tuple[float, int]:
+    """Brute-force full-matrix sDTW. O(M*N) memory. Trusted oracle.
+
+    Returns (min_cost, end_index) where end_index is the reference column
+    at which the best alignment ends.
+    """
+    q = np.asarray(q, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    m, n = len(q), len(r)
+    D = np.full((m + 1, n + 1), np.inf, dtype=np.float64)
+    D[0, :] = 0.0  # subsequence: free start anywhere in the reference
+    for i in range(1, m + 1):
+        for j in range(1, n + 1):
+            c = (q[i - 1] - r[j - 1]) ** 2
+            D[i, j] = c + min(D[i - 1, j], D[i, j - 1], D[i - 1, j - 1])
+    end = int(np.argmin(D[m, 1:]))
+    return float(D[m, 1 + end]), end
+
+
+def dtw_global_numpy(q: np.ndarray, r: np.ndarray) -> float:
+    """Global DTW (both ends pinned) — used by property tests
+    (sDTW cost <= global DTW cost)."""
+    q = np.asarray(q, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    m, n = len(q), len(r)
+    D = np.full((m + 1, n + 1), np.inf, dtype=np.float64)
+    D[0, 0] = 0.0
+    for i in range(1, m + 1):
+        for j in range(1, n + 1):
+            c = (q[i - 1] - r[j - 1]) ** 2
+            D[i, j] = c + min(D[i - 1, j], D[i, j - 1], D[i - 1, j - 1])
+    return float(D[m, n])
+
+
+def _sdtw_rowscan_single(q: jnp.ndarray, r: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-by-row scan sDTW for one (query, reference) pair.
+
+    Sequential over both axes (inner scan carries the left cell), so it is
+    slow but structurally simple — it mirrors the CPU-side generator the
+    paper uses for correctness evaluation (§4).
+    Returns (min_cost, end_index).
+    """
+    # Virtual row -1 is all zeros (free start): D[0, j] = cost(0, j) because
+    # min(D[-1,j]=0, D[0,j-1]>=0, D[-1,j-1]=0) = 0 (all costs are >= 0).
+    row0 = (q[0] - r) ** 2
+
+    def row_step_rest(prev_row, qi):
+        cost = (qi - r) ** 2
+
+        def col_step(carry, xs):
+            left, upleft = carry
+            c, up = xs
+            val = c + jnp.minimum(jnp.minimum(left, upleft), up)
+            return (val, up), val
+
+        (_, _), row = lax.scan(
+            col_step,
+            (jnp.asarray(INF, q.dtype), jnp.asarray(INF, q.dtype)),
+            (cost, prev_row),
+        )
+        return row, None
+
+    last_row, _ = lax.scan(row_step_rest, row0, q[1:])
+    end = jnp.argmin(last_row)
+    return last_row[end], end
+
+
+def sdtw_ref(queries: jnp.ndarray, reference: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched scan-based sDTW oracle.
+
+    queries:   (B, M) float
+    reference: (N,) shared or (B, N) per-query
+    returns:   (costs (B,), end_indices (B,))
+    """
+    queries = jnp.asarray(queries)
+    reference = jnp.asarray(reference)
+    if reference.ndim == 1:
+        fn = jax.vmap(_sdtw_rowscan_single, in_axes=(0, None))
+    else:
+        fn = jax.vmap(_sdtw_rowscan_single, in_axes=(0, 0))
+    return fn(queries, reference)

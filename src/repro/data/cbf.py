@@ -1,0 +1,63 @@
+"""Cylinder–Bell–Funnel synthetic time-series generator.
+
+Reimplements ``pyts.datasets.make_cylinder_bell_funnel`` (Saito 1994) — the
+generator the paper's test-dataset tool uses (§4) — in pure numpy, since
+pyts is not available offline.  Each series of length ``n``::
+
+    cylinder: (6 + eta) * X_[a,b](t)                    + eps(t)
+    bell:     (6 + eta) * X_[a,b](t) * (t - a)/(b - a)  + eps(t)
+    funnel:   (6 + eta) * X_[a,b](t) * (b - t)/(b - a)  + eps(t)
+
+with a ~ U[n/8, n/4], b - a ~ U[n/4, 3n/4], eta ~ N(0,1), eps ~ N(0,1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+KINDS = ("cylinder", "bell", "funnel")
+
+
+def make_cylinder_bell_funnel(rng: np.random.Generator, n_samples: int,
+                              length: int = 128, kind: str | None = None
+                              ) -> np.ndarray:
+    """Generate (n_samples, length) float32 CBF series.
+
+    kind: one of "cylinder" / "bell" / "funnel", or None for a random mix.
+    """
+    t = np.arange(length, dtype=np.float64)
+    out = np.empty((n_samples, length), np.float32)
+    for s in range(n_samples):
+        k = kind or KINDS[int(rng.integers(3))]
+        a = rng.uniform(length / 8, length / 4)
+        b = a + rng.uniform(length / 4, 3 * length / 4)
+        b = min(b, length - 1.0)
+        eta = rng.normal()
+        eps = rng.normal(size=length)
+        chi = ((t >= a) & (t <= b)).astype(np.float64)
+        if k == "cylinder":
+            shape = chi
+        elif k == "bell":
+            shape = chi * (t - a) / max(b - a, 1e-9)
+        elif k == "funnel":
+            shape = chi * (b - t) / max(b - a, 1e-9)
+        else:
+            raise ValueError(f"unknown kind {k!r}")
+        out[s] = ((6 + eta) * shape + eps).astype(np.float32)
+    return out
+
+
+def make_sdtw_dataset(seed: int, batch: int = 512, query_len: int = 2000,
+                      ref_len: int = 100_000) -> tuple[np.ndarray, np.ndarray]:
+    """The paper's benchmark input: ``batch`` queries of ``query_len``
+    unnormalized samples plus one reference of ``ref_len`` (§6).
+
+    The reference is a long concatenation of CBF motifs (so queries have
+    genuine partial matches), the queries are fresh CBF draws.
+    """
+    rng = np.random.default_rng(seed)
+    queries = make_cylinder_bell_funnel(rng, batch, query_len)
+    n_motifs = ref_len // query_len + 1
+    motifs = make_cylinder_bell_funnel(rng, n_motifs, query_len)
+    reference = motifs.reshape(-1)[:ref_len]
+    return queries, reference

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's two compute hot-spots:
+the wavefront sDTW kernel and the batch z-normalizer (paper §5)."""
+
+from repro.kernels.ops import sdtw_wavefront, normalize  # noqa: F401

@@ -1,0 +1,78 @@
+"""jit'd public wrappers for the Pallas kernels: padding, the DTWax-style
+offline reference swizzle, dtype policy, and unpadding.
+
+The reference reorder mirrors DTWax's offline reference layout
+optimization (paper §3): element ``r[(b*LANES + l)*w + k]`` lands at
+``r_layout[b, k, l]`` so that each kernel step reads one fully-coalesced
+(w, LANES) VMEM tile per reference block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sdtw_wavefront import (LANES, SUBLANES,
+                                          sdtw_wavefront_pallas)
+from repro.kernels.normalizer import normalizer_pallas
+
+PAD_VALUE = 1.0e6   # padded reference columns: cost >= (q - 1e6)^2 never wins
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def swizzle_reference(r: jnp.ndarray, segment_width: int) -> jnp.ndarray:
+    """(N,) -> (R, w, LANES) with [b, k, l] = r[(b*LANES + l)*w + k]."""
+    w = segment_width
+    n_pad = _ceil_to(r.shape[0], LANES * w)
+    r = jnp.pad(r, (0, n_pad - r.shape[0]), constant_values=PAD_VALUE)
+    return r.reshape(-1, LANES, w).transpose(0, 2, 1)
+
+
+def prepare_queries(q: jnp.ndarray) -> jnp.ndarray:
+    """(B, M) -> (G, SUBLANES, M + 2*(LANES-1)) reversed + padded."""
+    B, M = q.shape
+    b_pad = _ceil_to(B, SUBLANES)
+    q = jnp.pad(q, ((0, b_pad - B), (0, 0)))
+    qrev = jnp.flip(q, axis=1)
+    qrev = jnp.pad(qrev, ((0, 0), (LANES - 1, LANES - 1)))
+    return qrev.reshape(-1, SUBLANES, M + 2 * (LANES - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("segment_width", "interpret",
+                                             "compute_dtype"))
+def sdtw_wavefront(queries: jnp.ndarray, reference: jnp.ndarray, *,
+                   segment_width: int = 8,
+                   compute_dtype=jnp.float32,
+                   interpret: bool = True):
+    """Batched subsequence DTW via the Pallas wavefront kernel.
+
+    queries: (B, M) float; reference: (N,) float.
+    Returns (costs (B,) f32, end_indices (B,) i32).
+    """
+    queries = jnp.asarray(queries)
+    reference = jnp.asarray(reference)
+    B, M = queries.shape
+    qk = prepare_queries(queries.astype(compute_dtype))
+    rk = swizzle_reference(reference.astype(compute_dtype), segment_width)
+    costs, ends = sdtw_wavefront_pallas(
+        qk, rk, m=M, segment_width=segment_width,
+        compute_dtype=compute_dtype, interpret=interpret)
+    return costs.reshape(-1)[:B], ends.reshape(-1)[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def normalize(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Batch z-normalization via the Pallas kernel. x: (B, L) -> (B, L)."""
+    x = jnp.asarray(x)
+    B, L = x.shape
+    b_pad = _ceil_to(B, SUBLANES)
+    l_pad = _ceil_to(L, LANES)
+    xp = jnp.pad(x, ((0, b_pad - B), (0, l_pad - L)))
+    xp = xp.reshape(-1, SUBLANES, l_pad)
+    out = normalizer_pallas(xp, n=L, interpret=interpret)
+    return out.reshape(b_pad, l_pad)[:B, :L]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracles for the Pallas kernels (required pairing).
+
+The sDTW oracle is the trusted scan implementation from ``repro.core.ref``
+(itself validated against the brute-force numpy DP); the normalizer
+oracle is ``repro.core.normalize.normalize_batch``.
+"""
+
+from repro.core.ref import sdtw_ref as sdtw_oracle          # noqa: F401
+from repro.core.engine import sdtw_engine as sdtw_oracle_fast  # noqa: F401
+from repro.core.normalize import normalize_batch as normalize_oracle  # noqa: F401

@@ -1,0 +1,195 @@
+"""Pallas TPU wavefront sDTW kernel — the paper's kernel (§5.2), TPU-native.
+
+Mapping of the paper's AMD/HIP mechanisms (DESIGN.md §2):
+
+  * wavefront thread  -> VPU **lane** (128 per step); each lane owns a
+    contiguous ``segment_width`` (w) slice of the reference, exactly the
+    paper's thread-coarsening knob (Fig. 3).
+  * pipeline skew     -> lane l computes query row ``i = t - l`` at step t.
+  * ``__shfl_up``     -> a +1 lane roll of the per-lane last-cell vector;
+    one boundary value crosses lanes per step, nothing else.
+  * per-thread double buffer -> the rotating ``prev_row`` VREG array
+    carried through ``lax.fori_loop``.
+  * inter-wavefront shared-memory strip -> a VMEM scratch column carried
+    across the (sequential) reference-block grid axis.  Because grid
+    steps are sequential on TPU, the read pointer (t+1) always leads the
+    write pointer (t-127) by 128 rows, so ONE buffer suffices where the
+    paper needed two (concurrent wavefronts).
+  * ``__hmin2`` streaming min -> a running (min, argmin) VREG pair folded
+    as bottom-row cells are produced; reduced across lanes once, at the
+    last reference block.
+  * batch of queries  -> grid axis 0, 8 queries per step packed in the
+    sublane dimension (the paper's block-per-query batching).
+
+The DP cell recurrence and the subsequence boundary conditions
+(``D[-1, j] = 0``, ``D[i, -1] = +inf``) are identical to
+``repro.core.ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128          # TPU VPU lane count (the paper's wavefront width = 64)
+SUBLANES = 8         # queries processed per grid step (sublane packing)
+NEG = -1           # sentinel for argmin init
+BIG = 3.0e38       # python float: avoids capturing a traced constant
+
+
+def _kernel(q_ref, r_ref, cost_ref, end_ref,
+            boundary, minval, minidx, *,
+            m: int, w: int, num_ref_blocks: int, compute_dtype):
+    """One (batch-group, reference-block) grid cell.
+
+    q_ref:    (1, SUBLANES, Mp)  reversed+padded queries (see ops.py)
+    r_ref:    (1, w, LANES)      reference block, [k, l] = r[blk*LANES*w + l*w + k]
+    cost_ref: (1, SUBLANES)      per-query min cost  (written at last block)
+    end_ref:  (1, SUBLANES)      per-query argmin end index
+    boundary: (SUBLANES, m)      VMEM strip: right column of this block,
+                                 becomes the left column of the next block
+    minval:   (SUBLANES, LANES)  running min   (persists across ref blocks)
+    minidx:   (SUBLANES, LANES)  running argmin
+    """
+    rblk = pl.program_id(1)
+    cdt = compute_dtype
+    big = jnp.asarray(BIG, cdt)
+
+    lane = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
+
+    @pl.when(rblk == 0)
+    def _init():
+        minval[...] = jnp.full((SUBLANES, LANES), BIG, jnp.float32)
+        minidx[...] = jnp.full((SUBLANES, LANES), NEG, jnp.int32)
+
+    r_blk = r_ref[0]                      # (w, LANES)
+    j_base = (rblk * LANES + lane) * w    # global ref index of lane's k=0
+
+    def step(t, carry):
+        prev_row, left_in, prev_left = carry
+        # lane l is computing query row i = t - l this step
+        i_l = t - lane                                    # (S, L) int32
+        is_row0 = (i_l == 0)
+
+        # q value for (query s, lane l) = q[s, t - l]; q_ref stores the
+        # REVERSED query so this is an ascending slice (no lane flip).
+        qv = pl.load(q_ref, (0, slice(None), pl.dslice(m - 1 + LANES - 1 - t,
+                                                       LANES)))   # (S, L)
+        qv = qv.astype(cdt)
+
+        zero = jnp.asarray(0.0, cdt)
+        new_row = []
+        best_v = None
+        best_k = None
+        left = left_in
+        for k in range(w):
+            up = prev_row[k]
+            upleft = prev_left if k == 0 else prev_row[k - 1]
+            up = jnp.where(is_row0, zero, up)       # virtual row -1 == 0
+            upleft = jnp.where(is_row0, zero, upleft)
+            rv = r_blk[k].astype(cdt)               # (LANES,) -> bcast (S, L)
+            cost = (qv - rv) ** 2
+            val = cost + jnp.minimum(jnp.minimum(left, up), upleft)
+            new_row.append(val)
+            if best_v is None:
+                best_v, best_k = val, jnp.zeros_like(i_l)
+            else:
+                take = val < best_v
+                best_v = jnp.where(take, val, best_v)
+                best_k = jnp.where(take, k, best_k)
+            left = val
+
+        # streaming (min, argmin) fold when a lane finishes its bottom row
+        at_bottom = (i_l == m - 1)
+        cand = best_v.astype(jnp.float32)
+        take = at_bottom & (cand < minval[...])
+        minval[...] = jnp.where(take, cand, minval[...])
+        minidx[...] = jnp.where(take, j_base + best_k, minidx[...])
+
+        last = new_row[w - 1]                             # (S, L)
+        # __shfl_up analogue: neighbour's last cell becomes my left value
+        rolled = pltpu.roll(last, 1, 1)
+        # lane 0: left column comes from the previous block's strip
+        t_next = jnp.minimum(t + 1, m - 1)
+        strip = pl.load(boundary, (slice(None), pl.dslice(t_next, 1)))  # (S,1)
+        strip = strip.astype(cdt)
+        use_strip = (rblk > 0) & ((t + 1) < m)
+        lane0_val = jnp.where(use_strip, strip, big)
+        next_left = jnp.where(lane == 0, lane0_val, rolled)
+
+        # publish my right column for the next block (lane LANES-1, row i127)
+        i127 = t - (LANES - 1)
+
+        @pl.when((i127 >= 0) & (i127 < m))
+        def _store():
+            col = lax.slice(last, (0, LANES - 1), (SUBLANES, LANES))  # (S, 1)
+            pl.store(boundary, (slice(None), pl.dslice(i127, 1)),
+                     col.astype(jnp.float32))
+
+        return (new_row, next_left, left_in)
+
+    prev0 = [jnp.zeros((SUBLANES, LANES), cdt) for _ in range(w)]
+    # t=0: only lane 0 active (row 0); its left is the strip (block>0) / inf
+    strip0 = pl.load(boundary, (slice(None), pl.dslice(0, 1))).astype(cdt)
+    left0 = jnp.where(lane == 0,
+                      jnp.where(rblk > 0, strip0, big), big)
+    prev_left0 = jnp.full((SUBLANES, LANES), big, cdt)
+    carry = (prev0, left0, prev_left0)
+    carry = lax.fori_loop(0, m + LANES - 1, step, carry)
+
+    @pl.when(rblk == num_ref_blocks - 1)
+    def _finalize():
+        mv = minval[...]                                  # (S, L) f32
+        best = jnp.min(mv, axis=1)                        # (S,)
+        arg = jnp.argmin(mv, axis=1)                      # (S,)
+        idx = jnp.take_along_axis(minidx[...], arg[:, None], axis=1)[:, 0]
+        cost_ref[0, :] = best
+        end_ref[0, :] = idx
+
+
+def sdtw_wavefront_pallas(q_rev_pad: jnp.ndarray,
+                          r_layout: jnp.ndarray,
+                          *, m: int, segment_width: int,
+                          compute_dtype=jnp.float32,
+                          interpret: bool = True):
+    """Raw pallas_call wrapper. Use ``repro.kernels.ops.sdtw_wavefront``.
+
+    q_rev_pad: (G, SUBLANES, Mp) reversed queries, Mp = m + 2*(LANES-1)
+    r_layout:  (R, w, LANES) pre-swizzled reference blocks
+    returns (costs (G, SUBLANES) f32, ends (G, SUBLANES) i32)
+    """
+    G, S, Mp = q_rev_pad.shape
+    R, w, L = r_layout.shape
+    assert S == SUBLANES and L == LANES and w == segment_width
+    assert Mp == m + 2 * (LANES - 1), (Mp, m)
+
+    kernel = functools.partial(_kernel, m=m, w=w, num_ref_blocks=R,
+                               compute_dtype=compute_dtype)
+    grid = (G, R)
+    out_shape = (jax.ShapeDtypeStruct((G, SUBLANES), jnp.float32),
+                 jax.ShapeDtypeStruct((G, SUBLANES), jnp.int32))
+    in_specs = [
+        pl.BlockSpec((1, SUBLANES, Mp), lambda b, r: (b, 0, 0)),
+        pl.BlockSpec((1, w, LANES), lambda b, r: (r, 0, 0)),
+    ]
+    out_specs = (pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)),
+                 pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)))
+    scratch = [
+        pltpu.VMEM((SUBLANES, m), jnp.float32),    # boundary strip
+        pltpu.VMEM((SUBLANES, LANES), jnp.float32),  # running min
+        pltpu.VMEM((SUBLANES, LANES), jnp.int32),    # running argmin
+    ]
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"))
+    return pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, scratch_shapes=scratch,
+        interpret=interpret, **kwargs,
+    )(q_rev_pad, r_layout)

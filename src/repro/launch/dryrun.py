@@ -1,0 +1,121 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST run before any other import (jax locks device count on first init)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh; print memory/cost analysis; emit roofline JSON.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3_27b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+
+A cell failure (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the system — the run exits nonzero.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.utils import roofline as R
+
+
+def run_cell(arch: str, shape: str, mesh, *, mesh_desc: str,
+             out_dir: str = None, verbose: bool = True,
+             int8_kv: bool = False) -> dict:
+    import jax.numpy as jnp
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh,
+                      kv_dtype=jnp.int8 if int8_kv else jnp.bfloat16)
+    fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                 out_shardings=cell.out_shardings)
+    lowered = fn.lower(*cell.args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    chips = mesh.size
+    r = R.from_compiled(compiled, arch=arch, shape=shape,
+                        mesh_desc=mesh_desc, chips=chips,
+                        model_flops=cell.model_flops)
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(f"--- {arch} x {shape} on {mesh_desc} "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+        print(f"    memory_analysis: {mem}")
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print(f"    cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+        print(f"    collectives: {r.coll_breakdown}")
+        print(f"    terms(s): compute={r.t_compute:.4e} "
+              f"memory={r.t_memory:.4e} collective={r.t_collective:.4e} "
+              f"-> {r.bottleneck}-bound, roofline_frac="
+              f"{r.roofline_fraction:.3f} flops_ratio={r.flops_ratio:.3f}")
+    d = r.to_dict()
+    d["lower_s"] = t_lower
+    d["compile_s"] = t_compile
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape}__{mesh_desc}".replace("/", "_")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(d, f, indent=1)
+    return d
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="also compile on the 2x16x16 multi-pod mesh")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--int8-kv", action="store_true",
+                    help="quantized int8 KV cache for decode cells")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append((make_production_mesh(), "pod16x16"))
+    if args.multi_pod or args.multi_pod_only:
+        meshes.append((make_production_mesh(multi_pod=True), "pod2x16x16"))
+
+    if args.all:
+        cells = configs.cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for mesh, desc in meshes:
+        for arch, shape in cells:
+            if not configs.shape_applicable(arch, shape):
+                print(f"--- {arch} x {shape}: SKIP (long-context shape on "
+                      f"quadratic-attention arch; DESIGN.md §4)")
+                continue
+            try:
+                run_cell(arch, shape, mesh, mesh_desc=desc,
+                         out_dir=args.out, int8_kv=args.int8_kv)
+            except Exception:
+                failures.append((arch, shape, desc))
+                traceback.print_exc()
+    if failures:
+        print(f"FAILED cells: {failures}")
+        return 1
+    print(f"dry-run OK: {len(cells)} cells x {len(meshes)} mesh(es)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

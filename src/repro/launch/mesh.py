@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before its
+first jax import, and everything else must see the real single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (v5e); 2 pods = 512 chips multi-pod.
+
+    Axes: ``data`` (DP/FSDP), ``model`` (TP/EP); ``pod`` composes as pure
+    DP across the inter-pod DCI (DESIGN.md §5).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CPU tests (requires >= prod(shape) fake devices)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,56 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Perf-loop profiler: compile one cell and print the top collective ops
+(with op_name attribution) + the roofline terms. The 'profile' of the
+hypothesis -> change -> measure loop (EXPERIMENTS.md §Perf).
+
+  python -m repro.launch.profile_cell --arch recurrentgemma_9b \
+      --shape train_4k [--multi-pod] [--dump /tmp/hlo.txt]
+"""
+
+import argparse
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.utils import hlo_cost, roofline as R
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=14)
+    ap.add_argument("--dump", default=None)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cell = build_cell(args.arch, args.shape, mesh)
+    fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                 out_shardings=cell.out_shardings)
+    compiled = fn.lower(*cell.args).compile()
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(text)
+        print(f"dumped HLO -> {args.dump} ({len(text) / 1e6:.1f} MB)")
+
+    r = R.from_compiled(compiled, arch=args.arch, shape=args.shape,
+                        mesh_desc="prof", chips=mesh.size,
+                        model_flops=cell.model_flops)
+    print(f"terms(s): compute={r.t_compute:.4e} memory={r.t_memory:.4e} "
+          f"collective={r.t_collective:.4e} -> {r.bottleneck}")
+    print(f"flops_ratio={r.flops_ratio:.4f} "
+          f"roofline_frac={r.roofline_fraction:.4f}")
+    print(f"\ntop collectives (per-device bytes x trips):")
+    for c in hlo_cost.top_collectives(text, args.top):
+        print(f"  {c['bytes']:.3e}B  {c['kind']:20s} x{c['trips']:<5d} "
+              f"{c['shape']:34s} {c['op_name'][:80]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
+table (markdown to stdout)."""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt(x):
+    return f"{x:.3g}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for p in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        d = json.load(open(p))
+        if d["mesh"] != args.mesh:
+            continue
+        rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], d["shape"]))
+
+    print(f"| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+          f"bound | MODEL/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        print(f"| {d['arch']} | {d['shape']} | {fmt(d['t_compute'])} | "
+              f"{fmt(d['t_memory'])} | {fmt(d['t_collective'])} | "
+              f"{d['bottleneck']} | {fmt(d['flops_ratio'])} | "
+              f"{fmt(d['roofline_fraction'])} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,265 @@
+"""Per-cell input specs + shardings for the dry-run and launchers.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that cell (weak-type-correct, shardable, no device
+allocation); ``build_cell`` packages the jit-able step fn with its arg
+shapes and in/out shardings for ``jax.jit(...).lower(...)``.
+
+Shape semantics (assignment):
+  * train_*    -> train_step(state, batch)
+  * prefill_*  -> serve prefill(params, batch)
+  * decode_* / long_* -> serve decode_step(params, tokens, cache) with a
+    KV/state cache of the shape's seq_len (one new token).
+
+Enc-dec (seamless-m4t): encoder length = seq_len (audio-frame stub),
+decoder length = seq_len for train/prefill; decode uses a seq_len decoder
+cache with a seq_len//8 encoder memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models.model import Model
+from repro.models.sharding import (batch_axes, params_pspec_tree, shard_if,
+                                   use_mesh)
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import make_train_step, TrainState
+from repro.optim.adamw import adamw_init
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ------------------------------------------------------------- input specs
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    cfg = configs.get_config(arch)
+    sh = configs.SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    specs: dict[str, Any] = {}
+    if sh.kind in ("train", "prefill"):
+        if cfg.embed_inputs:
+            specs["tokens"] = SDS((B, S), jnp.int32)
+        else:
+            specs["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        if cfg.n_enc_layers:
+            specs["enc_embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        if sh.kind == "train":
+            specs["labels"] = SDS((B, S), jnp.int32)
+    else:  # decode: one new token against a seq_len cache
+        specs["tokens"] = SDS((B, 1), jnp.int32)
+    return specs
+
+
+# --------------------------------------------------------------- shardings
+
+def _batch_sharding(mesh: Mesh, tree):
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        total = 1
+        for a in ba:
+            total *= mesh.shape[a]
+        if leaf.shape and leaf.shape[0] % total == 0 and total > 1:
+            spec[0] = ba
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, tree)
+
+
+def _cache_pspec(mesh: Mesh, path: str, shape) -> P:
+    """Sharding rules for decode caches (DESIGN.md §5): batch over the DP
+    axes; KV heads (or head_dim when kv doesn't divide) / recurrent
+    channels over ``model``.
+
+    Specs are TRAILING-anchored: stacked stage caches carry a leading
+    n_reps axis (scan xs), so the batch dim is at -4/-3/-2 depending on
+    the leaf — anchoring from the right places every axis correctly for
+    both the stacked and the remainder-layer cache leaves. (Getting this
+    wrong replicates the cache over 'data' and makes GSPMD all-gather
+    the whole KV cache every step — §Perf iteration 2.)"""
+    ba = batch_axes(mesh)
+    name = path.rsplit("/", 1)[-1]
+    nd = len(shape)
+
+    def t(*spec):
+        """Right-anchor ``spec``; drop batch axes that don't divide."""
+        full = [None] * (nd - len(spec)) + list(spec)
+        fixed = []
+        for d, s in zip(shape, full):
+            if s == "batch":
+                total = 1
+                for a in ba:
+                    total *= mesh.shape[a]
+                fixed.append(ba if total > 1 and d % total == 0 else None)
+            else:
+                fixed.append(s)
+        return P(*fixed)
+
+    if (name in ("k", "v") or (name in ("0", "1") and "cross" in path)) \
+            and nd >= 4:
+        # (..., B, Sc, K, hd): prefer K over model, fall back to hd
+        if shard_if(mesh, shape[-2], "model"):
+            return t("batch", None, "model", None)
+        return t("batch", None, None, "model")
+    if name in ("k_scale", "v_scale") and nd >= 3:  # (..., B, Sc, K)
+        if shard_if(mesh, shape[-1], "model"):
+            return t("batch", None, "model")
+        return t("batch", None, None)
+    if name == "conv" and nd >= 3:                 # (..., B, W-1, C)
+        return t("batch", None, "model")
+    if name == "state":
+        if nd >= 4:                                # ssd (..., B, H, P, N)
+            return t("batch", "model", None, None)
+        if nd >= 2:                                # rglru (..., B, W)
+            return t("batch", "model")
+    return P(*([None] * nd))
+
+
+def _fix_divis(mesh: Mesh, spec: P, shape) -> P:
+    fixed = []
+    for d, s in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if s is None:
+            fixed.append(None)
+            continue
+        names = (s,) if isinstance(s, str) else tuple(s)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        total = 1
+        for n in names:
+            total *= mesh.shape[n]
+        fixed.append(names if names and d % total == 0 else None)
+    return P(*fixed)
+
+
+def cache_sharding(mesh: Mesh, cache_shapes):
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        spec = _cache_pspec(mesh, path, leaf.shape)
+        return NamedSharding(mesh, _fix_divis(mesh, spec, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def param_sharding(mesh: Mesh, shapes_tree):
+    pspecs = params_pspec_tree(mesh, shapes_tree)
+    return jax.tree.map(lambda sp, sh: NamedSharding(
+        mesh, _fix_divis(mesh, sp, sh.shape)), pspecs, shapes_tree)
+
+
+# -------------------------------------------------------------- cell build
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable                 # jit-able step
+    args: tuple                  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    model_flops: float           # 6*N*D analytic for §Roofline
+
+
+def _logits_sharding(mesh, cfg, B):
+    ba = batch_axes(mesh)
+    total = 1
+    for a in ba:
+        total *= mesh.shape[a]
+    spec = [ba if B % total == 0 and total > 1 else None, None,
+            "model" if shard_if(mesh, cfg.padded_vocab, "model") else None]
+    return NamedSharding(mesh, P(*spec))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               opt_cfg: Optional[AdamWConfig] = None,
+               kv_dtype=jnp.bfloat16) -> Cell:
+    cfg = configs.get_config(arch)
+    sh = configs.SHAPES[shape_name]
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    B, S = sh.global_batch, sh.seq_len
+    specs = input_specs(arch, shape_name)
+    params_shapes = jax.eval_shape(model.init, key)
+    p_shard = param_sharding(mesh, params_shapes)
+    # layout choice (DESIGN.md §5): cfg.layout applies to train cells
+    # (serving keeps TP — small per-step batches don't amortize weight
+    # gathers); the global batch must divide the full device count.
+    layout = "tp"
+    if (sh.kind == "train" and cfg.layout == "fsdp"
+            and B % mesh.size == 0):
+        layout = cfg.layout
+
+    if sh.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        step = make_train_step(model, opt_cfg)
+        state_shapes = jax.eval_shape(
+            lambda k: TrainState(params=model.init(k),
+                                 opt=adamw_init(model.init(k))).tree(), key)
+        s_shard = {
+            "params": p_shard,
+            "opt": {"m": p_shard, "v": p_shard,
+                    "step": NamedSharding(mesh, P())},
+        }
+        with use_mesh(mesh, layout):
+            b_shard = _batch_sharding(mesh, specs)
+
+        def fn(state, batch):
+            with use_mesh(mesh, layout):
+                return step(state, batch)
+
+        # tokens processed per step = decoder tokens (+ encoder frames)
+        D_tok = B * S * (2 if cfg.n_enc_layers else 1)
+        # train = fwd + bwd ~ 3x forward -> 6*N*D covers it by convention
+        mf = 6.0 * cfg.n_active_params() * B * S * \
+            (2 if cfg.n_enc_layers else 1)
+        return Cell(arch, shape_name, "train", fn,
+                    (state_shapes, specs), (s_shard, b_shard),
+                    (s_shard, None), mf)
+
+    if sh.kind == "prefill":
+        cache_len = S
+
+        def fn(params, batch):
+            with use_mesh(mesh):
+                return model.prefill(params, batch, cache_len=cache_len)
+
+        cache_shapes = jax.eval_shape(
+            functools.partial(fn), params_shapes, specs)[1]
+        c_shard = cache_sharding(mesh, cache_shapes)
+        b_shard = _batch_sharding(mesh, specs)
+        mf = 2.0 * cfg.n_active_params() * B * S * \
+            (2 if cfg.n_enc_layers else 1)
+        return Cell(arch, shape_name, "prefill", fn,
+                    (params_shapes, specs), (p_shard, b_shard),
+                    (_logits_sharding(mesh, cfg, B), c_shard), mf)
+
+    # decode: one token, cache of seq_len
+    enc_len = S // 8 if cfg.n_enc_layers else 0
+
+    def mk_cache():
+        return model.init_cache(B, S, enc_len=enc_len,
+                                cache_dtype=kv_dtype)
+
+    cache_shapes = jax.eval_shape(mk_cache)
+    c_shard = cache_sharding(mesh, cache_shapes)
+    tok = specs["tokens"]
+    t_shard = _batch_sharding(mesh, {"tokens": tok})["tokens"]
+
+    def fn(params, tokens, cache):
+        with use_mesh(mesh):
+            return model.decode_step(params, tokens, cache)
+
+    mf = 2.0 * cfg.n_active_params() * B * 1
+    return Cell(arch, shape_name, "decode", fn,
+                (params_shapes, tok, cache_shapes),
+                (p_shard, t_shard, c_shard),
+                (_logits_sharding(mesh, cfg, B), c_shard), mf)

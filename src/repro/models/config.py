@@ -1,0 +1,117 @@
+"""Model configuration dataclass shared by all 10 assigned architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | encdec | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    # --- attention options ---
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_local: float = 0.0    # 0 -> use rope_theta for local layers
+    local_window: int = 4096         # sliding-window size for local layers
+    layer_pattern: Optional[Tuple[str, ...]] = None  # e.g. ("L",)*5+("G",)
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0             # per-expert hidden (0 -> d_ff)
+    moe_capacity_factor: float = 1.25
+    moe_tokens_per_group: int = 4096
+    moe_impl: str = "einsum"         # "einsum" (GShard one-hot) | "sort"
+    # --- enc-dec ---
+    n_enc_layers: int = 0            # 0 -> decoder-only
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+    conv_width: int = 4
+    # --- RG-LRU (recurrentgemma) ---
+    lru_width: int = 0               # 0 -> d_model
+    # --- embedding / stubs ---
+    embed_inputs: bool = True        # False: frontend stub feeds embeddings
+    vocab_pad_to: int = 128          # pad vocab for clean TP sharding
+    tie_embeddings: bool = False
+    # --- parallelism layout (DESIGN.md §5, EXPERIMENTS.md §Perf iter 5) ---
+    layout: str = "tp"               # "tp" | "fsdp" (train cells)
+    # --- numerics ---
+    dtype: str = "bfloat16"          # activation/compute dtype
+    norm_eps: float = 1e-6
+    # --- scan grouping for pattern archs ---
+    remat: bool = True
+
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return (self.vocab_size + p - 1) // p * p
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        """Per-layer kind: 'G' global attn, 'L' local attn, 'R' recurrent,
+        'S' SSD. Length == n_layers."""
+        if self.layer_pattern is None:
+            kind = {"ssm": "S"}.get(self.family, "G")
+            return (kind,) * self.n_layers
+        reps = (self.n_layers + len(self.layer_pattern) - 1) // len(self.layer_pattern)
+        return (self.layer_pattern * reps)[: self.n_layers]
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings included)."""
+        d, f, v = self.d_model, self.d_ff, self.padded_vocab
+        hd = self.head_dim_
+        qo = d * self.n_heads * hd * 2
+        kv = d * self.n_kv_heads * hd * 2
+        per = {"G": qo + kv + 3 * d * f, "L": qo + kv + 3 * d * f}
+        # ssm block
+        d_in = self.ssm_expand * d
+        nh = max(1, d_in // self.ssm_headdim)
+        per["S"] = d * (2 * d_in + 2 * self.ssm_state + nh) + d_in * d
+        lw = self.lru_width or d
+        per["R"] = 2 * d * lw + lw * d + 2 * lw + 3 * d * f
+        total = 0
+        for kind in self.pattern:
+            if kind in ("G", "L") and self.n_experts:
+                e_ff = self.expert_d_ff or f
+                moe = 3 * d * e_ff * self.n_experts
+                moe += 3 * d * e_ff * self.n_shared_experts + d * self.n_experts
+                total += qo + kv + moe
+            else:
+                total += per[kind]
+        total += v * d * (1 if self.tie_embeddings else 2)
+        if self.n_enc_layers:
+            total += self.n_enc_layers * (qo + kv + 3 * d * f)
+            total += self.n_layers * (qo + kv)  # cross-attention
+        return total
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.n_experts:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        e_ff = self.expert_d_ff or f
+        hd = self.head_dim_
+        qo = d * self.n_heads * hd * 2
+        kv = d * self.n_kv_heads * hd * 2
+        per = qo + kv + 3 * d * e_ff * (self.top_k + self.n_shared_experts)
+        total = self.n_layers * per + self.padded_vocab * d * 2
+        return total

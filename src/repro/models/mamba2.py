@@ -1,0 +1,188 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Train/prefill use the chunked SSD algorithm (quadratic within a chunk,
+linear across chunks); decode carries the (B, H, hd, N) SSM state —
+O(1) per token, which is what makes the ``long_500k`` assigned shape
+runnable for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rms_norm
+from repro.models.sharding import constrain
+
+
+def ssd_init(key, cfg, dtype=jnp.float32) -> dict:
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    nh = d_in // cfg.ssm_headdim
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z (d_in), x (d_in), B (N), C (N), dt (nh)]
+    d_proj = 2 * d_in + 2 * N + nh
+    return {
+        "in_proj": dense_init(ks[0], (D, d_proj), 0, dtype),
+        "conv": dense_init(ks[1], (cfg.conv_width, d_in + 2 * N), 0, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[3], (d_in, D), 0, dtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., L) -> (..., L, L) lower-triangular cumulative sums:
+    out[..., i, j] = sum_{k=j+1..i} x[..., k] (NEG_INF above diagonal)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P)   inputs per head
+    dt: (B, S, H)      softplus'd step sizes
+    A:  (H,)           negative decay rates (A < 0)
+    Bm, Cm: (B, S, N)  shared across heads (n_groups = 1)
+    returns (y (B, S, H, P), final_state (B, H, P, N))
+    """
+    B_, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    c = chunk
+
+    xc = xh.reshape(B_, nc, c, H, P)
+    dtc = dt.reshape(B_, nc, c, H)
+    Bc = Bm.reshape(B_, nc, c, N)
+    Cc = Cm.reshape(B_, nc, c, N)
+
+    dA = dtc * A[None, None, None, :]                   # (B, nc, c, H)
+    dAcs = jnp.cumsum(dA, axis=2)
+
+    # 1) within-chunk (quadratic) term
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))      # (B, nc, H, c, c)
+    scores = jnp.einsum("bzln,bzsn->bzls", Cc, Bc)      # (B, nc, c, c)
+    M = scores[:, :, None] * L                          # (B, nc, H, c, c)
+    y_diag = jnp.einsum("bzhls,bzsh,bzshp->bzlhp", M, dtc, xc)
+
+    # 2) chunk summaries: state contributed by each chunk
+    decay_to_end = jnp.exp(dAcs[:, :, -1:, :] - dAcs)   # (B, nc, c, H)
+    states = jnp.einsum("bzsn,bzsh,bzsh,bzshp->bzhpn",
+                        Bc, decay_to_end, dtc, xc)      # (B, nc, H, P, N)
+
+    # 3) inter-chunk recurrence over chunk summaries
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))          # (B, nc, H)
+
+    def scan_fn(h0, xs):
+        st, dec = xs                                    # (B,H,P,N),(B,H)
+        h1 = h0 * dec[..., None, None] + st
+        return h1, h0                                   # emit state BEFORE chunk
+
+    h_init = (jnp.zeros((B_, H, P, N), xh.dtype) if init_state is None
+              else init_state)
+    final, prev_states = lax.scan(
+        scan_fn, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    # 4) state -> output within each chunk
+    decay_from_start = jnp.exp(dAcs)                    # (B, nc, c, H)
+    y_off = jnp.einsum("bzln,bzlh,bzhpn->bzlhp",
+                       Cc, decay_from_start, prev_states)
+
+    y = (y_diag + y_off).reshape(B_, S, H, P)
+    return y, final
+
+
+def ssd_block(params: dict, x: jax.Array, cfg, *,
+              cache: dict | None = None, collect_state: bool = False):
+    """x: (B, S, D). cache (decode): {"conv": (B, W-1, d_conv),
+    "state": (B, H, P, N)}. collect_state (prefill): run cache-free but
+    return the final SSM + conv state as a fresh decode cache.
+    Returns (out, new_cache_or_None)."""
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    P = cfg.ssm_headdim
+    H = d_in // P
+    W = cfg.conv_width
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    xbc = constrain(xbc, ("pod", "data"), None, "model")
+
+    # causal depthwise conv over (x, B, C)
+    new_cache = None
+    new_conv = None
+    if cache is None:
+        padded = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+        conv = sum(padded[:, i:i + xbc.shape[1]] * params["conv"][i]
+                   for i in range(W))
+        if collect_state:
+            new_conv = padded[:, -(W - 1):]
+    else:
+        hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, W-1+S, ·)
+        conv = sum(hist[:, i:i + xbc.shape[1]] * params["conv"][i]
+                   for i in range(W))
+        new_conv = hist[:, -(W - 1):]
+    conv = jax.nn.silu(conv)
+    xh, Bm, Cm = jnp.split(conv, [d_in, d_in + N], axis=-1)
+    xh = xh.reshape(*xh.shape[:2], H, P)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])               # (B, S, H)
+    A = -jnp.exp(params["A_log"])                           # (H,)
+
+    if cache is None:
+        S = x.shape[1]
+        chunk = min(cfg.ssm_chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            # pad with dt = 0 steps: decay exp(0) = 1 and contribution
+            # dt*B*x = 0, so padding never perturbs the state
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, final = _ssd_chunked(xh.astype(jnp.float32), dt, A,
+                                Bm.astype(jnp.float32),
+                                Cm.astype(jnp.float32), chunk)
+        if pad:
+            y = y[:, :S]
+            xh = xh[:, :S]
+        if collect_state:
+            new_cache = {"conv": new_conv, "state": final}
+    else:
+        # single-token recurrence: h = h*exp(dt*A) + dt * B x
+        dA = jnp.exp(dt[:, 0] * A[None, :])                 # (B, H)
+        h0 = cache["state"]
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0].astype(jnp.float32),
+                         dt[:, 0], xh[:, 0].astype(jnp.float32))
+        final = h0 * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32),
+                       final)[:, None]                      # (B, 1, H, P)
+        new_cache = {"conv": new_conv, "state": final}
+
+    y = y + xh.astype(jnp.float32) * params["D_skip"][None, None, :, None]
+    y = y.reshape(*y.shape[:2], d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return constrain(out, ("pod", "data"), None, None), new_cache
+
+
+def ssd_cache_init(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_headdim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * N), dtype),
+        "state": jnp.zeros((batch, H, cfg.ssm_headdim, N), jnp.float32),
+    }

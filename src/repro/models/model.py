@@ -1,0 +1,186 @@
+"""Unified Model facade: init / train_loss / prefill / decode_step.
+
+One class drives all 10 assigned architectures (DESIGN.md §3):
+
+* decoder-only LMs (dense / MoE / SSM / hybrid) — ``batch["tokens"]``;
+* frontend-stub archs (pixtral [vlm]) — ``batch["embeds"]`` carries the
+  precomputed patch/text embeddings at train/prefill; decode consumes
+  token ids through the embedding table;
+* encoder–decoder (seamless-m4t [audio]) — ``batch["enc_embeds"]`` is the
+  audio-frontend stub output; the decoder runs on ``batch["tokens"]``
+  with cross-attention; prefill pre-projects per-layer cross (k, v).
+
+Parameters are stored fp32 (optimizer master copy); every forward casts
+them to ``cfg.dtype`` (bf16) — modules upcast internally where numerics
+demand it (norms, rope, recurrences, router).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain
+
+
+def cast_params(params, dtype):
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if p.dtype == jnp.float32 else p, params)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p = {
+            "embed": L.embed_init(ks[0], (cfg.padded_vocab, cfg.d_model)),
+            "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+            "decoder": T.stack_init(ks[1], cfg,
+                                    cross=bool(cfg.n_enc_layers)),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = L.dense_init(
+                ks[2], (cfg.d_model, cfg.padded_vocab), 0)
+        if cfg.n_enc_layers:
+            p["encoder"] = T.stack_init(ks[3], cfg,
+                                        n_layers=cfg.n_enc_layers,
+                                        unit=("E",))
+            p["ln_enc"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        return p
+
+    # ----------------------------------------------------------- pieces
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        return constrain(x, ("pod", "data"), None, None)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["head"])
+        # ZeRO-3 at-use gather of the head's FSDP axis (D is contracted;
+        # see sharding.gather_for_use) — keeps vocab TP, drops 'data'
+        head = constrain(head, None, "model")
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+        return constrain(logits, ("pod", "data"), None, "model")
+
+    def _encode(self, params, enc_embeds):
+        cfg = self.cfg
+        Se = enc_embeds.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(Se), enc_embeds.shape[:2])
+        h, _, _ = T.stack_apply(params["encoder"], enc_embeds, cfg, pos,
+                                n_layers=cfg.n_enc_layers, unit=("E",),
+                                mode="train")
+        return L.rms_norm(h, params["ln_enc"], cfg.norm_eps)
+
+    def _dec_inputs(self, params, batch):
+        """Decoder-side input activations (B, S, D) + positions."""
+        if "embeds" in batch:                      # frontend stub (pixtral)
+            x = batch["embeds"]
+        else:
+            x = self._embed(params, batch["tokens"])
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        return x, positions
+
+    # ------------------------------------------------------------ train
+    def train_loss(self, params, batch):
+        """batch: tokens/embeds (+ enc_embeds) + labels (+ mask).
+        Returns (loss, metrics dict)."""
+        cfg = self.cfg
+        params = cast_params(params, jnp.dtype(cfg.dtype))
+        enc = enc_pos = None
+        if cfg.n_enc_layers:
+            enc = self._encode(params, batch["enc_embeds"].astype(cfg.dtype))
+            enc_pos = jnp.arange(enc.shape[1])
+        x, positions = self._dec_inputs(params, batch)
+        x = x.astype(cfg.dtype)
+        h, aux, _ = T.stack_apply(params["decoder"], x, cfg, positions,
+                                  enc=enc, enc_pos=enc_pos, mode="train")
+        logits = self._logits(params, h)
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        # padded vocab tail never appears in labels; CE over Vp is fine
+        ce = L.cross_entropy(logits, labels, mask)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------ serve
+    def prefill(self, params, batch, *, cache_len: int,
+                cache_dtype=jnp.bfloat16):
+        """Run the prompt, return (last-token logits, decode cache).
+
+        The cache pytree bundles per-layer KV/state buffers plus (enc-dec)
+        the pre-projected cross (k, v) — everything decode_step needs.
+        """
+        cfg = self.cfg
+        params = cast_params(params, jnp.dtype(cfg.dtype))
+        cross_kv = None
+        enc = enc_pos = None
+        if cfg.n_enc_layers:
+            enc = self._encode(params, batch["enc_embeds"].astype(cfg.dtype))
+            enc_pos = jnp.arange(enc.shape[1])
+            cross_kv = T.stack_cross_kv(params["decoder"], cfg, enc)
+        x, positions = self._dec_inputs(params, batch)
+        x = x.astype(cfg.dtype)
+        h, _, states = T.stack_apply(params["decoder"], x, cfg, positions,
+                                     enc=enc, enc_pos=enc_pos,
+                                     cross_kv=None, mode="prefill")
+        layer_cache = T.states_to_cache(states, cfg, positions, cache_len,
+                                        dtype=cache_dtype)
+        logits = self._logits(params, h[:, -1:])
+        cache = {"layers": layer_cache, "cross": cross_kv,
+                 "next_pos": positions[0, -1] + 1}
+        return logits, cache
+
+    def init_cache(self, batch_size: int, cache_len: int,
+                   enc_len: int = 0, cache_dtype=jnp.bfloat16) -> dict:
+        """Empty decode cache (for dry-run input specs / cold decode)."""
+        cfg = self.cfg
+        layer_cache = T.stack_cache_init(cfg, batch_size, cache_len,
+                                         dtype=cache_dtype)
+        cross = None
+        if cfg.n_enc_layers:
+            unit, n_reps, rem = T.split_pattern(cfg)
+            K, hd = cfg.n_kv_heads, cfg.head_dim_
+            kv = lambda: (jnp.zeros((batch_size, enc_len, K, hd),
+                                    cache_dtype),
+                          jnp.zeros((batch_size, enc_len, K, hd),
+                                    cache_dtype))
+            stages = None
+            if n_reps:
+                stages = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (n_reps,) + a.shape).copy(),
+                    tuple(kv() for _ in unit))
+            cross = {"stages": stages,
+                     "rem": tuple(kv() for _ in rem)}
+        return {"layers": layer_cache, "cross": cross,
+                "next_pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(self, params, tokens, cache):
+        """One decode step. tokens: (B, 1) int32. Returns (logits, cache)."""
+        cfg = self.cfg
+        params = cast_params(params, jnp.dtype(cfg.dtype))
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(cache["next_pos"], (B, 1))
+        x = self._embed(params, tokens).astype(cfg.dtype)
+        h, _, new_layers = T.stack_apply(
+            params["decoder"], x, cfg, positions,
+            cross_kv=cache["cross"], cache=cache["layers"], mode="decode")
+        logits = self._logits(params, h)
+        new_cache = {"layers": new_layers, "cross": cache["cross"],
+                     "next_pos": cache["next_pos"] + 1}
+        return logits, new_cache

@@ -1,0 +1,193 @@
+"""Mixture-of-Experts feed-forward: token-choice top-k router with
+GShard-style capacity dispatch (one-hot einsum — lowers cleanly under pjit,
+EP-shardable), plus always-on shared experts (qwen2-moe).
+
+Expert placement rule (DESIGN.md §5): experts go on the ``model`` axis when
+``E % mesh[model] == 0`` (true EP, e.g. llama4-scout 16e on model=16);
+otherwise experts keep TP inside each expert's FFN (qwen2-moe 60e).
+The partition specs in configs/registry.py encode this choice; the math
+here is placement-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.sharding import constrain
+
+
+def moe_init(key, d_model: int, n_experts: int, expert_d_ff: int,
+             n_shared: int = 0, shared_d_ff: int = 0,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    E, F = n_experts, expert_d_ff
+    p = {
+        "router": dense_init(ks[0], (d_model, E), 0, jnp.float32),
+        "wi": dense_init(ks[1], (E, d_model, F), 1, dtype),
+        "wg": dense_init(ks[2], (E, d_model, F), 1, dtype),
+        "wo": dense_init(ks[3], (E, F, d_model), 1, dtype),
+    }
+    if n_shared:
+        sf = (shared_d_ff or F) * n_shared
+        sks = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi": dense_init(sks[0], (d_model, sf), 0, dtype),
+            "wg": dense_init(sks[1], (d_model, sf), 0, dtype),
+            "wo": dense_init(sks[2], (sf, d_model), 0, dtype),
+        }
+    return p
+
+
+def moe_ffn(params: dict, x: jax.Array, *, top_k: int,
+            capacity_factor: float = 1.25,
+            tokens_per_group: int = 4096,
+            router_z_weight: float = 1e-3,
+            impl: str = "einsum") -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    GShard **grouped** dispatch: tokens are split into G groups of Tg
+    tokens and the expert capacity is per-group (C = k*Tg*cf/E), so the
+    one-hot dispatch/combine tensors are (G, Tg, E, C) ~ O(T * E * C_g)
+    with C_g independent of global T — without grouping a 1M-token 32k
+    prefill would materialize a multi-TB (T, E, C) tensor. Groups are
+    contiguous in the (B-major) token order, so they stay local to the
+    batch-sharded devices.
+
+    aux_loss = load-balancing loss (Switch) + router z-loss. Dropped
+    tokens (over capacity) pass through with zero expert output (the
+    residual connection preserves them); capacity_factor >= E disables
+    dropping entirely (used by serving consistency tests).
+    """
+    B, S, D = x.shape
+    E = params["router"].shape[-1]
+    T = B * S
+    Tg = min(tokens_per_group, T)
+    while T % Tg:
+        Tg -= 1                      # largest divisor <= tokens_per_group
+    G = T // Tg
+    xt = x.reshape(G, Tg, D)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        params["router"])                     # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)         # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    cap = int(min(max(top_k * Tg * capacity_factor / E, 1), Tg * top_k))
+
+    if impl == "sort":
+        out = _dispatch_sorted(params, xt, gate_vals, gate_idx, E, cap)
+    else:
+        out = _dispatch_einsum(params, xt, gate_vals, gate_idx, E, cap)
+    out = out.reshape(B, S, D)
+
+    if "shared" in params:
+        sp = params["shared"]
+        hs = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sp["wg"]))
+        hs = hs * jnp.einsum("bsd,df->bsf", x, sp["wi"])
+        out = out + jnp.einsum("bsf,fd->bsd", hs, sp["wo"])
+
+    # Switch load-balance loss + router z-loss (global means over groups)
+    density = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E,
+                                      dtype=jnp.float32), axis=(0, 1))
+    density_prob = jnp.mean(probs, axis=(0, 1))
+    lb = E * jnp.sum(density * density_prob)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = lb + router_z_weight * z
+    return constrain(out, ("pod", "data"), None, None), aux
+
+
+def _expert_ffn(params: dict, xe: jax.Array) -> jax.Array:
+    """(G, E, C, D) -> (G, E, C, D) through each expert's SwiGLU.
+
+    Groups (batch-major) shard over the DP axes, experts over 'model'
+    (EP when E divides; the constrain falls back otherwise). Naming the
+    DP axes on G explicitly matters: under the fsdp layout the 'model'
+    spec on E is dropped and G picks up the model axis instead."""
+    xe = constrain(xe, ("pod", "data"), "model", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["wg"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["wi"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"])
+    return constrain(ye, ("pod", "data"), "model", None, None)
+
+
+def _dispatch_einsum(params, xt, gate_vals, gate_idx, E: int, cap: int):
+    """Baseline GShard one-hot dispatch/combine (the standard pjit-clean
+    formulation). Cost: the dispatch/combine einsums are O(T*E*C*D) MACs
+    — for small experts this dwarfs the expert FFN itself (measured 140x
+    useful FLOPs on qwen2-moe train_4k; see EXPERIMENTS.md §Perf)."""
+    G, Tg, D = xt.shape
+    top_k = gate_idx.shape[-1]
+    dt = xt.dtype
+    # position of each (token, k) within its expert's per-group queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)     # (G, Tg, k, E)
+    flat = onehot.reshape(G, Tg * top_k, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) * flat - 1            # (G, Tg*k, E)
+    pos = jnp.max(pos_in_e.reshape(G, Tg, top_k, E), axis=-1)  # (G, Tg, k)
+    keep = pos < cap
+
+    # dispatch/combine one-hot tensors (GShard)
+    disp = (jax.nn.one_hot(gate_idx, E, dtype=dt)
+            * keep[..., None].astype(dt))                     # (G, Tg, k, E)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                            dtype=dt)                         # (G, Tg, k, C)
+    disp_tec = jnp.einsum("gtke,gtkc->gtec", disp, pos_oh)    # (G, Tg, E, C)
+    comb_tec = jnp.einsum("gtke,gtkc,gtk->gtec", disp, pos_oh,
+                          gate_vals.astype(dt))
+
+    xe = jnp.einsum("gtd,gtec->gecd", xt, disp_tec)           # (G, E, C, D)
+    ye = _expert_ffn(params, xe)                              # (G, E, C, D)
+    return jnp.einsum("gecd,gtec->gtd", ye, comb_tec)
+
+
+def _dispatch_sorted(params, xt, gate_vals, gate_idx, E: int, cap: int):
+    """Sort-based dispatch (beyond-paper §Perf optimization).
+
+    Replaces the O(T*E*C*D) one-hot dispatch/combine matmuls with an
+    argsort + gather into the (E, C) expert buffers and a scatter-add
+    back — O(T*k*D) data movement, zero dispatch FLOPs. A stable sort
+    keeps tokens in arrival order within each expert, so the capacity
+    drop set is IDENTICAL to the einsum path (tests/test_moe_impls.py).
+    Runs per-group, so under pjit the sort stays local to the batch
+    shard; EP sharding of the (E, C, D) buffer turns the gather/scatter
+    into the expected all-to-all.
+    """
+    G, Tg, D = xt.shape
+    top_k = gate_idx.shape[-1]
+    dt = xt.dtype
+    TK = Tg * top_k
+
+    def disp_group(xg, gv, gi):
+        # xg (Tg, D); gv/gi (Tg, k)
+        e_flat = gi.reshape(TK)                        # expert per entry
+        t_flat = jnp.repeat(jnp.arange(Tg), top_k)     # token per entry
+        g_flat = gv.reshape(TK)
+        order = jnp.argsort(e_flat, stable=True)       # group by expert
+        e_s, t_s, g_s = e_flat[order], t_flat[order], g_flat[order]
+        # position within expert = index - this expert's start offset
+        counts = jnp.bincount(e_flat, length=E)
+        starts = jnp.cumsum(counts) - counts           # (E,)
+        pos = jnp.arange(TK) - starts[e_s]
+        keep = pos < cap
+        slot = jnp.where(keep, e_s * cap + pos, E * cap)   # drop -> scratch
+        # scatter tokens into the (E*C [+1 scratch], D) expert buffers
+        xe = jnp.zeros((E * cap + 1, D), dt).at[slot].set(xg[t_s])
+        return xe[:-1], slot, keep, t_s, g_s
+
+    xe, slot, keep, t_s, g_s = jax.vmap(disp_group)(xt, gate_vals,
+                                                    gate_idx)
+    ye = _expert_ffn(params, xe.reshape(G, E, cap, D))     # sharded EP/TP
+    ye = ye.reshape(G, E * cap, D)
+
+    def comb_group(ye_g, slot, keep, t_s, g_s):
+        # gather each entry's expert output, weight, scatter-add to tokens
+        contrib = jnp.where(
+            keep[:, None],
+            ye_g[jnp.where(keep, slot, 0)] * g_s[:, None].astype(dt),
+            jnp.zeros((TK, D), dt))
+        return jnp.zeros((Tg, D), dt).at[t_s].add(contrib)
+
+    return jax.vmap(comb_group)(ye, slot, keep, t_s, g_s)

@@ -1,0 +1,231 @@
+"""Sharding rules: parameter partition specs + activation constraints.
+
+Conventions (DESIGN.md §5), for the production mesh
+``("pod", "data", "model")`` (or ``("data", "model")`` single-pod):
+
+* ``model``  — tensor parallel: attention heads / FFN hidden / vocab.
+* ``data``   — FSDP: the d_model dimension of every weight is sharded over
+  the data axis (ZeRO-3 style), gathered on use by XLA; gradients
+  reduce-scatter back.  Batch is sharded over ``("pod", "data")``.
+* ``pod``    — pure DP across pods (params replicated pod-wise, gradient
+  all-reduce hierarchical ICI-then-DCI).
+
+Divisibility fallbacks: a tensor dim is sharded on an axis only when
+divisible by the axis size (e.g. GQA kv=8 on model=16 falls back to
+sharding head_dim instead — see ``attn_kv_spec``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+BATCH_AXES = ("pod", "data")   # present subset used at runtime
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_layout() -> str:
+    return getattr(_state, "layout", "tp")
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], layout: str = "tp"):
+    """Enable activation sharding constraints inside model code.
+
+    layout:
+      * "tp"   — Megatron TP over 'model' + FSDP storage over 'data'
+                 (activations all-reduced at row-parallel boundaries).
+      * "fsdp" — ZeRO-3 only: batch shards over ('pod','data','model'),
+                 activations never 'model'-sharded, weights gathered
+                 just-in-time over BOTH axes. For models whose weights
+                 are small next to their activation psums (e.g. a 9B at
+                 1M tokens/step), this trades ~15 s of TP all-reduce for
+                 ~1 s of weight all-gathers (EXPERIMENTS.md §Perf iter 5).
+    """
+    prev = current_mesh()
+    prev_layout = current_layout()
+    _state.mesh = mesh
+    _state.layout = layout
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+        _state.layout = prev_layout
+
+
+def axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    axes = BATCH_AXES
+    if current_layout() == "fsdp":
+        axes = BATCH_AXES + (TP_AXIS,)   # batch over every axis
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def shard_if(mesh: Optional[Mesh], dim: int, axis: str) -> Optional[str]:
+    """Return ``axis`` when ``dim`` divides by its size, else None."""
+    if mesh is None or axis not in mesh.axis_names:
+        return None
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint under the active mesh (no-op without one).
+
+    Axis names not present in the mesh are dropped from the spec, and any
+    dim whose size does not divide the mesh axis falls back to None.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    fsdp = current_layout() == "fsdp"
+    fixed = []
+    for d, s in enumerate(spec):
+        if s is None:
+            fixed.append(None)
+            continue
+        names = (s,) if isinstance(s, str) else tuple(s)
+        if fsdp:
+            # activations: 'model' joins the batch axes; hidden dims
+            # never shard (weights are gathered at use instead)
+            if TP_AXIS in names and len(names) == 1:
+                fixed.append(None)
+                continue
+            if any(n in BATCH_AXES for n in names):
+                names = names + (TP_AXIS,)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        if not names:
+            fixed.append(None)
+            continue
+        total = 1
+        for n in names:
+            total *= mesh.shape[n]
+        fixed.append(names if x.shape[d] % total == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def logical_to_sharding(mesh: Mesh, spec: Sequence[Optional[str]],
+                        shape: Sequence[int]) -> NamedSharding:
+    """Build a NamedSharding from a per-dim axis-name spec with
+    divisibility fallback."""
+    fixed = [shard_if(mesh, d, s) if s else None
+             for d, s in zip(shape, spec)]
+    return NamedSharding(mesh, P(*fixed))
+
+
+# --------------------------------------------------------- parameter specs
+
+def _trailing(shape, *spec):
+    """Left-pad a trailing-dims spec with None (stacked scan params carry a
+    leading n_reps axis that is never sharded)."""
+    return (None,) * (len(shape) - len(spec)) + tuple(spec)
+
+
+def param_partition_spec(mesh: Mesh, path: str, shape) -> P:
+    """FSDP(+TP) partition spec for one parameter (DESIGN.md §5).
+
+    ``path`` is the '/'-joined key path in the param pytree; rules key on
+    the leaf name with the parent module disambiguating collisions
+    (attn/wo vs mlp/wo vs moe/wo). Every rule falls back to replication
+    per-dim when the dim does not divide the mesh axis.
+    """
+    name = path.rsplit("/", 1)[-1]
+    in_attn = "attn" in path          # attn/ or xattn/
+    in_moe = "moe" in path and "shared" not in path
+
+    def ok(d, axis):
+        return axis in mesh.axis_names and d % mesh.shape[axis] == 0
+
+    nd = len(shape)
+    spec: tuple = (None,) * nd
+    if name == "embed":
+        spec = _trailing(shape, "model", "data")
+    elif name == "head":
+        spec = _trailing(shape, "data", "model")
+    elif name == "wq" and in_attn:
+        spec = _trailing(shape, "data", "model", None)
+    elif name in ("wk", "wv") and in_attn:
+        # GQA: kv heads over model when divisible, else shard head_dim
+        spec = (_trailing(shape, "data", "model", None)
+                if ok(shape[-2], "model")
+                else _trailing(shape, "data", None, "model"))
+    elif name == "wo" and in_attn:
+        spec = _trailing(shape, "model", None, "data")
+    elif in_moe and name in ("wi", "wg"):          # (E, D, F)
+        spec = (_trailing(shape, "model", "data", None)
+                if ok(shape[-3], "model")
+                else _trailing(shape, None, "data", "model"))
+    elif in_moe and name == "wo":                  # (E, F, D)
+        spec = (_trailing(shape, "model", None, "data")
+                if ok(shape[-3], "model")
+                else _trailing(shape, None, "model", "data"))
+    elif name == "router":
+        spec = _trailing(shape, "data", None)
+    elif name in ("wi", "wg", "wx", "wy", "in_proj"):
+        spec = _trailing(shape, "data", "model")
+    elif name in ("wo", "out", "out_proj"):        # (F|W, D)
+        spec = _trailing(shape, "model", "data")
+    elif name in ("w_r", "w_i"):
+        spec = _trailing(shape, None, "model")
+    elif name == "conv":
+        spec = _trailing(shape, None, "model")
+    # 1-D leaves (norms, biases, A_log, lambda, ...) stay replicated.
+    fixed = tuple(shard_if(mesh, d, s) if s else None
+                  for d, s in zip(shape, spec))
+    return P(*fixed)
+
+
+def gather_for_use(params_subtree):
+    """ZeRO-3 at-use weight gather: re-constrain every weight leaf to its
+    partition spec with the FSDP ('data') axis dropped, TP ('model')
+    kept.
+
+    Why: storage shards the d_model dim of every weight over 'data', but
+    d_model is the CONTRACTING dim of most matmuls — left alone, GSPMD
+    resolves the sharded contraction with an all-reduce of the fp32
+    activation cotangents/outputs (~1 GB per layer per step at 4k x 16
+    local batch) instead of all-gathering the ~30 MB weight shard. This
+    constraint, applied INSIDE the layer scan body, makes the partitioner
+    gather each layer's weights just-in-time and discard them after use —
+    exactly ZeRO-3 — cutting the dense-cell collective term ~30x
+    (EXPERIMENTS.md §Perf iteration 3).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return params_subtree
+    drop = {FSDP_AXIS}
+    if current_layout() == "fsdp":
+        drop.add(TP_AXIS)       # gather over both axes: no TP compute
+
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        spec = param_partition_spec(mesh, path, leaf.shape)
+        spec = P(*(None if s in drop else s for s in spec))
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, params_subtree)
+
+
+def params_pspec_tree(mesh: Mesh, params_shape):
+    """Map a pytree of ShapeDtypeStructs (or arrays) to PartitionSpecs."""
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        return param_partition_spec(mesh, path, leaf.shape)
+    return jax.tree_util.tree_map_with_path(one, params_shape)

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule, clip_by_global_norm)
+from repro.optim.compress import (compress_int8, decompress_int8,
+                                  ef_compress_update)

@@ -1,0 +1,56 @@
+"""Int8 error-feedback gradient compression (beyond-paper, DESIGN.md §5).
+
+At 1000+ node scale the cross-pod (DCI) gradient all-reduce dominates;
+quantizing gradients to int8 with a per-tensor scale cuts those bytes 4x.
+Error feedback (Seide et al. 2014 / EF-SGD) accumulates the quantization
+residual locally and re-injects it next step, which keeps convergence
+unbiased to first order.
+
+Usage (train/step.py wires this in when ``compress_grads=True``):
+    q, scale = compress_int8(g + ef)        # before the pod all-reduce
+    ef       = (g + ef) - decompress_int8(q, scale)
+    g        = decompress_int8(all_reduce(q), scale ...)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """-> (int8 tensor, fp32 per-tensor scale)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ef_compress_update(grads, ef_state):
+    """One error-feedback round over a gradient pytree.
+
+    -> (compressed-then-decompressed grads, new ef_state). The returned
+    grads are exactly what every peer reconstructs after the all-reduce
+    of the int8 payload, so the train step stays bitwise consistent
+    across data-parallel replicas.
+    """
+    def one(g, e):
+        tot = g.astype(jnp.float32) + e
+        q, scale = compress_int8(tot)
+        deq = decompress_int8(q, scale)
+        return deq.astype(g.dtype), tot - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), \
+        tdef.unflatten([o[1] for o in out])
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

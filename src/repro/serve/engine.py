@@ -1,0 +1,72 @@
+"""Serving layer: batched prefill + decode step builders.
+
+``serve_step`` for the assigned ``decode_*`` / ``long_*`` shapes is the
+decode step built here: one new token against a KV/state cache of the
+shape's seq_len. Caches are position-tracked ring buffers (attention) or
+O(1) recurrent states (SSD / RG-LRU), so ``long_500k`` is a (B=1,
+Sc=524288) buffer only for the *local-window* archs' bounded windows —
+the hybrid/SSM families the shape is assigned to.
+
+Batched requests: the driver (launch/serve.py) packs requests into a
+fixed-size batch; finished rows keep decoding into a scratch slot
+(classic static-batch serving) — continuous batching is noted in
+DESIGN.md as the production extension.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    cache_len: int = 4096
+    cache_dtype: str = "bfloat16"
+    temperature: float = 0.0          # 0 = greedy
+
+
+def make_prefill_step(model, serve_cfg: ServeConfig) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(
+            params, batch, cache_len=serve_cfg.cache_len,
+            cache_dtype=jnp.dtype(serve_cfg.cache_dtype))
+    return prefill_step
+
+
+def make_decode_step(model, serve_cfg: ServeConfig) -> Callable:
+    def decode_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        return logits, cache
+    return decode_step
+
+
+def sample(logits: jax.Array, key, temperature: float) -> jax.Array:
+    """logits: (B, 1, V) -> (B, 1) int32."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits[:, 0] / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+
+def generate(model, params, batch, *, steps: int,
+             serve_cfg: Optional[ServeConfig] = None, key=None):
+    """Prefill + greedy/temperature decode for ``steps`` tokens.
+    Returns (B, steps) generated token ids."""
+    serve_cfg = serve_cfg or ServeConfig()
+    key = key if key is not None else jax.random.PRNGKey(0)
+    prefill = jax.jit(make_prefill_step(model, serve_cfg))
+    decode = jax.jit(make_decode_step(model, serve_cfg))
+    logits, cache = prefill(params, batch)
+    tok = sample(logits, key, serve_cfg.temperature)
+    out = [tok]
+    for i in range(steps - 1):
+        key = jax.random.fold_in(key, i)
+        logits, cache = decode(params, tok, cache)
+        tok = sample(logits, key, serve_cfg.temperature)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

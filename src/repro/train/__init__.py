@@ -1,0 +1,3 @@
+from repro.train.step import TrainState, make_train_step, train_state_init
+from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
+                                    latest_step)

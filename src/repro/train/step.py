@@ -1,0 +1,103 @@
+"""Train-step builder: loss+grad, optional microbatch accumulation,
+optional int8 error-feedback gradient compression, AdamW update.
+
+The returned step is a pure (state, batch) -> (state, metrics) function,
+ready for ``jax.jit`` with in/out shardings from
+``repro.models.sharding.params_pspec_tree`` (see launch/dryrun.py and
+launch/train.py). Remat of the repeated layer unit is handled inside the
+model stack (cfg.remat); compute/comm overlap is XLA's latency-hiding
+scheduler's job — the step only has to keep the gradient reduction as a
+single reduce-scatter/all-reduce group, which pjit emits from the
+batch-sharded loss mean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import ef_compress_update, ef_init
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    ef: Any = None          # error-feedback residuals (compression on)
+
+    def tree(self):
+        t = {"params": self.params, "opt": self.opt}
+        if self.ef is not None:
+            t["ef"] = self.ef
+        return t
+
+    @classmethod
+    def from_tree(cls, t):
+        return cls(params=t["params"], opt=t["opt"], ef=t.get("ef"))
+
+
+def train_state_init(model, key, opt_cfg: AdamWConfig,
+                     compress_grads: bool = False) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params),
+                      ef=ef_init(params) if compress_grads else None)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1,
+                    compress_grads: bool = False) -> Callable:
+    """-> step(state_tree, batch) -> (state_tree, metrics).
+
+    microbatches > 1: the global batch is split along axis 0 and gradients
+    are accumulated in fp32 over a ``lax.scan`` (sequential — the
+    activation-memory knob for big models).
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            B = x.shape[0]
+            assert B % microbatches == 0, (B, microbatches)
+            return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+
+        def acc(carry, b):
+            g_acc, l_acc = carry
+            (loss, _), g = grad_fn(params, b)
+            g_acc = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32) / microbatches,
+                g_acc, g)
+            return (g_acc, l_acc + loss / microbatches), None
+
+        (grads, loss), _ = jax.lax.scan(acc, (zero, 0.0), mb)
+        return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}, grads
+
+    def step(state_tree, batch):
+        state = TrainState.from_tree(state_tree)
+        loss, metrics, grads = grads_of(state.params, batch)
+        new_ef = None
+        if compress_grads:
+            grads, new_ef = ef_compress_update(grads, state.ef)
+        new_params, new_opt, om = adamw_update(
+            state.params, grads, state.opt, opt_cfg)
+        out = TrainState(params=new_params, opt=new_opt, ef=new_ef)
+        metrics = dict(metrics, loss=loss, **om)
+        return out.tree(), metrics
+
+    return step

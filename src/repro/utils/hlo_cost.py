@@ -1,0 +1,327 @@
+"""Loop-aware cost analysis over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits a ``while`` body ONCE, so any
+program organized around ``lax.scan`` (our layer stack, flash-attention
+KV loop, SSD chunk scan, microbatch accumulation) is undercounted by the
+loop trip count — for an 80-layer scanned model that's ~2 orders of
+magnitude. The same undercount hits collective bytes for collectives
+inside loops (e.g. the distributed-sDTW ppermute pipeline).
+
+This module re-derives FLOPs / bytes-accessed / per-kind collective bytes
+from ``compiled.as_text()``, scaling every computation by its enclosing
+loops' ``known_trip_count`` backend configs (emitted by XLA for counted
+loops, which all lax.scan/fori_loop produce).
+
+Conventions match HloCostAnalysis: dot = 2 * prod(output) *
+prod(contracted); elementwise = 1 flop/element; transcendental = 1;
+bytes = operand + output bytes per op (fusion internals not re-counted);
+all-reduce collective bytes x2 (ring reduce-scatter + all-gather phases).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+# operand lists never contain parens; attrs (metadata=, backend_config=)
+# can — so match args with [^)]* and leave the rest as attrs.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(([^)]*)\)(.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "power", "and", "or", "xor", "not", "negate", "abs", "sign",
+    "compare", "select", "clamp", "exponential", "exponential-minus-one",
+    "log", "log-plus-one", "tanh", "sqrt", "rsqrt", "cbrt", "logistic",
+    "sine", "cosine", "tan", "atan2", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "remainder", "is-finite", "erf",
+}
+_FREE = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "iota", "after-all", "partition-id", "replica-id", "opt-barrier",
+    "custom-call", "get-dimension-size", "domain",
+}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """Total (elements, bytes) over all tensors in a (possibly tuple)
+    type string."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_KINDS})
+    transcendental: float = 0.0
+
+    def add(self, other: "Cost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        self.transcendental += other.transcendental * scale
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * scale
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+class _Op:
+    __slots__ = ("name", "otype", "opcode", "args", "attrs")
+
+    def __init__(self, name, otype, opcode, args, attrs):
+        self.name, self.otype = name, otype
+        self.opcode, self.args, self.attrs = opcode, args, attrs
+
+
+def _parse(text: str):
+    """-> (computations: name -> [ops], entry_name, shapes: %name -> type)."""
+    comps: Dict[str, list] = {}
+    shapes: Dict[str, str] = {}
+    entry = None
+    cur: Optional[list] = None
+    cur_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur_name = m.group(2)
+                cur = []
+                if m.group(1):
+                    entry = cur_name
+            continue
+        if line.strip() == "}":
+            comps[cur_name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, otype, opcode, args, attrs = m.groups()
+        shapes[name] = otype
+        cur.append(_Op(name, otype, opcode, args, attrs))
+    return comps, entry, shapes
+
+
+def _dot_flops(op: _Op, shapes: Dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(op.otype)
+    m = _LHS_CONTRACT_RE.search(op.attrs)
+    contract = 1
+    if m:
+        # operand refs: first %name in args is lhs
+        refs = re.findall(r"%([\w.\-]+)", op.args)
+        if refs and refs[0] in shapes:
+            sh = _SHAPE_RE.search(shapes[refs[0]])
+            if sh:
+                dims = [int(d) for d in sh.group(2).split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci:
+                        i = int(ci)
+                        if i < len(dims):
+                            contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+# slice-like ops read/write only their slice, not the full operand —
+# counting full operands over-bills loops over slices (a 64-step flash
+# scan would charge 64x the whole KV cache). Matches HloCostAnalysis.
+_SLICE_READS = {"dynamic-slice", "slice", "gather"}
+_SLICE_WRITES = {"dynamic-update-slice", "scatter"}
+
+
+def _op_bytes(op: _Op, shapes: Dict[str, str]) -> float:
+    _, out_b = _shape_elems_bytes(op.otype)
+    if op.opcode in _SLICE_READS:
+        return float(2 * out_b)           # read slice + write result
+    if op.opcode in _SLICE_WRITES:
+        # read + write the updated region only (operand 1 = update)
+        refs = re.findall(r"%([\w.\-]+)", op.args)
+        upd = 0
+        if len(refs) >= 2 and refs[1] in shapes:
+            _, upd = _shape_elems_bytes(shapes[refs[1]])
+        return float(2 * upd)
+    in_b = 0
+    for ref in re.findall(r"%([\w.\-]+)", op.args):
+        if ref in shapes:
+            _, b = _shape_elems_bytes(shapes[ref])
+            in_b += b
+    return float(out_b + in_b)
+
+
+def analyze(text: str) -> Cost:
+    comps, entry, shapes = _parse(text)
+    cache: Dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in cache:
+            return cache[name]
+        cache[name] = Cost()          # cycle guard
+        total = Cost()
+        for op in comps.get(name, ()):
+            oc = op.opcode
+            if oc == "while":
+                trips = 1
+                m = _TRIP_RE.search(op.attrs)
+                if m:
+                    trips = int(m.group(1))
+                cb = _COND_BODY_RE.search(op.attrs)
+                if cb:
+                    total.add(comp_cost(cb.group(1)), trips)   # cond
+                    total.add(comp_cost(cb.group(2)), trips)   # body
+                continue
+            if oc in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "scatter", "sort", "conditional"):
+                m = _CALLS_RE.search(op.attrs)
+                inner = None
+                if m:
+                    inner = comp_cost(m.group(1))
+                if oc == "fusion" and inner is not None:
+                    total.flops += inner.flops
+                    total.transcendental += inner.transcendental
+                    for k, v in inner.coll.items():
+                        total.coll[k] = total.coll.get(k, 0.0) + v
+                    # fusion bytes: only its external operands + output
+                    total.bytes += _op_bytes(op, shapes)
+                    continue
+                if oc == "reduce":
+                    in_elems, _ = _shape_elems_bytes(
+                        shapes.get(re.findall(r"%([\w.\-]+)",
+                                              op.args)[0], ""))
+                    total.flops += in_elems
+                    total.bytes += _op_bytes(op, shapes)
+                    continue
+                if inner is not None:
+                    total.add(inner)
+                total.bytes += _op_bytes(op, shapes)
+                continue
+            # collectives (sync or -start; skip -done, counted at start)
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if oc.endswith("-done"):
+                continue
+            if base in _COLL_KINDS:
+                # operand bytes (the payload actually moved)
+                payload = 0
+                for ref in re.findall(r"%([\w.\-]+)", op.args):
+                    if ref in shapes:
+                        _, b = _shape_elems_bytes(shapes[ref])
+                        payload += b
+                if not payload:
+                    _, payload = _shape_elems_bytes(op.otype)
+                if base == "all-reduce":
+                    payload *= 2
+                total.coll[base] = total.coll.get(base, 0.0) + payload
+                total.bytes += _op_bytes(op, shapes)
+                continue
+            if oc == "dot":
+                total.flops += _dot_flops(op, shapes)
+                total.bytes += _op_bytes(op, shapes)
+                continue
+            if oc == "convolution":
+                # not used by this codebase; approximate as dot-like 0
+                total.bytes += _op_bytes(op, shapes)
+                continue
+            if oc in _ELEMWISE:
+                out_elems, _ = _shape_elems_bytes(op.otype)
+                total.flops += out_elems
+                if oc in ("exponential", "log", "tanh", "logistic", "sqrt",
+                          "rsqrt", "power", "sine", "cosine", "erf"):
+                    total.transcendental += out_elems
+                total.bytes += _op_bytes(op, shapes)
+                continue
+            if oc in _FREE:
+                continue
+            # default: data movement only (copy, transpose, reshape,
+            # broadcast, gather, dynamic-slice, pad, concatenate, ...)
+            total.bytes += _op_bytes(op, shapes)
+        cache[name] = total
+        return total
+
+    if entry is None:
+        return Cost()
+    return comp_cost(entry)
+
+
+def top_collectives(text: str, n: int = 12) -> list[dict]:
+    """The n largest collective ops with their payload bytes, enclosing-
+    loop trip count, and jax op_name metadata — the 'profile' used by the
+    §Perf iteration loop to attribute collective bytes to model code."""
+    comps, entry, shapes = _parse(text)
+    # map computation -> the trip count it executes under (1 level deep
+    # is enough for lax.scan-produced loops)
+    trips: Dict[str, int] = {}
+
+    def mark(name: str, mult: int, depth=0):
+        if depth > 8:
+            return
+        for op in comps.get(name, ()):
+            if op.opcode == "while":
+                t = 1
+                m = _TRIP_RE.search(op.attrs)
+                if m:
+                    t = int(m.group(1))
+                cb = _COND_BODY_RE.search(op.attrs)
+                if cb:
+                    trips[cb.group(2)] = trips.get(cb.group(2), 1) * 0 + \
+                        mult * t
+                    mark(cb.group(2), mult * t, depth + 1)
+            m2 = _CALLS_RE.search(op.attrs)
+            if m2:
+                trips.setdefault(m2.group(1), mult)
+                mark(m2.group(1), mult, depth + 1)
+
+    if entry:
+        trips[entry] = 1
+        mark(entry, 1)
+
+    out = []
+    meta_re = re.compile(r'op_name="([^"]*)"')
+    for cname, ops in comps.items():
+        mult = trips.get(cname, 1)
+        for op in ops:
+            base = (op.opcode[:-6] if op.opcode.endswith("-start")
+                    else op.opcode)
+            if base not in _COLL_KINDS or op.opcode.endswith("-done"):
+                continue
+            payload = 0
+            for ref in re.findall(r"%([\w.\-]+)", op.args):
+                if ref in shapes:
+                    _, b = _shape_elems_bytes(shapes[ref])
+                    payload += b
+            m = meta_re.search(op.attrs)
+            out.append({"kind": base, "bytes": payload * mult,
+                        "bytes_once": payload, "trips": mult,
+                        "op_name": m.group(1) if m else "?",
+                        "shape": op.otype[:60]})
+    out.sort(key=lambda d: -d["bytes"])
+    return out[:n]

@@ -1,0 +1,37 @@
+"""Anti-diagonal engine == scan oracle over a shape grid."""
+import numpy as np
+import pytest
+
+from repro.core.engine import sdtw_engine
+from repro.core.ref import sdtw_ref, sdtw_numpy
+
+
+@pytest.mark.parametrize("b,m,n", [(1, 1, 1), (1, 4, 4), (2, 7, 3),
+                                   (3, 16, 64), (5, 33, 129), (8, 50, 500),
+                                   (2, 100, 100)])
+def test_engine_matches_oracle(rng, b, m, n):
+    q = rng.normal(size=(b, m)).astype(np.float32)
+    r = rng.normal(size=(n,)).astype(np.float32)
+    c0, e0 = sdtw_ref(q, r)
+    c1, e1 = sdtw_engine(q, r)
+    np.testing.assert_allclose(c1, c0, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(e1, e0)
+
+
+def test_engine_per_query_ref(rng):
+    b, m, n = 4, 11, 37
+    q = rng.normal(size=(b, m)).astype(np.float32)
+    r = rng.normal(size=(b, n)).astype(np.float32)
+    c1, e1 = sdtw_engine(q, r)
+    for i in range(b):
+        c, e = sdtw_numpy(q[i], r[i])
+        np.testing.assert_allclose(c1[i], c, rtol=1e-5, atol=1e-5)
+        assert int(e1[i]) == e
+
+
+def test_engine_cost_only(rng):
+    q = rng.normal(size=(2, 8)).astype(np.float32)
+    r = rng.normal(size=(32,)).astype(np.float32)
+    c = sdtw_engine(q, r, return_end=False)
+    c2, _ = sdtw_engine(q, r)
+    np.testing.assert_array_equal(c, c2)

@@ -1,0 +1,41 @@
+"""Pallas normalizer kernel (interpret=True) vs the pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.normalize import normalize_batch
+from repro.kernels import ops
+
+
+@pytest.mark.parametrize("b,l", [(1, 1), (1, 128), (8, 100), (9, 2000),
+                                 (512, 130), (3, 257)])
+def test_matches_oracle(rng, b, l):
+    x = (rng.normal(size=(b, l)) * 7 + 3).astype(np.float32)
+    out = ops.normalize(jnp.asarray(x), interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(normalize_batch(jnp.asarray(x))),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moments(rng):
+    x = (rng.normal(size=(16, 2000)) * 100 - 42).astype(np.float32)
+    out = np.asarray(ops.normalize(jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(out.mean(axis=1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(out.std(axis=1), 1.0, atol=1e-3)
+
+
+def test_constant_series_is_finite():
+    x = jnp.ones((4, 64), jnp.float32) * 5
+    out = np.asarray(ops.normalize(x, interpret=True))
+    assert np.isfinite(out).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(rng, dtype):
+    x = jnp.asarray(rng.normal(size=(8, 256)), dtype)
+    out = ops.normalize(x, interpret=True)
+    assert out.dtype == dtype
+    ref = normalize_batch(x)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,64 @@
+"""Pallas wavefront sDTW kernel (interpret=True) vs the pure-jnp oracle.
+
+Sweeps batch size, query length, reference length, segment width and
+compute dtype per the kernel-validation requirement.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ref import sdtw_ref
+from repro.kernels import ops
+
+
+def _check(q, r, **kw):
+    c0, e0 = sdtw_ref(q, r)
+    c1, e1 = ops.sdtw_wavefront(jnp.asarray(q), jnp.asarray(r),
+                                interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c0),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
+
+
+@pytest.mark.parametrize("m,n", [(4, 64), (16, 128), (33, 200), (64, 1000)])
+@pytest.mark.parametrize("w", [2, 4, 8])
+def test_shapes_and_widths(rng, m, n, w):
+    q = rng.normal(size=(4, m)).astype(np.float32)
+    r = rng.normal(size=(n,)).astype(np.float32)
+    _check(q, r, segment_width=w)
+
+
+@pytest.mark.parametrize("b", [1, 3, 8, 9, 17])
+def test_batch_padding(rng, b):
+    q = rng.normal(size=(b, 12)).astype(np.float32)
+    r = rng.normal(size=(300,)).astype(np.float32)
+    _check(q, r, segment_width=4)
+
+
+def test_multi_ref_block(rng):
+    """Reference spanning several LANES*w blocks exercises the VMEM
+    boundary-strip handoff (the paper's inter-wavefront shared memory)."""
+    q = rng.normal(size=(2, 24)).astype(np.float32)
+    r = rng.normal(size=(128 * 2 * 3 + 37,)).astype(np.float32)  # 3+ blocks, ragged
+    _check(q, r, segment_width=2)
+
+
+def test_bf16_compute(rng):
+    """bf16 mirrors the paper's fp16 __half2 mode; tolerance is loose."""
+    q = rng.normal(size=(2, 16)).astype(np.float32)
+    r = rng.normal(size=(256,)).astype(np.float32)
+    c0, _ = sdtw_ref(q, r)
+    c1, _ = ops.sdtw_wavefront(jnp.asarray(q), jnp.asarray(r),
+                               segment_width=4, compute_dtype=jnp.bfloat16,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c0),
+                               rtol=0.1, atol=0.3)
+
+
+def test_exact_submatch(rng):
+    r = rng.normal(size=(512,)).astype(np.float32)
+    q = np.stack([r[100:140], r[300:340]])
+    c, e = ops.sdtw_wavefront(jnp.asarray(q), jnp.asarray(r),
+                              segment_width=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(c), 0.0, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(e), [139, 339])

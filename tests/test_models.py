@@ -1,0 +1,126 @@
+"""Per-arch smoke tests: reduced same-family config, one forward/train
+step + prefill/decode consistency on CPU; asserts shapes and finiteness.
+
+The FULL assigned configs are exercised only via the dry-run
+(ShapeDtypeStruct, no allocation) — see launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.model import Model
+
+S = 32          # smoke sequence length
+B = 2
+
+
+def make_batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = jax.random.randint(
+            ks[0], (B, S), 0, cfg.vocab_size)
+    else:
+        batch["embeds"] = jax.random.normal(
+            ks[0], (B, S, cfg.d_model), jnp.float32) * 0.02
+    if cfg.n_enc_layers:
+        batch["enc_embeds"] = jax.random.normal(
+            ks[1], (B, S, cfg.d_model), jnp.float32) * 0.02
+    batch["labels"] = jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_and_loss(arch):
+    cfg = configs.get_smoke(arch)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    assert float(metrics["ce"]) > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_grad_step(arch):
+    cfg = configs.get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    g = jax.jit(jax.grad(lambda p: model.train_loss(p, batch)[0]))(params)
+    leaves = jax.tree.leaves(g)
+    assert leaves
+    assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves), arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    """Greedy next-token from (prefill + decode_step) must match the
+    full-forward logits at the same positions.
+
+    MoE archs use no-drop capacity (cf >= E) here: capacity dropping is
+    the one cross-token coupling, so with it disabled the serving path
+    must agree exactly with the batched forward."""
+    import dataclasses
+    cfg = configs.get_smoke(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(
+            cfg, moe_capacity_factor=float(cfg.n_experts))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    # full forward logits over the whole sequence
+    def full_logits(p, b):
+        pc = jax.tree.map(
+            lambda a: a.astype(cfg.dtype) if a.dtype == jnp.float32 else a,
+            p)
+        enc = enc_pos = None
+        from repro.models import transformer as T
+        from repro.models import layers as L
+        if cfg.n_enc_layers:
+            enc = model._encode(pc, b["enc_embeds"].astype(cfg.dtype))
+            enc_pos = jnp.arange(enc.shape[1])
+        x, positions = model._dec_inputs(pc, b)
+        h, _, _ = T.stack_apply(pc["decoder"], x.astype(cfg.dtype), cfg,
+                                positions, enc=enc, enc_pos=enc_pos,
+                                mode="train")
+        return model._logits(pc, h)
+
+    ref = np.asarray(full_logits(params, batch), np.float32)
+
+    # prefill on the first S-1 positions, then decode position S-1
+    pre = {k: (v[:, : S - 1] if v.ndim >= 2 and v.shape[1] == S else v)
+           for k, v in batch.items() if k != "labels"}
+    if cfg.n_enc_layers:
+        pre["enc_embeds"] = batch["enc_embeds"]       # full memory
+    ref_prefix = np.asarray(full_logits(params, pre), np.float32)
+    logits_pre, cache = model.prefill(params, pre, cache_len=S + 4,
+                                      cache_dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre[:, 0], np.float32), ref_prefix[:, S - 2],
+        rtol=2e-2, atol=2e-2)
+
+    if cfg.embed_inputs:
+        tok = batch["tokens"][:, S - 1:]
+        logits_dec, _ = model.decode_step(params, tok, cache)
+        np.testing.assert_allclose(
+            np.asarray(logits_dec[:, 0], np.float32), ref[:, S - 1],
+            rtol=2e-2, atol=2e-2)
+
+
+def test_param_count_sanity():
+    """Full-config analytic param counts are in the right ballpark."""
+    approx = {
+        "qwen2_72b": 72e9, "qwen3_32b": 32e9, "gemma3_27b": 27e9,
+        "pixtral_12b": 12e9, "stablelm_12b": 12e9,
+        "mamba2_130m": 130e6, "recurrentgemma_9b": 9e9,
+    }
+    for arch, expect in approx.items():
+        n = configs.get_config(arch).n_params()
+        assert 0.5 * expect < n < 1.9 * expect, (arch, n, expect)

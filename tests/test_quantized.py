@@ -1,0 +1,50 @@
+"""uint8 codebook sDTW (the paper's §8 future work): accuracy vs fp32."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.api import sdtw_batch
+from repro.core.normalize import normalize_batch
+from repro.core.quantized import (build_codebook, decode, encode,
+                                  sdtw_quantized)
+from repro.data.cbf import make_cylinder_bell_funnel
+
+
+def test_codebook_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    r = normalize_batch(jnp.asarray(
+        make_cylinder_bell_funnel(rng, 1, 4096)[0]))
+    cb = build_codebook(r, 256)
+    err = jnp.abs(decode(encode(r, cb), cb) - r)
+    # 256 equal-mass bins over ~N(0,1): max in-range error ~ bin width
+    assert float(jnp.mean(err)) < 0.02
+    assert float(jnp.max(err)) < 1.0       # tail clamp
+
+
+def test_quantized_costs_track_fp32():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(make_cylinder_bell_funnel(rng, 8, 96))
+    r = jnp.asarray(make_cylinder_bell_funnel(rng, 1, 1024)[0])
+    c32, e32 = sdtw_batch(q, r)
+    c8, e8 = sdtw_quantized(q, r)
+    c32, c8 = np.asarray(c32), np.asarray(c8)
+    rel = np.abs(c8 - c32) / np.maximum(c32, 1e-6)
+    assert np.median(rel) < 0.10, rel
+    assert np.max(rel) < 0.30, rel
+    # ranking of best matches is preserved
+    assert np.argmin(c8) == np.argmin(c32)
+
+
+def test_quantized_exact_match_stays_best():
+    rng = np.random.default_rng(2)
+    q = np.asarray(normalize_batch(jnp.asarray(
+        make_cylinder_bell_funnel(rng, 4, 64))))
+    r = np.array(normalize_batch(jnp.asarray(
+        make_cylinder_bell_funnel(rng, 1, 512)[0])))
+    r[100:164] = q[2]
+    c8, e8 = sdtw_quantized(jnp.asarray(q), jnp.asarray(r),
+                            normalize=False)
+    assert int(np.argmin(np.asarray(c8))) == 2
+    # quantization noise only: planted match cost stays near zero
+    assert float(c8[2]) < 0.05 * 64

@@ -1,0 +1,43 @@
+"""The scan oracle (core.ref.sdtw_ref) against the brute-force numpy DP."""
+import numpy as np
+import pytest
+
+from repro.core.ref import sdtw_numpy, sdtw_ref, dtw_global_numpy
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (1, 7), (5, 5), (8, 3), (17, 53),
+                                 (32, 128), (3, 200)])
+def test_scan_oracle_matches_bruteforce(rng, m, n):
+    B = 3
+    q = rng.normal(size=(B, m)).astype(np.float32)
+    r = rng.normal(size=(n,)).astype(np.float32)
+    costs, ends = sdtw_ref(q, r)
+    for b in range(B):
+        c, e = sdtw_numpy(q[b], r)
+        np.testing.assert_allclose(costs[b], c, rtol=1e-5, atol=1e-5)
+        assert int(ends[b]) == e
+
+
+def test_per_query_reference(rng):
+    B, m, n = 4, 9, 31
+    q = rng.normal(size=(B, m)).astype(np.float32)
+    r = rng.normal(size=(B, n)).astype(np.float32)
+    costs, ends = sdtw_ref(q, r)
+    for b in range(B):
+        c, e = sdtw_numpy(q[b], r[b])
+        np.testing.assert_allclose(costs[b], c, rtol=1e-5, atol=1e-5)
+        assert int(ends[b]) == e
+
+
+def test_exact_submatch_is_zero(rng):
+    r = rng.normal(size=(64,)).astype(np.float32)
+    q = r[20:30]
+    c, e = sdtw_numpy(q, r)
+    assert c == 0.0 and e == 29
+
+
+def test_sdtw_leq_global_dtw(rng):
+    for _ in range(5):
+        q = rng.normal(size=(12,))
+        r = rng.normal(size=(40,))
+        assert sdtw_numpy(q, r)[0] <= dtw_global_numpy(q, r) + 1e-9

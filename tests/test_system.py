@@ -1,0 +1,47 @@
+"""End-to-end behaviour of the public API (the paper's full flow §5):
+normalize reference + batch, run sDTW, compare backends."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sdtw_batch, sdtw_search
+from repro.data.cbf import make_cylinder_bell_funnel
+
+
+def test_backends_agree(rng):
+    q = rng.normal(size=(6, 40)).astype(np.float32) * 3 + 1
+    r = rng.normal(size=(400,)).astype(np.float32) * 2 - 5
+    c_ref, e_ref = sdtw_batch(q, r, backend="ref")
+    c_eng, e_eng = sdtw_batch(q, r, backend="engine")
+    c_k, e_k = sdtw_batch(q, r, backend="kernel", segment_width=2)
+    np.testing.assert_allclose(np.asarray(c_eng), np.asarray(c_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_array_equal(np.asarray(e_eng), np.asarray(e_ref))
+    np.testing.assert_array_equal(np.asarray(e_k), np.asarray(e_ref))
+
+
+def test_planted_pattern_is_found(rng):
+    """Plant a (stretched) copy of the query inside a noise reference; the
+    end index must land at the planted window — the paper's use case."""
+    q = np.asarray(make_cylinder_bell_funnel(rng, 1, 64, kind="bell"))[0]
+    qn = (q - q.mean()) / q.std()   # amplitude-matched to the unit-std ref
+    r = rng.normal(size=(1000,)).astype(np.float32)
+    # time-stretch the (normalized) query ~1.5x and plant it at [500, 596)
+    idx = np.clip((np.arange(96) / 96 * 64).astype(int), 0, 63)
+    r[500:596] = qn[idx] + rng.normal(size=(96,)).astype(np.float32) * 0.02
+    cost, end = sdtw_search(q, r, normalize=True)
+    assert 560 <= int(end) <= 620, int(end)
+    # and the planted match must beat pure-noise alignment by a wide margin
+    cost_noise, _ = sdtw_search(q, r[:400], normalize=True)
+    assert float(cost) < 0.3 * float(cost_noise), (float(cost),
+                                                   float(cost_noise))
+
+
+def test_search_shape():
+    q = jnp.sin(jnp.linspace(0, 6, 50))
+    r = jnp.sin(jnp.linspace(0, 60, 512))
+    c, e = sdtw_search(q, r)
+    assert c.shape == () and e.shape == ()
+    assert float(c) >= 0
