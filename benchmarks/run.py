@@ -23,6 +23,7 @@ def main(argv=None):
 
     from benchmarks import table1_throughput, fig3_segment_width
     from benchmarks import train_step_bench, sdtw_scaling
+    from benchmarks import search_throughput
 
     print("=" * 70)
     table1_throughput.run(full=args.full, kernel=args.kernel, csv=rows)
@@ -32,6 +33,8 @@ def main(argv=None):
     sdtw_scaling.run(csv=rows)
     print("=" * 70)
     train_step_bench.run(csv=rows)
+    print("=" * 70)
+    search_throughput.run(full=args.full, csv=rows)
 
     os.makedirs(args.out, exist_ok=True)
     keys = sorted({k for r in rows for k in r})

@@ -1,0 +1,71 @@
+"""Search-service throughput: queries/sec over a multi-reference CBF
+workload with the pruning cascade on vs off, plus the fraction of full
+DP sweeps the cascade skips (exactness is cross-checked against the
+brute-force loop every run).
+
+  PYTHONPATH=src python -m benchmarks.search_throughput [--full]
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.data.cbf import make_search_dataset
+from repro.search import (ReferenceIndex, SearchConfig, SearchService,
+                          brute_force_topk)
+
+
+def run(*, full: bool = False, csv: list | None = None, k: int = 1):
+    n_refs, n_queries = (24, 128) if full else (12, 48)
+    motifs_per_ref = 32 if full else 16
+    refs, queries, _ = make_search_dataset(
+        seed=0, n_refs=n_refs, motifs_per_ref=motifs_per_ref,
+        n_queries=n_queries, query_motifs=2)
+    index = ReferenceIndex()
+    for name, series in refs.items():
+        index.add(name, series)
+
+    print(f"[search_throughput] {n_refs} refs x {refs['track0'].shape[0]} "
+          f"samples, {n_queries} queries x {len(queries[0])}, k={k}")
+    results = {}
+    for prune in (False, True):
+        svc = SearchService(index, SearchConfig(backend="engine",
+                                                prune=prune, max_slots=128))
+        out = svc.topk(queries, k=k)          # warm-up + compile
+        t0 = time.perf_counter()
+        runs = 3
+        for _ in range(runs):
+            out = svc.topk(queries, k=k)
+        dt = (time.perf_counter() - t0) / runs
+        qps = n_queries / dt
+        st = svc.stats
+        results[prune] = (out, qps, st)
+        print(f"  prune={str(prune):5s}: {qps:8.1f} q/s   "
+              f"skipped {st.skipped}/{st.pairs} sweeps "
+              f"({st.skip_fraction:.0%}; stage0={st.pruned_stage0}, "
+              f"later={st.pruned_later}), {st.dp_calls} dispatches")
+        if csv is not None:
+            csv.append({"bench": "search_throughput", "prune": prune,
+                        "qps": round(qps, 2), "refs": n_refs,
+                        "queries": n_queries, "k": k,
+                        "skip_fraction": round(st.skip_fraction, 4),
+                        "dp_pairs": st.dp_pairs, "pairs": st.pairs})
+
+    exact = results[True][0] == results[False][0] == brute_force_topk(
+        index, queries, k=k, backend="engine")
+    skip = results[True][2].skip_fraction
+    speedup = results[True][1] / results[False][1]
+    print(f"  exact={exact}  skip={skip:.0%}  "
+          f"pruning speedup={speedup:.2f}x")
+    if not exact:
+        raise AssertionError("pruned topk != brute force")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--k", type=int, default=1)
+    args = ap.parse_args()
+    run(full=args.full, k=args.k)

@@ -1,53 +1,57 @@
-"""Subsequence search at framework scale: run the paper's batched sDTW
-through every backend (oracle / engine / Pallas kernel) and — with fake
-devices — the multi-chip distributed engine, verifying they agree.
+"""Top-k subsequence search over multiple references with repro.search.
 
-  PYTHONPATH=src python examples/sdtw_search.py            # single device
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-  PYTHONPATH=src python examples/sdtw_search.py --mesh 2x4
+Registers a handful of CBF "tracks" in a ReferenceIndex, then asks the
+SearchService where each query best aligns — the pruning cascade skips
+most full DP sweeps while returning *exactly* the brute-force answer
+(cross-checked below against a plain sdtw_batch loop on every backend).
+
+  PYTHONPATH=src python examples/sdtw_search.py
+  PYTHONPATH=src python examples/sdtw_search.py --backend kernel
 """
 
 import argparse
 
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from repro.core.api import sdtw_batch
-from repro.core.distributed import make_sdtw_distributed
-from repro.core.normalize import normalize_batch
-from repro.data.cbf import make_cylinder_bell_funnel
+from repro.data.cbf import make_search_dataset
+from repro.search import (ReferenceIndex, SearchConfig, SearchService,
+                          brute_force_topk)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mesh", default=None, help="e.g. 2x4 (needs fake devices)")
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--qlen", type=int, default=64)
-    ap.add_argument("--rlen", type=int, default=1024)
+    ap.add_argument("--backend", default="engine",
+                    choices=["ref", "engine", "kernel"])
+    ap.add_argument("--refs", type=int, default=6)
+    ap.add_argument("--queries", type=int, default=12)
+    ap.add_argument("--k", type=int, default=3)
     args = ap.parse_args()
 
-    rng = np.random.default_rng(1)
-    q = jnp.asarray(make_cylinder_bell_funnel(rng, args.batch, args.qlen))
-    r = jnp.asarray(make_cylinder_bell_funnel(rng, 1, args.rlen)[0])
+    refs, queries, labels = make_search_dataset(
+        seed=7, n_refs=args.refs, n_queries=args.queries)
+    index = ReferenceIndex()
+    for name, series in refs.items():
+        index.add(name, series)
 
-    ref_costs, ref_ends = sdtw_batch(q, r, backend="ref")
-    for backend in ("engine", "kernel"):
-        c, e = sdtw_batch(q, r, backend=backend)
-        np.testing.assert_allclose(np.asarray(c), np.asarray(ref_costs),
-                                   rtol=1e-4, atol=1e-4)
-        print(f"{backend:8s}: max|dcost|="
-              f"{float(jnp.max(jnp.abs(c - ref_costs))):.2e}  OK")
+    service = SearchService(index, SearchConfig(backend=args.backend))
+    best = service.topk(queries, k=1)
+    st = service.stats
+    hits = sum(m[0].reference == labels[i] for i, m in enumerate(best))
+    print(f"searched {len(queries)} queries across {len(index)} references "
+          f"(backend={args.backend}): top-1 hit-rate {hits}/{len(queries)}, "
+          f"pruning skipped {st.skipped}/{st.pairs} sweeps "
+          f"({st.skip_fraction:.0%})")
 
-    if args.mesh:
-        d1, d2 = map(int, args.mesh.split("x"))
-        mesh = jax.make_mesh((d1, d2), ("data", "model"))
-        dist = make_sdtw_distributed(mesh, row_block=args.qlen // 2)
-        with mesh:
-            c, e = dist(normalize_batch(q), normalize_batch(r))
-        np.testing.assert_allclose(np.asarray(c), np.asarray(ref_costs),
-                                   rtol=1e-4, atol=1e-4)
-        print(f"distributed {args.mesh}: agrees with oracle  OK")
+    # full top-k table (note: exact top-k can only prune references that
+    # are provably worse than the k-th best, so large k prunes less)
+    matches = service.topk(queries, k=args.k)
+    for i, ms in enumerate(matches):
+        row = "  ".join(f"{m.reference}@{m.end} ({m.cost:.3f})" for m in ms)
+        mark = "ok" if ms[0].reference == labels[i] else "??"
+        print(f"  q{i:2d} from {labels[i]:8s} [{mark}] -> {row}")
+
+    want = brute_force_topk(index, queries, k=args.k, backend=args.backend)
+    assert matches == want, "service result differs from brute force!"
+    print(f"verified: identical to the brute-force sdtw_batch loop "
+          f"({len(index)} refs x {len(queries)} queries, k={args.k})")
 
 
 if __name__ == "__main__":

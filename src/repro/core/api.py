@@ -31,6 +31,20 @@ def sdtw_batch(queries, reference, *, normalize: bool = True,
     """
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
+    if queries.ndim != 2:
+        raise ValueError(
+            f"queries must be 2-D (batch, length), got shape {queries.shape}")
+    if reference.ndim != 1:
+        raise ValueError(
+            f"reference must be 1-D (length,), got shape {reference.shape}")
+    if queries.shape[0] == 0:
+        raise ValueError("empty query batch (queries.shape[0] == 0)")
+    if queries.shape[1] == 0:
+        raise ValueError("zero-length queries (queries.shape[1] == 0)")
+    if reference.shape[0] == 0:
+        raise ValueError("empty reference (reference.shape[0] == 0)")
+    if segment_width < 1:
+        raise ValueError(f"segment_width must be >= 1, got {segment_width}")
     if normalize:
         queries = normalize_batch(queries)
         reference = normalize_batch(reference)

@@ -47,6 +47,40 @@ def make_cylinder_bell_funnel(rng: np.random.Generator, n_samples: int,
     return out
 
 
+def make_search_dataset(seed: int, n_refs: int = 8, motifs_per_ref: int = 16,
+                        motif_len: int = 128, n_queries: int = 48,
+                        query_motifs: int = 2, noise: float = 0.02):
+    """Multi-reference search workload for ``repro.search``.
+
+    Each reference ("track") is a distinct concatenation of per-motif
+    z-normalized CBF motifs with random kinds, so the motif *sequence*
+    identifies the track. Each query is a motif-aligned crop spanning
+    ``query_motifs`` motifs of one track plus N(0, noise) jitter — the
+    planted-pattern noise level of the system tests.
+
+    Returns (refs, queries, labels): refs is {name: (N,) float32} in
+    registration order, queries a list of (M,) float32, labels the
+    source track name per query.
+    """
+    rng = np.random.default_rng(seed)
+    refs: dict[str, np.ndarray] = {}
+    for ri in range(n_refs):
+        motifs = make_cylinder_bell_funnel(rng, motifs_per_ref, motif_len)
+        mu = motifs.mean(axis=1, keepdims=True)
+        sd = np.maximum(motifs.std(axis=1, keepdims=True), 1e-6)
+        refs[f"track{ri}"] = ((motifs - mu) / sd).reshape(-1)
+    names = list(refs)
+    m = query_motifs * motif_len
+    queries, labels = [], []
+    for qi in range(n_queries):
+        src = names[qi % n_refs]
+        start = int(rng.integers(0, motifs_per_ref - query_motifs + 1))
+        crop = refs[src][start * motif_len:start * motif_len + m]
+        queries.append((crop + rng.normal(size=m) * noise).astype(np.float32))
+        labels.append(src)
+    return refs, queries, labels
+
+
 def make_sdtw_dataset(seed: int, batch: int = 512, query_len: int = 2000,
                       ref_len: int = 100_000) -> tuple[np.ndarray, np.ndarray]:
     """The paper's benchmark input: ``batch`` queries of ``query_len``

@@ -5,6 +5,13 @@ The reference reorder mirrors DTWax's offline reference layout
 optimization (paper §3): element ``r[(b*LANES + l)*w + k]`` lands at
 ``r_layout[b, k, l]`` so that each kernel step reads one fully-coalesced
 (w, LANES) VMEM tile per reference block.
+
+Preparation (padding + swizzle) is split from dispatch so callers that
+align many query batches against the same reference — notably
+``repro.search.ReferenceIndex`` — can pay the layout cost once and feed
+the cached ``(R, w, LANES)`` blocks straight into
+:func:`sdtw_wavefront_prepped`. The one-shot :func:`sdtw_wavefront`
+wrapper goes through the exact same prep + dispatch code path.
 """
 
 from __future__ import annotations
@@ -21,30 +28,81 @@ from repro.kernels.normalizer import normalizer_pallas
 PAD_VALUE = 1.0e6   # padded reference columns: cost >= (q - 1e6)^2 never wins
 
 
-def _ceil_to(x: int, m: int) -> int:
+def ceil_to(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
 def swizzle_reference(r: jnp.ndarray, segment_width: int) -> jnp.ndarray:
     """(N,) -> (R, w, LANES) with [b, k, l] = r[(b*LANES + l)*w + k]."""
     w = segment_width
-    n_pad = _ceil_to(r.shape[0], LANES * w)
+    n_pad = ceil_to(r.shape[0], LANES * w)
     r = jnp.pad(r, (0, n_pad - r.shape[0]), constant_values=PAD_VALUE)
     return r.reshape(-1, LANES, w).transpose(0, 2, 1)
+
+
+def unswizzle_reference(r_layout: jnp.ndarray) -> jnp.ndarray:
+    """(R, w, LANES) -> (R*LANES*w,) inverse of :func:`swizzle_reference`
+    (padded tail included). Used by the packing-invariant tests."""
+    return r_layout.transpose(0, 2, 1).reshape(-1)
 
 
 def prepare_queries(q: jnp.ndarray) -> jnp.ndarray:
     """(B, M) -> (G, SUBLANES, M + 2*(LANES-1)) reversed + padded."""
     B, M = q.shape
-    b_pad = _ceil_to(B, SUBLANES)
+    b_pad = ceil_to(B, SUBLANES)
     q = jnp.pad(q, ((0, b_pad - B), (0, 0)))
     qrev = jnp.flip(q, axis=1)
     qrev = jnp.pad(qrev, ((0, 0), (LANES - 1, LANES - 1)))
     return qrev.reshape(-1, SUBLANES, M + 2 * (LANES - 1))
 
 
-@functools.partial(jax.jit, static_argnames=("segment_width", "interpret",
-                                             "compute_dtype"))
+prepare_queries_jit = jax.jit(prepare_queries)
+
+
+@functools.partial(jax.jit, static_argnames=("segment_width", "compute_dtype"))
+def _prep(queries, reference, *, segment_width, compute_dtype):
+    return (prepare_queries(queries.astype(compute_dtype)),
+            swizzle_reference(reference.astype(compute_dtype), segment_width))
+
+
+@functools.partial(jax.jit, static_argnames=("m", "segment_width",
+                                             "interpret", "compute_dtype"))
+def _dispatch(q_prepped, r_layout, *, m, segment_width, compute_dtype,
+              interpret):
+    costs, ends = sdtw_wavefront_pallas(
+        q_prepped, r_layout, m=m, segment_width=segment_width,
+        compute_dtype=compute_dtype, interpret=interpret)
+    return costs.reshape(-1), ends.reshape(-1)
+
+
+def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
+                           batch: int, m: int, n: int,
+                           segment_width: int = 8,
+                           compute_dtype=jnp.float32,
+                           interpret: bool = True):
+    """Dispatch the wavefront kernel on pre-packed operands.
+
+    q_prepped: (G, SUBLANES, m + 2*(LANES-1)) from :func:`prepare_queries`
+    r_layout:  (R, w, LANES) from :func:`swizzle_reference`
+    batch:     true (un-padded) query count; m: query length; n: true
+               reference length (pre-swizzle-padding).
+    Returns (costs (batch,) f32, end_indices (batch,) i32) with ends
+    clamped to ``n - 1`` so padded reference columns can never leak out
+    as match positions.
+
+    ``batch`` and ``n`` only trim the padded rows and clamp the end
+    indices, OUTSIDE the jit: the compile cache is keyed by the padded
+    operand shapes alone, so a serving batcher emitting the same shape
+    grid with varying real-row counts (or references whose lengths
+    differ but pad to the same layout) reuses one executable.
+    """
+    costs, ends = _dispatch(q_prepped, r_layout, m=m,
+                            segment_width=segment_width,
+                            compute_dtype=compute_dtype,
+                            interpret=interpret)
+    return costs[:batch], jnp.minimum(ends[:batch], n - 1)
+
+
 def sdtw_wavefront(queries: jnp.ndarray, reference: jnp.ndarray, *,
                    segment_width: int = 8,
                    compute_dtype=jnp.float32,
@@ -57,12 +115,12 @@ def sdtw_wavefront(queries: jnp.ndarray, reference: jnp.ndarray, *,
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
     B, M = queries.shape
-    qk = prepare_queries(queries.astype(compute_dtype))
-    rk = swizzle_reference(reference.astype(compute_dtype), segment_width)
-    costs, ends = sdtw_wavefront_pallas(
-        qk, rk, m=M, segment_width=segment_width,
+    N = reference.shape[0]
+    qk, rk = _prep(queries, reference, segment_width=segment_width,
+                   compute_dtype=compute_dtype)
+    return sdtw_wavefront_prepped(
+        qk, rk, batch=B, m=M, n=N, segment_width=segment_width,
         compute_dtype=compute_dtype, interpret=interpret)
-    return costs.reshape(-1)[:B], ends.reshape(-1)[:B]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -70,8 +128,8 @@ def normalize(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
     """Batch z-normalization via the Pallas kernel. x: (B, L) -> (B, L)."""
     x = jnp.asarray(x)
     B, L = x.shape
-    b_pad = _ceil_to(B, SUBLANES)
-    l_pad = _ceil_to(L, LANES)
+    b_pad = ceil_to(B, SUBLANES)
+    l_pad = ceil_to(L, LANES)
     xp = jnp.pad(x, ((0, b_pad - B), (0, l_pad - L)))
     xp = xp.reshape(-1, SUBLANES, l_pad)
     out = normalizer_pallas(xp, n=L, interpret=interpret)

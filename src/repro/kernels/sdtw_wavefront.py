@@ -78,8 +78,9 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
 
         # q value for (query s, lane l) = q[s, t - l]; q_ref stores the
         # REVERSED query so this is an ascending slice (no lane flip).
-        qv = pl.load(q_ref, (0, slice(None), pl.dslice(m - 1 + LANES - 1 - t,
-                                                       LANES)))   # (S, L)
+        qv = pl.load(q_ref, (pl.dslice(0, 1), slice(None),
+                             pl.dslice(m - 1 + LANES - 1 - t,
+                                       LANES)))[0]   # (S, L)
         qv = qv.astype(cdt)
 
         zero = jnp.asarray(0.0, cdt)

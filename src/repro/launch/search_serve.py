@@ -1,0 +1,76 @@
+"""Search-service driver: stream query chunks against a registered
+reference set and report throughput + cascade statistics.
+
+CPU-scale usage (reduced workload):
+  PYTHONPATH=src python -m repro.launch.search_serve --refs 8 \
+      --queries 64 --chunk 16 --k 2
+  PYTHONPATH=src python -m repro.launch.search_serve --backend kernel
+  PYTHONPATH=src python -m repro.launch.search_serve --no-prune
+
+The driver mirrors launch/serve.py: build the index once (normalized +
+cached layouts), then drive the SearchService over arriving chunks the
+way a serving frontend would.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.data.cbf import make_search_dataset
+from repro.search import ReferenceIndex, SearchConfig, SearchService
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refs", type=int, default=8)
+    ap.add_argument("--motifs-per-ref", type=int, default=16)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--query-motifs", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="queries per arriving batch")
+    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--backend", default="engine",
+                    choices=["ref", "engine", "kernel"])
+    ap.add_argument("--no-prune", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    refs, queries, labels = make_search_dataset(
+        seed=args.seed, n_refs=args.refs,
+        motifs_per_ref=args.motifs_per_ref, n_queries=args.queries,
+        query_motifs=args.query_motifs)
+    index = ReferenceIndex()
+    for name, series in refs.items():
+        index.add(name, series)
+    svc = SearchService(index, SearchConfig(
+        backend=args.backend, prune=not args.no_prune))
+
+    n = len(queries)
+    print(f"[search] {len(index)} refs x {refs['track0'].shape[0]} samples, "
+          f"{n} queries arriving in chunks of {args.chunk}, "
+          f"backend={args.backend}, prune={not args.no_prune}")
+    svc.topk(queries[:args.chunk], k=args.k)      # warm-up compile
+    hits = 0
+    dp_pairs = pairs = skipped = 0
+    t0 = time.perf_counter()
+    for lo in range(0, n, args.chunk):
+        chunk = queries[lo:lo + args.chunk]
+        matches = svc.topk(chunk, k=args.k)
+        st = svc.stats
+        dp_pairs += st.dp_pairs
+        pairs += st.pairs
+        skipped += st.skipped
+        hits += sum(m[0].reference == labels[lo + i]
+                    for i, m in enumerate(matches))
+    dt = time.perf_counter() - t0
+    print(f"[search] {n / dt:8.1f} q/s   top-1 hit-rate {hits / n:.0%}   "
+          f"sweeps {dp_pairs}/{pairs} (skipped {skipped / max(pairs, 1):.0%})")
+    for i, m in enumerate(svc.topk(queries[:3], k=args.k)):
+        best = ", ".join(f"{x.reference}@{x.end} cost={x.cost:.3f}"
+                         for x in m)
+        print(f"  q{i} ({labels[i]}): {best}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""repro.search — multi-reference sDTW search service.
+
+Layers: ReferenceIndex (cached reference prep) -> pruning cascade
+(admissible PAA-envelope lower bounds) -> QueryBatcher (fixed-shape
+kernel packing) -> SearchService (exact top-k front end).
+"""
+
+from repro.search.batcher import QueryBatch, QueryBatcher, grid_size
+from repro.search.index import RefEntry, ReferenceIndex
+from repro.search.prune import (envelope_gap2, lb_keogh_sdtw,
+                                lb_keogh_sdtw_multi, lb_paa_sdtw,
+                                paa_envelopes)
+from repro.search.service import (Match, SearchConfig, SearchService,
+                                  SearchStats, brute_force_topk)
+
+__all__ = [
+    "QueryBatch", "QueryBatcher", "grid_size",
+    "RefEntry", "ReferenceIndex",
+    "envelope_gap2", "lb_keogh_sdtw", "lb_keogh_sdtw_multi", "lb_paa_sdtw",
+    "paa_envelopes",
+    "Match", "SearchConfig", "SearchService", "SearchStats",
+    "brute_force_topk",
+]

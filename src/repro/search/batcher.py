@@ -1,0 +1,101 @@
+"""QueryBatcher — pack variable-count, variable-length query streams
+into the paper's fixed kernel shapes.
+
+The wavefront kernel (and the jit cache in front of every backend)
+wants static shapes: a (B, M) block with B a SUBLANES multiple and one
+compiled executable per distinct shape. Real search traffic is neither:
+queries arrive one at a time with arbitrary lengths. Mirroring the slot
+discipline of ``serve/batcher.py``, the packer keeps one open bucket
+per query length; a bucket emits a full batch the moment all
+``max_slots`` slots fill, and ``flush()`` drains stragglers. Emitted
+batches are zero-padded up to a small shape grid (SUBLANES x powers of
+two, capped at ``max_slots``) so a long-running service compiles each
+backend for only O(log(max_slots / SUBLANES)) batch shapes per length.
+
+Padding is batch-dim only — query *rows* are never padded, because
+sDTW aligns the whole query and extending it would change the cost.
+Distinct lengths stay in distinct buckets; the ``[:n_real]`` trim drops
+pad rows on the way out (a packing invariant under test).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.kernels.sdtw_wavefront import SUBLANES
+
+
+def grid_size(n: int, max_slots: int) -> int:
+    """Smallest SUBLANES * 2**k >= n, capped at max_slots."""
+    if n > max_slots:
+        raise ValueError(f"batch of {n} exceeds max_slots={max_slots}")
+    g = SUBLANES
+    while g < n:
+        g *= 2
+    return min(g, max_slots)
+
+
+@dataclasses.dataclass
+class QueryBatch:
+    """One fixed-shape unit of kernel work."""
+    length: int                 # M — query length of every real row
+    ids: tuple                  # caller ids of the n_real leading rows
+    queries: jnp.ndarray        # (B_grid, M); rows >= n_real are zeros
+
+    @property
+    def n_real(self) -> int:
+        return len(self.ids)
+
+
+class QueryBatcher:
+    """Length-bucketed slot packer for a stream of 1-D queries."""
+
+    def __init__(self, *, max_slots: int = 64):
+        if max_slots < SUBLANES or max_slots % SUBLANES:
+            raise ValueError(
+                f"max_slots must be a positive multiple of SUBLANES="
+                f"{SUBLANES}, got {max_slots}")
+        self.max_slots = max_slots
+        self._buckets: dict[int, list] = {}     # length -> [(id, series)]
+
+    def add(self, qid, series) -> list[QueryBatch]:
+        """Queue one query; returns the batches this fill completed
+        (empty list until a bucket reaches max_slots)."""
+        series = jnp.asarray(series)
+        if series.ndim != 1:
+            raise ValueError(f"query {qid!r} must be 1-D, got {series.shape}")
+        if series.shape[0] == 0:
+            raise ValueError(f"query {qid!r} is empty")
+        length = int(series.shape[0])
+        bucket = self._buckets.setdefault(length, [])
+        bucket.append((qid, series))
+        if len(bucket) >= self.max_slots:
+            self._buckets[length] = []
+            return [self._emit(length, bucket)]
+        return []
+
+    def flush(self) -> list[QueryBatch]:
+        """Emit every partially-filled bucket (grid-padded)."""
+        out = [self._emit(length, bucket)
+               for length, bucket in sorted(self._buckets.items()) if bucket]
+        self._buckets = {}
+        return out
+
+    def pack(self, queries, ids=None) -> list[QueryBatch]:
+        """One-shot convenience: add all then flush."""
+        out = []
+        for i, q in enumerate(queries):
+            out += self.add(ids[i] if ids is not None else i, q)
+        return out + self.flush()
+
+    def pending(self) -> int:
+        return sum(len(b) for b in self._buckets.values())
+
+    def _emit(self, length: int, bucket: list) -> QueryBatch:
+        ids = tuple(qid for qid, _ in bucket)
+        q = jnp.stack([s for _, s in bucket])
+        g = grid_size(q.shape[0], self.max_slots)
+        q = jnp.pad(q, ((0, g - q.shape[0]), (0, 0)))
+        return QueryBatch(length=length, ids=ids, queries=q)

@@ -1,0 +1,109 @@
+"""ReferenceIndex — registered references with amortized preparation.
+
+The paper's kernel path re-pads and re-swizzles the reference on every
+call; a search service aligning every incoming query batch against the
+same handful of references should pay that layout cost once. The index
+stores, per named reference:
+
+  * the (optionally z-normalized) series itself — the array every DP
+    backend and every lower bound runs against,
+  * lazily-cached ``(R, w, LANES)`` swizzled layouts per
+    (segment_width, dtype), fed to ``ops.sdtw_wavefront_prepped``,
+  * lazily-cached PAA [lo, hi] envelopes per chunk size, fed to the
+    pruning cascade (repro.search.prune).
+
+Registration order is the service's deterministic tie-break, so results
+stay identical to a brute-force loop over ``references()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax.numpy as jnp
+
+from repro.core.normalize import normalize_batch
+from repro.kernels import ops as _ops
+
+
+@dataclasses.dataclass
+class RefEntry:
+    """One registered reference and its cached derived layouts."""
+    name: str
+    series: jnp.ndarray                    # (N,) — what the DP runs against
+    length: int                            # N (true, pre-padding)
+    order: int                             # registration order (tie-break)
+    layouts: dict = dataclasses.field(default_factory=dict)
+    envelopes: dict = dataclasses.field(default_factory=dict)
+
+
+class ReferenceIndex:
+    """Many named references, prepared once, searched many times."""
+
+    def __init__(self, *, normalize: bool = True):
+        self.normalize = normalize
+        self._refs: dict[str, RefEntry] = {}
+
+    # ------------------------------------------------------------ build
+    def add(self, name: str, series) -> RefEntry:
+        series = jnp.asarray(series)
+        if series.ndim != 1:
+            raise ValueError(
+                f"reference {name!r} must be 1-D, got shape {series.shape}")
+        if series.shape[0] == 0:
+            raise ValueError(f"reference {name!r} is empty")
+        if name in self._refs:
+            raise ValueError(f"reference {name!r} already registered")
+        if self.normalize:
+            series = normalize_batch(series)
+        entry = RefEntry(name=name, series=series,
+                         length=int(series.shape[0]), order=len(self._refs))
+        self._refs[name] = entry
+        return entry
+
+    def add_many(self, named: Iterable[tuple[str, jnp.ndarray]]):
+        for name, series in named:
+            self.add(name, series)
+        return self
+
+    # ----------------------------------------------------------- access
+    def __len__(self) -> int:
+        return len(self._refs)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._refs
+
+    def names(self) -> list[str]:
+        return list(self._refs)
+
+    def get(self, name: str) -> RefEntry:
+        try:
+            return self._refs[name]
+        except KeyError:
+            raise KeyError(f"unknown reference {name!r}; "
+                           f"registered: {self.names()}") from None
+
+    def references(self) -> list[RefEntry]:
+        """Entries in registration order (the brute-force iteration and
+        tie-break order)."""
+        return sorted(self._refs.values(), key=lambda e: e.order)
+
+    # ----------------------------------------------------- cached preps
+    def layout(self, name: str, segment_width: int,
+               compute_dtype=jnp.float32) -> jnp.ndarray:
+        """Cached kernel layout: (R, w, LANES) swizzled reference blocks."""
+        entry = self.get(name)
+        key = (segment_width, jnp.dtype(compute_dtype).name)
+        if key not in entry.layouts:
+            entry.layouts[key] = _ops.swizzle_reference(
+                entry.series.astype(compute_dtype), segment_width)
+        return entry.layouts[key]
+
+    def envelopes(self, name: str, chunk: int):
+        """Cached PAA (lo, hi) envelopes at the given chunk size."""
+        from repro.search.prune import paa_envelopes
+        entry = self.get(name)
+        if chunk not in entry.envelopes:
+            entry.envelopes[chunk] = paa_envelopes(entry.series, chunk)
+        return entry.envelopes[chunk]

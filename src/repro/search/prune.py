@@ -1,0 +1,175 @@
+"""Admissible lower bounds for subsequence DTW — the search service's
+pruning cascade (LB_Keogh-style envelopes, computed in pure JAX).
+
+The bound: chunk both series into fixed-size blocks and keep per-block
+``[lo, hi]`` envelopes (the piecewise-aggregate min/max, exactly the
+upper/lower envelopes LB_Keogh builds, cf. wildboar's ``find_min_max``).
+Then run the *same* subsequence-DTW recurrence over the envelope-gap
+costs
+
+    C[t, u] = gap([qlo_t, qhi_t], [rlo_u, rhi_u])**2
+
+on the coarse (Mc x Nc) grid instead of the fine (M x N) one.
+
+Why this is a true lower bound of the full sweep: map the optimal fine
+path cell-by-cell onto the coarse grid (``(i, j) -> (i // cq, j // cr)``).
+Unit fine steps map to unit-or-zero coarse steps, so the image is a
+valid coarse warping path; it starts in coarse row 0 and ends in coarse
+row Mc - 1, so the subsequence boundary conditions carry over. Every
+fine cell cost ``(q_i - r_j)**2`` is >= the envelope gap of its block
+(both values lie inside their block's envelope), and each coarse cell's
+cost is counted once while >= 1 fine cells map onto it, so
+
+    sDTW(q, r) >= coarse-sDTW(envelopes)                (admissible)
+
+at ``(M*N) / (cq*cr)`` of the DP work. Running the cascade from coarse
+to fine chunks gives progressively tighter (and costlier) bounds; a
+pair whose bound already exceeds the running top-k threshold never
+reaches the full kernel sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+INF = jnp.inf
+
+
+def paa_envelopes(x: jnp.ndarray, chunk: int):
+    """Per-block [min, max] envelopes. x: (..., L) -> two (..., ceil(L/chunk)).
+
+    A ragged tail block is edge-padded (repeating the last sample), which
+    leaves its envelope exactly the min/max of the real tail values.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    x = jnp.asarray(x)
+    L = x.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        edge = jnp.broadcast_to(x[..., -1:], x.shape[:-1] + (pad,))
+        x = jnp.concatenate([x, edge], axis=-1)
+    xb = x.reshape(x.shape[:-1] + (-1, chunk))
+    return xb.min(axis=-1), xb.max(axis=-1)
+
+
+def envelope_gap2(qlo, qhi, rlo, rhi):
+    """Squared gap between intervals [qlo, qhi] and [rlo, rhi] (0 if they
+    overlap) — the coarse analogue of the (q - r)**2 local cost."""
+    gap = jnp.maximum(jnp.maximum(rlo - qhi, qlo - rhi), 0.0)
+    return gap * gap
+
+
+def _sdtw_over_costs(C: jnp.ndarray) -> jnp.ndarray:
+    """Subsequence-DTW minimum over a precomputed (Mc, Nc) cost matrix.
+
+    Same recurrence and boundary conditions as ``repro.core.ref`` (free
+    start: virtual row -1 is all zeros; free end: min over the last row).
+    """
+    dt = C.dtype
+    row0 = C[0]          # min(D[-1,u]=0, ...) = 0: row 0 is the raw costs
+
+    def row_step(prev_row, crow):
+        def col_step(carry, xs):
+            left, upleft = carry
+            c, up = xs
+            val = c + jnp.minimum(jnp.minimum(left, upleft), up)
+            return (val, up), val
+
+        (_, _), row = lax.scan(
+            col_step,
+            (jnp.asarray(INF, dt), jnp.asarray(INF, dt)),
+            (crow, prev_row))
+        return row, None
+
+    last_row, _ = lax.scan(row_step, row0, C[1:])
+    return jnp.min(last_row)
+
+
+@functools.partial(jax.jit, static_argnames=("query_chunk", "ref_chunk"))
+def lb_paa_sdtw(queries: jnp.ndarray, reference: jnp.ndarray, *,
+                query_chunk: int, ref_chunk: int) -> jnp.ndarray:
+    """Batched admissible lower bound. queries (B, M), reference (N,) -> (B,).
+
+    lb_paa_sdtw(...)[b] <= sdtw(queries[b], reference) for every b, for
+    any chunk sizes >= 1. (query_chunk=ref_chunk=1 recovers the exact
+    sweep.) Bounds are only valid against a DP over the *same* arrays —
+    normalize first, bound second, exactly like the service does.
+    """
+    qlo, qhi = paa_envelopes(queries, query_chunk)
+    rlo, rhi = paa_envelopes(reference, ref_chunk)
+
+    def one(ql, qh):
+        C = envelope_gap2(ql[:, None], qh[:, None], rlo[None, :], rhi[None, :])
+        return _sdtw_over_costs(C)
+
+    return jax.vmap(one)(qlo, qhi)
+
+
+@jax.jit
+def lb_keogh_sdtw(queries: jnp.ndarray, rlo: jnp.ndarray,
+                  rhi: jnp.ndarray) -> jnp.ndarray:
+    """Fast admissible bound: full-resolution queries against a
+    reference *interval series* (the cached [lo, hi] envelopes), swept
+    anti-diagonally like ``core.engine`` — (M + Nc - 1) fused vector
+    steps instead of M * Nc sequential cells.
+
+    queries: (B, M); rlo/rhi: (Nc,) -> (B,) lower bounds.
+
+    This is the query_chunk=1 case of :func:`lb_paa_sdtw`: keeping the
+    query side exact preserves the per-row noise accumulation that
+    dominates real sweep costs, which ref-side-only envelopes cannot
+    hide — coarser query chunks collapse the bound (see the cascade
+    notes in service.py).
+    """
+    queries = jnp.asarray(queries)
+    B, M = queries.shape
+    Nc = rlo.shape[0]
+    q = queries.astype(jnp.float32)
+
+    # reversed + padded envelope vectors: one contiguous slice per diagonal
+    lo_ext = jnp.pad(jnp.flip(rlo.astype(jnp.float32)), (M - 1, M - 1))
+    hi_ext = jnp.pad(jnp.flip(rhi.astype(jnp.float32)), (M - 1, M - 1),
+                     constant_values=0.0)
+    ii = jnp.arange(M)
+    inf = jnp.asarray(INF, jnp.float32)
+
+    def step(carry, t):
+        d1, d2, best = carry
+        start = Nc - 1 - t + (M - 1)
+        lo = lax.dynamic_slice(lo_ext, (start,), (M,))
+        hi = lax.dynamic_slice(hi_ext, (start,), (M,))
+        gap = jnp.maximum(jnp.maximum(lo - q, q - hi), 0.0)
+        cost = gap * gap
+        up = jnp.roll(d1, 1, axis=-1)
+        upleft = jnp.roll(d2, 1, axis=-1)
+        prev = jnp.minimum(jnp.minimum(d1, up), upleft)
+        prev = jnp.where(ii == 0, 0.0, prev)
+        d0 = cost + prev
+        j = t - ii
+        valid = (j >= 0) & (j < Nc)
+        d0 = jnp.where(valid, d0, inf)
+        bottom = d0[..., M - 1]
+        bottom_valid = (t >= M - 1) & (t - (M - 1) < Nc)
+        best = jnp.minimum(best, jnp.where(bottom_valid, bottom, inf))
+        return (d0, d1, best), None
+
+    d_init = jnp.full((B, M), inf, jnp.float32)
+    best0 = jnp.full((B,), inf, jnp.float32)
+    (_, _, best), _ = lax.scan(step, (d_init, d_init, best0),
+                               jnp.arange(M + Nc - 1))
+    return best
+
+
+@jax.jit
+def lb_keogh_sdtw_multi(queries: jnp.ndarray, rlo: jnp.ndarray,
+                        rhi: jnp.ndarray) -> jnp.ndarray:
+    """Stage-0 fan-out: bounds for every (query, reference) pair in one
+    dispatch. queries: (B, M); rlo/rhi: (R, Nc) stacked equal-length
+    envelopes -> (B, R)."""
+    return jax.vmap(lambda lo, hi: lb_keogh_sdtw(queries, lo, hi))(
+        rlo, rhi).T

@@ -1,0 +1,327 @@
+"""SearchService — exact top-k subsequence search over many references.
+
+Per query batch the service runs a three-layer cascade:
+
+  1. **bound** — admissible lower bounds (prune.py) of every
+     (query, reference) pair from cached reference envelopes: the query
+     stays full-resolution (coarsening it collapses the bound — the
+     noise accumulation that dominates real sweep costs lives in the
+     per-row terms) while the reference is PAA-coarsened, so a bound at
+     ref_chunk c costs roughly 1/c of a full sweep;
+  2. **order** — per query, references are visited best-bound-first, so
+     the running top-k threshold tightens as early as possible, and
+     progressively tighter (costlier) bound stages run only on pairs
+     the coarse stage failed to prune;
+  3. **sweep** — surviving pairs reach a full DP sweep, packed into
+     fixed kernel shapes by the QueryBatcher and dispatched through the
+     selected backend (the kernel path reuses the index's cached
+     swizzled layouts).
+
+Skipping is *exact*: a pair is discarded only when a true lower bound
+strictly exceeds the k-th best true cost found so far, so ``topk``
+returns results identical to a brute-force ``sdtw_batch`` loop over
+every registered reference (same costs and end indices, any backend).
+Ties break by registration order, matching the brute-force iteration.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as _engine
+from repro.core import ref as _ref
+from repro.core.api import sdtw_batch
+from repro.core.normalize import normalize_batch
+from repro.kernels import ops as _ops
+from repro.kernels.ops import ceil_to
+from repro.kernels.sdtw_wavefront import SUBLANES
+from repro.search.batcher import QueryBatcher, grid_size
+from repro.search.index import ReferenceIndex
+from repro.search.prune import lb_keogh_sdtw, lb_keogh_sdtw_multi
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    backend: str = "engine"          # "ref" | "engine" | "kernel"
+    segment_width: int = 8           # kernel backend only
+    interpret: bool = True           # kernel backend only (True on CPU)
+    normalize: bool = True           # must match the index's setting
+    prune: bool = True
+    stages: tuple = (4, 2)           # ref_chunk per cascade stage, coarse
+    #                                  to fine; stage 0 runs batched over
+    #                                  all pairs, later stages run per
+    #                                  round just before a sweep
+    probe_rounds: int = 2            # rounds that sweep ONE reference per
+    #                                  query (tightening the threshold at
+    #                                  minimum cost) before the remaining
+    #                                  survivors are swept all at once
+    prune_margin: float = 1e-4       # bounds and sweeps run in f32 with
+    #                                  different summation orders; prune
+    #                                  only when lb > theta + margin so
+    #                                  rounding near a tie can never evict
+    #                                  a pair brute force would keep
+    max_slots: int = 64              # kernel-batch slot cap
+
+
+@dataclasses.dataclass
+class Match:
+    reference: str
+    cost: float
+    end: int
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Cascade accounting for one topk() call (benchmarked in
+    benchmarks/search_throughput.py)."""
+    pairs: int = 0                   # queries x references
+    dp_pairs: int = 0                # pairs that reached a full sweep
+    pruned_stage0: int = 0           # discarded on the coarse batched bound
+    pruned_later: int = 0            # discarded on a tighter lazy stage
+    dp_calls: int = 0                # backend dispatches (batched)
+
+    @property
+    def skipped(self) -> int:
+        return self.pruned_stage0 + self.pruned_later
+
+    @property
+    def skip_fraction(self) -> float:
+        return self.skipped / self.pairs if self.pairs else 0.0
+
+
+class SearchService:
+    def __init__(self, index: ReferenceIndex,
+                 config: SearchConfig = SearchConfig()):
+        if index.normalize != config.normalize:
+            raise ValueError(
+                f"index.normalize={index.normalize} != "
+                f"config.normalize={config.normalize}: bounds and sweeps "
+                f"must run on identically-prepared series")
+        if config.prune and not config.stages:
+            raise ValueError("prune=True needs at least one cascade stage")
+        self.index = index
+        self.config = config
+        self.stats = SearchStats()
+
+    # ------------------------------------------------------------ topk
+    def topk(self, queries, k: int = 1) -> list[list[Match]]:
+        """queries: (B, M) array or sequence of 1-D arrays (any lengths).
+        Returns, per query, the k best (reference, cost, end) matches
+        ordered by (cost, registration order)."""
+        cfg = self.config
+        refs = self.index.references()
+        if not refs:
+            raise ValueError("no references registered")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        qlist = self._as_query_list(queries)
+        B, R = len(qlist), len(refs)
+        self.stats = SearchStats(pairs=B * R)
+
+        # --- stage 0: batched coarse bounds for every (query, ref) pair,
+        # queries packed into the sweeps' fixed shapes and equal-length
+        # reference envelopes stacked into one fan-out dispatch
+        lb0 = np.zeros((B, R))
+        if cfg.prune:
+            by_nc: dict[int, list[int]] = {}
+            envs = {}
+            for j, e in enumerate(refs):
+                envs[j] = self.index.envelopes(e.name, cfg.stages[0])
+                by_nc.setdefault(int(envs[j][0].shape[0]), []).append(j)
+            stacked = {nc: (jnp.stack([envs[j][0] for j in refidx]),
+                            jnp.stack([envs[j][1] for j in refidx]))
+                       for nc, refidx in by_nc.items()}
+            batcher = QueryBatcher(max_slots=cfg.max_slots)
+            for batch in batcher.pack(qlist):
+                for nc, refidx in by_nc.items():
+                    rlo, rhi = stacked[nc]
+                    vals = np.asarray(
+                        lb_keogh_sdtw_multi(batch.queries, rlo, rhi))
+                    lb0[np.ix_(list(batch.ids), refidx)] = \
+                        vals[:batch.n_real]
+
+        # --- per-query pending references, best-bound-first
+        if cfg.prune:
+            pending = [list(np.argsort(lb0[i], kind="stable"))
+                       for i in range(B)]
+        else:
+            pending = [list(range(R)) for _ in range(B)]
+        # found[i]: (cost, order, end, name) tuples kept SORTED via
+        # bisect.insort so the k-th best is an O(1) read — brute-force-
+        # equal tie-breaking falls out of the (cost, order) tuple order
+        found: list[list[tuple]] = [[] for _ in range(B)]
+
+        def threshold(i: int) -> float:
+            if len(found[i]) < k:
+                return np.inf
+            return found[i][k - 1][0]
+
+        rounds = 0
+        while True:
+            # each round: every unfinished query nominates its next
+            # (best-bound-first) reference — one per query in the probe
+            # rounds (a full sweep has a large flat dispatch cost, so the
+            # threshold is tightened on as few dispatches as possible),
+            # then everything still unpruned at once.  Nominations are
+            # pruned by the tighter cascade stages, then swept grouped so
+            # the backend stays saturated with batched fixed-shape work.
+            nominations: dict[int, list[int]] = {}   # ref idx -> query ids
+            for i in range(B):
+                while pending[i]:
+                    j = pending[i][0]
+                    if cfg.prune and lb0[i, j] > threshold(i) + \
+                            cfg.prune_margin:
+                        # pending is sorted by lb0: everything left prunes
+                        self.stats.pruned_stage0 += len(pending[i])
+                        pending[i] = []
+                        break
+                    pending[i].pop(0)
+                    nominations.setdefault(j, []).append(i)
+                    if rounds < cfg.probe_rounds:
+                        break
+            rounds += 1
+            if not nominations:
+                break
+            if cfg.prune:
+                nominations = self._later_stages(nominations, refs, qlist,
+                                                 threshold)
+            if cfg.backend == "kernel":
+                # per-reference batches: the kernel wants one shared,
+                # pre-swizzled reference per dispatch
+                for j, qids in sorted(nominations.items()):
+                    self._sweep_kernel(refs[j], j, qids, qlist, found)
+            else:
+                self._sweep_pairs(nominations, refs, qlist, found)
+
+        out = []
+        for i in range(B):
+            out.append([Match(reference=name, cost=cost, end=end)
+                        for cost, _, end, name in found[i][:k]])
+        return out
+
+    # ---------------------------------------------------------- cascade
+    def _later_stages(self, nominations, refs, qlist, threshold):
+        """Tighter (costlier) bound stages over one round's nominations,
+        batched per reference through the same fixed-shape packer the
+        sweeps use. A pruned query simply re-nominates next round."""
+        cfg = self.config
+        for chunk in cfg.stages[1:]:
+            survivors: dict[int, list[int]] = {}
+            for j, qids in nominations.items():
+                qids = [i for i in qids if threshold(i) < np.inf]
+                cheap = [i for i in nominations[j] if i not in qids]
+                if cheap:   # nothing found yet: no threshold to beat
+                    survivors.setdefault(j, []).extend(cheap)
+                if not qids:
+                    continue
+                rlo, rhi = self.index.envelopes(refs[j].name, chunk)
+                batcher = QueryBatcher(max_slots=cfg.max_slots)
+                for batch in batcher.pack([qlist[i] for i in qids],
+                                          ids=qids):
+                    vals = np.asarray(
+                        lb_keogh_sdtw(batch.queries, rlo, rhi))
+                    for row, i in enumerate(batch.ids):
+                        if vals[row] > threshold(i) + cfg.prune_margin:
+                            self.stats.pruned_later += 1
+                        else:
+                            survivors.setdefault(j, []).append(i)
+            nominations = survivors
+        return nominations
+
+    # ----------------------------------------------------------- sweeps
+    def _sweep_kernel(self, entry, order: int, qids: list[int], qlist,
+                      found):
+        """Full kernel sweep of the nominated queries against one
+        reference, packed into fixed shapes by the QueryBatcher and fed
+        the index's cached swizzled layout."""
+        cfg = self.config
+        batcher = QueryBatcher(max_slots=cfg.max_slots)
+        for batch in batcher.pack([qlist[i] for i in qids], ids=qids):
+            qk = _ops.prepare_queries_jit(batch.queries.astype(jnp.float32))
+            rk = self.index.layout(entry.name, cfg.segment_width)
+            costs, ends = _ops.sdtw_wavefront_prepped(
+                qk, rk, batch=batch.n_real, m=batch.length, n=entry.length,
+                segment_width=cfg.segment_width, interpret=cfg.interpret)
+            costs, ends = np.asarray(costs), np.asarray(ends)
+            for row, i in enumerate(batch.ids):
+                bisect.insort(found[i], (float(costs[row]), order,
+                                         int(ends[row]), entry.name))
+            self.stats.dp_pairs += batch.n_real
+            self.stats.dp_calls += 1
+
+    def _sweep_pairs(self, nominations: dict, refs, qlist, found):
+        """Full DP of one round's (query, reference) pairs for the XLA
+        backends, which support a per-row reference batch: all pairs with
+        the same (query length, reference length) go in ONE stacked call,
+        so a round costs O(distinct shapes) dispatches, not O(refs)."""
+        cfg = self.config
+        shapes: dict[tuple, list[tuple]] = {}    # (M, N) -> [(i, j)]
+        for j, qids in sorted(nominations.items()):
+            for i in qids:
+                key = (int(qlist[i].shape[0]), refs[j].length)
+                shapes.setdefault(key, []).append((i, j))
+        fn = _ref.sdtw_ref if cfg.backend == "ref" else _engine.sdtw_engine
+        for (m, n), pairs in shapes.items():
+            qg = jnp.stack([qlist[i] for i, _ in pairs])
+            rg = jnp.stack([refs[j].series for _, j in pairs])
+            p = len(pairs)
+            g = (grid_size(p, cfg.max_slots) if p <= cfg.max_slots
+                 else ceil_to(p, SUBLANES))
+            qg = jnp.pad(qg, ((0, g - p), (0, 0)))
+            rg = jnp.concatenate(
+                [rg, jnp.broadcast_to(rg[:1], (g - p, n))]) if g > p else rg
+            costs, ends = fn(qg, rg)
+            costs, ends = np.asarray(costs)[:p], np.asarray(ends)[:p]
+            for row, (i, j) in enumerate(pairs):
+                bisect.insort(found[i], (float(costs[row]), j,
+                                         int(ends[row]), refs[j].name))
+            self.stats.dp_pairs += p
+            self.stats.dp_calls += 1
+
+    # ------------------------------------------------------------ misc
+    def _as_query_list(self, queries) -> list[jnp.ndarray]:
+        if getattr(queries, "ndim", None) == 2:
+            qs = list(jnp.asarray(queries))
+        else:
+            qs = [jnp.asarray(q) for q in queries]
+            for q in qs:
+                if q.ndim != 1:
+                    raise ValueError(
+                        f"each query must be 1-D, got shape {q.shape}")
+        if len(qs) == 0:
+            raise ValueError("empty query batch")
+        if self.config.normalize:
+            qs = [normalize_batch(q) for q in qs]
+        return qs
+
+
+def brute_force_topk(index: ReferenceIndex, queries, k: int = 1, *,
+                     backend: str = "engine", segment_width: int = 8,
+                     interpret: bool = True) -> list[list[Match]]:
+    """Reference implementation: full DP of every query against every
+    registered reference — what SearchService.topk must reproduce."""
+    svc = SearchService(index, SearchConfig(
+        backend=backend, normalize=index.normalize, prune=False,
+        segment_width=segment_width, interpret=interpret))
+    qs = svc._as_query_list(queries)
+    groups: dict[int, list[int]] = {}
+    for i, q in enumerate(qs):
+        groups.setdefault(int(q.shape[0]), []).append(i)
+    found: list[list[tuple]] = [[] for _ in qs]
+    for length, qids in groups.items():
+        qg = jnp.stack([qs[i] for i in qids])
+        for order, e in enumerate(index.references()):
+            costs, ends = sdtw_batch(qg, e.series, normalize=False,
+                                     backend=backend,
+                                     segment_width=segment_width,
+                                     interpret=interpret)
+            costs, ends = np.asarray(costs), np.asarray(ends)
+            for row, i in enumerate(qids):
+                found[i].append((float(costs[row]), order,
+                                 int(ends[row]), e.name))
+    return [[Match(reference=name, cost=cost, end=end)
+             for cost, _, end, name in sorted(f)[:k]] for f in found]

@@ -5,6 +5,9 @@ distributed tile sweep vs the engine over random tilings."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import sdtw_engine

@@ -1,0 +1,197 @@
+"""repro.search: envelope-bound admissibility, index caching, batcher
+packing invariants, and SearchService exactness vs the brute-force loop
+(including: pruning never discards a pair full sDTW would rank top-k)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.normalize import normalize_batch
+from repro.core.ref import sdtw_ref
+from repro.data.cbf import make_search_dataset
+from repro.kernels.sdtw_wavefront import SUBLANES
+from repro.search import (QueryBatcher, ReferenceIndex, SearchConfig,
+                          SearchService, brute_force_topk, grid_size,
+                          lb_keogh_sdtw, lb_paa_sdtw, paa_envelopes)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    refs, queries, labels = make_search_dataset(
+        seed=3, n_refs=5, motifs_per_ref=8, n_queries=10, query_motifs=2)
+    index = ReferenceIndex()
+    for name, series in refs.items():
+        index.add(name, series)
+    return index, queries, labels
+
+
+# ---------------------------------------------------------------- prune
+def test_paa_envelopes_cover_blocks(rng):
+    x = rng.normal(size=(3, 37)).astype(np.float32)     # ragged tail
+    lo, hi = paa_envelopes(jnp.asarray(x), 8)
+    assert lo.shape == hi.shape == (3, 5)
+    for b in range(5):
+        blk = x[:, b * 8:(b + 1) * 8]
+        np.testing.assert_allclose(np.asarray(lo)[:, b], blk.min(axis=1))
+        np.testing.assert_allclose(np.asarray(hi)[:, b], blk.max(axis=1))
+
+
+@pytest.mark.parametrize("chunks", [(1, 1), (1, 4), (2, 8), (5, 7)])
+def test_lower_bounds_are_admissible(rng, chunks):
+    """The cascade's soundness: every bound <= the true sDTW cost."""
+    cq, cr = chunks
+    q = normalize_batch(jnp.asarray(
+        rng.normal(size=(6, 33)).astype(np.float32)))
+    r = normalize_batch(jnp.asarray(
+        rng.normal(size=(217,)).astype(np.float32)))
+    true, _ = sdtw_ref(q, r)
+    lb = lb_paa_sdtw(q, r, query_chunk=cq, ref_chunk=cr)
+    assert (np.asarray(lb) <= np.asarray(true) + 1e-4).all()
+    if cq == 1:
+        rlo, rhi = paa_envelopes(r, cr)
+        lb_fast = lb_keogh_sdtw(q, rlo, rhi)
+        np.testing.assert_allclose(np.asarray(lb_fast), np.asarray(lb),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_lower_bound_exact_at_chunk_one(rng):
+    """ref_chunk=1 envelopes degenerate to the series itself: the bound
+    must equal the true sweep."""
+    q = jnp.asarray(rng.normal(size=(4, 24)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(96,)).astype(np.float32))
+    true, _ = sdtw_ref(q, r)
+    rlo, rhi = paa_envelopes(r, 1)
+    np.testing.assert_allclose(np.asarray(lb_keogh_sdtw(q, rlo, rhi)),
+                               np.asarray(true), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- index
+def test_reference_index_caches_preps(rng):
+    idx = ReferenceIndex()
+    idx.add("a", rng.normal(size=(300,)).astype(np.float32))
+    l1 = idx.layout("a", 4)
+    assert idx.layout("a", 4) is l1                 # cached, not rebuilt
+    assert idx.layout("a", 8) is not l1             # per segment_width
+    e1 = idx.envelopes("a", 8)
+    assert idx.envelopes("a", 8) is e1
+    with pytest.raises(ValueError, match="already registered"):
+        idx.add("a", rng.normal(size=(10,)))
+    with pytest.raises(KeyError, match="unknown reference"):
+        idx.get("zzz")
+    with pytest.raises(ValueError, match="1-D"):
+        idx.add("b", rng.normal(size=(3, 4)))
+
+
+def test_reference_index_normalizes_once(rng):
+    r = (rng.normal(size=(256,)) * 5 + 3).astype(np.float32)
+    idx = ReferenceIndex(normalize=True)
+    entry = idx.add("a", r)
+    np.testing.assert_allclose(np.asarray(entry.series),
+                               np.asarray(normalize_batch(jnp.asarray(r))),
+                               rtol=1e-6)
+    raw = ReferenceIndex(normalize=False).add("a", r)
+    np.testing.assert_array_equal(np.asarray(raw.series), r)
+
+
+# -------------------------------------------------------------- batcher
+def test_batcher_buckets_and_grid(rng):
+    b = QueryBatcher(max_slots=16)
+    out = []
+    for i in range(21):                      # two lengths interleaved
+        out += b.add(i, rng.normal(size=(32 if i % 2 else 48,)))
+    out += b.flush()
+    assert b.pending() == 0
+    by_len = {}
+    for batch in out:
+        by_len.setdefault(batch.length, []).append(batch)
+        # fixed-shape discipline: batch dim on the SUBLANES x 2^k grid
+        assert batch.queries.shape[0] == grid_size(batch.n_real, 16)
+        assert batch.queries.shape[1] == batch.length
+        # pad rows are zeros, real rows preserved
+        np.testing.assert_array_equal(
+            np.asarray(batch.queries[batch.n_real:]), 0.0)
+    ids = sorted(i for batch in out for i in batch.ids)
+    assert ids == list(range(21))            # every query exactly once
+    assert sorted(by_len) == [32, 48]
+
+
+def test_batcher_emits_full_buckets_eagerly(rng):
+    b = QueryBatcher(max_slots=8)
+    emitted = []
+    for i in range(8):
+        emitted += b.add(i, rng.normal(size=(16,)))
+    assert len(emitted) == 1 and emitted[0].n_real == 8
+    assert b.pending() == 0
+
+
+def test_batcher_validation(rng):
+    with pytest.raises(ValueError, match="multiple of SUBLANES"):
+        QueryBatcher(max_slots=SUBLANES + 1)
+    b = QueryBatcher()
+    with pytest.raises(ValueError, match="1-D"):
+        b.add(0, rng.normal(size=(2, 3)))
+    with pytest.raises(ValueError, match="empty"):
+        b.add(0, np.zeros((0,)))
+
+
+# -------------------------------------------------------------- service
+@pytest.mark.parametrize("backend", ["ref", "engine"])
+@pytest.mark.parametrize("k", [1, 2])
+def test_service_equals_brute_force(workload, backend, k):
+    """The acceptance contract: same costs and end indices as a full
+    sdtw_batch loop over all registered references — in particular the
+    cascade never discards a pair the oracle would rank in the top-k."""
+    index, queries, _ = workload
+    for prune in (True, False):
+        svc = SearchService(index, SearchConfig(backend=backend,
+                                                prune=prune))
+        got = svc.topk(queries, k=k)
+        want = brute_force_topk(index, queries, k=k, backend=backend)
+        assert got == want
+        st = svc.stats
+        assert st.pairs == len(queries) * len(index)
+        assert st.dp_pairs + st.skipped == st.pairs
+        if not prune:
+            assert st.skipped == 0
+
+
+def test_service_kernel_backend(workload):
+    index, queries, _ = workload
+    svc = SearchService(index, SearchConfig(backend="kernel"))
+    got = svc.topk(queries[:4], k=1)
+    want = brute_force_topk(index, queries[:4], k=1, backend="kernel")
+    assert got == want
+
+
+def test_service_variable_length_queries(workload):
+    index, queries, _ = workload
+    mixed = [queries[0], queries[1][:200], queries[2][:200], queries[3]]
+    svc = SearchService(index, SearchConfig(backend="engine"))
+    got = svc.topk(mixed, k=2)
+    want = brute_force_topk(index, mixed, k=2, backend="engine")
+    assert got == want
+
+
+def test_service_prunes_search_workload(workload):
+    """k=1 on the CBF search workload: the cascade must skip a sizable
+    share of full sweeps (the benchmark's >= 30% acceptance bar)."""
+    index, queries, labels = workload
+    svc = SearchService(index, SearchConfig(backend="engine"))
+    matches = svc.topk(queries, k=1)
+    assert svc.stats.skip_fraction >= 0.3
+    hits = sum(m[0].reference == labels[i] for i, m in enumerate(matches))
+    assert hits == len(queries)
+
+
+def test_service_validation(workload, rng):
+    index, queries, _ = workload
+    svc = SearchService(index, SearchConfig())
+    with pytest.raises(ValueError, match="k must be"):
+        svc.topk(queries, k=0)
+    with pytest.raises(ValueError, match="empty query batch"):
+        svc.topk([])
+    with pytest.raises(ValueError, match="1-D"):
+        svc.topk([rng.normal(size=(2, 3))])
+    with pytest.raises(ValueError, match="no references"):
+        SearchService(ReferenceIndex(), SearchConfig()).topk(queries)
+    with pytest.raises(ValueError, match="normalize"):
+        SearchService(index, SearchConfig(normalize=False))
