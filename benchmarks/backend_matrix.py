@@ -1,0 +1,119 @@
+"""Backend × spec capability-matrix smoke benchmark.
+
+Sweeps every registered backend over a set of DPSpecs (distances,
+reductions, banding), timing one batched dispatch per capable
+(backend, spec) cell and cross-checking exact backends against the
+``ref`` oracle — so a capability regression (a backend silently
+dropping or mis-computing a spec it declares) fails fast, in CI, on
+tiny shapes.
+
+  python -m benchmarks.backend_matrix           # bench-sized shapes
+  python -m benchmarks.backend_matrix --ci      # tiny shapes, asserts only
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import gsps, time_fn
+
+
+SPECS = [
+    dict(),                                          # the paper's default
+    dict(distance="abs"),
+    dict(distance="cosine"),
+    dict(reduction="softmin", gamma=1.0),
+    dict(_band_frac=0.5),                            # banded hard-min
+    dict(distance="abs", reduction="softmin", gamma=0.5),
+]
+
+
+def _specs(m: int, n: int):
+    from repro.core.spec import DPSpec
+    out = []
+    for kw in SPECS:
+        kw = dict(kw)
+        frac = kw.pop("_band_frac", None)
+        if frac is not None:
+            kw["band"] = int(max(m, n) * frac)
+        out.append(DPSpec(**kw))
+    return out
+
+
+def run(full: bool = False, ci: bool = False, csv: list | None = None):
+    import jax.numpy as jnp
+    from repro.backends import registry
+    from repro.core.api import sdtw_batch
+
+    if ci:
+        B, M, N = 4, 12, 80
+    elif full:
+        B, M, N = 256, 256, 8192
+    else:
+        B, M, N = 32, 64, 1024
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, M)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(N,)).astype(np.float32))
+    floats = B * M
+
+    print(f"# backend x spec matrix  B={B} M={M} N={N} "
+          f"({'ci' if ci else 'full' if full else 'reduced'})")
+    specs = _specs(M, N)
+    names = [n for n in registry.names(aliases=False) if n != "distributed"]
+    names.sort(key=lambda n: n != "ref")   # oracle first, then the rest
+    checked = skipped = 0
+    for spec in specs:
+        oracle = None
+        for name in names:
+            caps = registry.get(name).capabilities
+            if caps.unsupported_reason(spec) is not None:
+                print(f"  {name:10s} {spec.describe():42s} "
+                      f"— not supported ({caps.unsupported_reason(spec)})")
+                skipped += 1
+                continue
+
+            def call():
+                return sdtw_batch(q, r, backend=name, spec=spec,
+                                  normalize=False, segment_width=4)
+
+            if ci:
+                costs, ends = call()
+                dt = float("nan")
+            else:
+                dt = time_fn(call, warmup=1, runs=3)
+                costs, ends = call()
+            costs = np.asarray(costs)
+            assert np.isfinite(costs).all(), (name, spec.describe())
+            if name == "ref":
+                oracle = costs
+            elif caps.exact and oracle is not None:
+                np.testing.assert_allclose(
+                    costs, oracle, rtol=5e-3, atol=5e-3,
+                    err_msg=f"{name} != ref under {spec.describe()} — "
+                            f"capability regression")
+                checked += 1
+            rate = gsps(floats, dt) if dt == dt else float("nan")
+            print(f"  {name:10s} {spec.describe():42s} "
+                  f"{dt * 1e3:8.2f} ms  {rate:8.4f} Gsps")
+            if csv is not None:
+                csv.append({"bench": "backend_matrix", "backend": name,
+                            "spec": spec.describe(), "B": B, "M": M,
+                            "N": N, "sec": dt})
+    print(f"[backend_matrix] {checked} exact cross-checks OK, "
+          f"{skipped} (backend, spec) cells correctly declined")
+    assert checked > 0, "no exact cross-checks ran — matrix misconfigured"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ci", action="store_true",
+                    help="tiny shapes, correctness asserts only")
+    args = ap.parse_args(argv)
+    run(full=args.full, ci=args.ci)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,7 @@ def main(argv=None):
 
     from benchmarks import table1_throughput, fig3_segment_width
     from benchmarks import train_step_bench, sdtw_scaling
-    from benchmarks import search_throughput
+    from benchmarks import search_throughput, backend_matrix
 
     print("=" * 70)
     table1_throughput.run(full=args.full, kernel=args.kernel, csv=rows)
@@ -35,6 +35,8 @@ def main(argv=None):
     train_step_bench.run(csv=rows)
     print("=" * 70)
     search_throughput.run(full=args.full, csv=rows)
+    print("=" * 70)
+    backend_matrix.run(full=args.full, csv=rows)
 
     os.makedirs(args.out, exist_ok=True)
     keys = sorted({k for r in rows for k in r})

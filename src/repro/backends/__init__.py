@@ -1,0 +1,15 @@
+"""repro.backends — the backend registry: every sDTW execution engine
+declares its Capabilities and an execute(spec, plan) entry point here,
+and ``repro.core.api`` routes through ``registry.resolve``.
+"""
+
+from repro.backends.registry import (Backend, Capabilities, ExecutionPlan,
+                                     capability_rows, get, names, register,
+                                     register_alias, resolve, select,
+                                     supports, validate)
+
+__all__ = [
+    "Backend", "Capabilities", "ExecutionPlan",
+    "capability_rows", "get", "names", "register", "register_alias",
+    "resolve", "select", "supports", "validate",
+]

@@ -1,0 +1,125 @@
+"""Builtin backend registrations — imported lazily by the registry.
+
+Each entry pairs a Capabilities declaration with an execute(spec, plan)
+adapter onto the underlying implementation.  Heavy imports (Pallas,
+shard_map) stay inside the execute functions so registry queries and
+the XLA-only backends never pay for them.
+"""
+
+from __future__ import annotations
+
+from repro.backends.registry import (Backend, Capabilities, register,
+                                     register_alias)
+
+_ALL = frozenset({"sqeuclidean", "abs", "cosine"})
+_HARD = frozenset({"hardmin"})
+_BOTH = frozenset({"hardmin", "softmin"})
+
+
+# ------------------------------------------------------------------ ref
+def _exec_ref(spec, plan):
+    from repro.core import ref
+    return ref.sdtw_ref(plan.queries, plan.reference, spec=spec)
+
+
+register(Backend(
+    name="ref",
+    capabilities=Capabilities(
+        distances=_ALL, reductions=_BOTH, banding=True,
+        differentiable=True, per_query_reference=True, exact=True,
+        device="any",
+        notes="trusted row-scan oracle; slow, for validation"),
+    execute=_exec_ref,
+))
+
+
+# --------------------------------------------------------------- engine
+def _exec_engine(spec, plan):
+    from repro.core import engine
+    return engine.sdtw_engine(plan.queries, plan.reference, spec=spec)
+
+
+register(Backend(
+    name="engine",
+    capabilities=Capabilities(
+        distances=_ALL, reductions=_BOTH, banding=True,
+        differentiable=True, per_query_reference=True, exact=True,
+        device="any",
+        notes="anti-diagonal XLA wavefront; the default"),
+    execute=_exec_engine,
+))
+
+# soft == engine with the reduction forced to soft-min (the former
+# core.softdtw fork, collapsed into a spec override).
+register_alias("soft", "engine", reduction="softmin")
+
+
+# --------------------------------------------------------------- kernel
+def _exec_kernel(spec, plan):
+    from repro.kernels import ops
+    return ops.sdtw_wavefront(
+        plan.queries, plan.reference, segment_width=plan.segment_width,
+        interpret=plan.interpret, spec=spec)
+
+
+register(Backend(
+    name="kernel",
+    capabilities=Capabilities(
+        # no cosine: PAD_VALUE reference padding only dominates costs
+        # that grow with |q - r| (see the sentinel notes in core.spec);
+        # no soft-min: the streaming (min, argmin) fold and the strip
+        # handoff are hard-min shaped.
+        distances=frozenset({"sqeuclidean", "abs"}), reductions=_HARD,
+        banding=True, differentiable=False, per_query_reference=False,
+        exact=True, device="tpu (interpret=True elsewhere)",
+        notes="Pallas wavefront kernel; shared 1-D reference only"),
+    execute=_exec_kernel,
+))
+
+
+# ------------------------------------------------------------ quantized
+def _exec_quantized(spec, plan):
+    from repro.core.quantized import sdtw_quantized
+    return sdtw_quantized(
+        plan.queries, plan.reference, normalize=False, spec=spec,
+        n_levels=plan.option("n_levels", 256))
+
+
+register(Backend(
+    name="quantized",
+    capabilities=Capabilities(
+        distances=_ALL, reductions=_BOTH, banding=True,
+        differentiable=False, per_query_reference=False,
+        exact=False,   # uint8 codebook: ~10% cost error on CBF data
+        device="any",
+        notes="uint8 codebook encode -> engine on decoded centroids"),
+    execute=_exec_quantized,
+))
+
+
+# ---------------------------------------------------------- distributed
+def _exec_distributed(spec, plan):
+    from repro.core.distributed import make_sdtw_distributed
+    mesh = plan.option("mesh")
+    if mesh is None:
+        raise ValueError(
+            "distributed backend needs a mesh: pass "
+            "options={'mesh': Mesh(...)} (and optionally 'row_block', "
+            "'batch_axes', 'ref_axis') to sdtw_batch")
+    fn = make_sdtw_distributed(
+        mesh, spec=spec,
+        batch_axes=plan.option("batch_axes", ("data",)),
+        ref_axis=plan.option("ref_axis", "model"),
+        row_block=plan.option("row_block", 64))
+    return fn(plan.queries, plan.reference)
+
+
+register(Backend(
+    name="distributed",
+    capabilities=Capabilities(
+        distances=_ALL, reductions=_HARD, banding=True,
+        differentiable=False, per_query_reference=False, exact=True,
+        device="multi-device mesh",
+        notes="shard_map ppermute pipeline; needs options={'mesh': ...}"),
+    execute=_exec_distributed,
+))

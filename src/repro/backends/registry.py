@@ -1,0 +1,216 @@
+"""Backend registry — one recurrence (``repro.core.spec.DPSpec``), many
+engines.
+
+Each execution backend registers
+
+  * a :class:`Capabilities` declaration — which distances, reductions
+    and banding it supports, whether it is differentiable / exact, and
+    what device it needs — and
+  * an ``execute(spec, plan)`` entry point taking the resolved
+    :class:`~repro.core.spec.DPSpec` and an :class:`ExecutionPlan`
+    (queries, reference, dispatch options).
+
+``repro.core.api.sdtw_batch`` then becomes a thin
+resolve-spec → :func:`resolve` → ``backend.execute`` path, and callers
+get capability errors ("backend 'kernel' does not support soft-min
+... use one of ['engine', ...]") instead of silently-wrong numbers.
+
+The builtin backends (ref / engine / kernel / quantized / distributed,
+plus the ``soft`` alias for engine-with-soft-min) are registered lazily
+on first registry access so importing this module stays cheap and free
+of Pallas imports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+from repro.core.spec import DPSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend can execute. Frozen: declared once at register."""
+
+    distances: frozenset
+    reductions: frozenset
+    banding: bool = True
+    differentiable: bool = False   # NaN-free gradients under softmin specs
+    per_query_reference: bool = True   # accepts a (B, N) reference batch
+    exact: bool = True             # reproduces the spec'd recurrence (the
+    #                                quantized backend approximates it)
+    device: str = "any"            # human-readable requirement
+    notes: str = ""
+
+    def unsupported_reason(self, spec: DPSpec) -> str | None:
+        """None when the spec is executable, else a short reason."""
+        if spec.distance not in self.distances:
+            return f"distance {spec.distance!r}"
+        if spec.reduction not in self.reductions:
+            return "soft-min" if spec.reduction == "softmin" else \
+                f"reduction {spec.reduction!r}"
+        if spec.band is not None and not self.banding:
+            return "banding"
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything an execute() needs besides the spec: the (already
+    normalized) operands and per-dispatch options."""
+
+    queries: Any
+    reference: Any
+    segment_width: int = 8
+    interpret: bool | None = None      # None = auto (kernels.ops)
+    options: Mapping | None = None     # backend extras, e.g. {"mesh": ...}
+
+    def option(self, key, default=None):
+        return (self.options or {}).get(key, default)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    capabilities: Capabilities
+    execute: Callable[[DPSpec, ExecutionPlan], tuple]
+
+    def __call__(self, spec: DPSpec, plan: ExecutionPlan):
+        return self.execute(spec, plan)
+
+
+_REGISTRY: dict[str, Backend] = {}
+_ALIASES: dict[str, tuple[str, dict]] = {}
+# preference order for select(): fastest general-purpose engine first
+_PRIORITY = ("engine", "kernel", "ref", "quantized", "distributed")
+
+
+def register(backend: Backend, *, overwrite: bool = False) -> Backend:
+    if not overwrite and backend.name in _REGISTRY:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def register_alias(alias: str, target: str, **spec_overrides) -> None:
+    """An alias resolves to ``target`` with fields of the caller's spec
+    force-overridden (e.g. ``soft`` -> engine with reduction=softmin)."""
+    _ALIASES[alias] = (target, spec_overrides)
+
+
+def _ensure_builtins() -> None:
+    if "engine" not in _REGISTRY:
+        from repro.backends import builtin  # noqa: F401  (self-registers)
+
+
+def names(*, aliases: bool = True) -> list[str]:
+    _ensure_builtins()
+    out = sorted(_REGISTRY)
+    if aliases:
+        out += sorted(_ALIASES)
+    return out
+
+
+def _expand(name: str, spec: DPSpec) -> tuple[Backend, DPSpec]:
+    """Alias expansion: map an alias to its target backend AND apply its
+    spec overrides. Every capability query goes through here so an alias
+    is never validated (or executed) against the un-rewritten spec."""
+    _ensure_builtins()
+    if name in _ALIASES:
+        target, overrides = _ALIASES[name]
+        spec = dataclasses.replace(spec, **overrides)
+        name = target
+    try:
+        return _REGISTRY[name], spec
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; registered: "
+                         f"{names()}") from None
+
+
+def get(name: str) -> Backend:
+    """Look up a backend (aliases map to their target). NOTE: alias spec
+    overrides are NOT applied here — use :func:`resolve` (or
+    :func:`select`) whenever you intend to execute, so the rewritten
+    spec travels with the backend."""
+    return _expand(name, DPSpec())[0]
+
+
+def supports(name: str, spec: DPSpec) -> bool:
+    backend, spec = _expand(name, spec)
+    return backend.capabilities.unsupported_reason(spec) is None
+
+
+def capable(spec: DPSpec, *, exact_only: bool = False) -> list[str]:
+    """Backend names able to execute ``spec``, in preference order."""
+    _ensure_builtins()
+    ordered = [n for n in _PRIORITY if n in _REGISTRY]
+    ordered += [n for n in sorted(_REGISTRY) if n not in ordered]
+    out = []
+    for n in ordered:
+        caps = _REGISTRY[n].capabilities
+        if caps.unsupported_reason(spec) is None and \
+                (caps.exact or not exact_only):
+            out.append(n)
+    return out
+
+
+def validate(name: str, spec: DPSpec) -> Backend:
+    """Return the backend or raise a capability error naming who can.
+    Alias spec overrides are applied before validation (use
+    :func:`resolve` when you also need the rewritten spec)."""
+    return resolve(name, spec)[0]
+
+
+def resolve(name: str, spec: DPSpec) -> tuple[Backend, DPSpec]:
+    """Alias expansion + capability validation.
+
+    Returns the concrete backend and the (possibly alias-rewritten)
+    spec — e.g. ``resolve("soft", spec)`` -> (engine, spec with
+    reduction="softmin").
+    """
+    backend, spec = _expand(name, spec)
+    reason = backend.capabilities.unsupported_reason(spec)
+    if reason is not None:
+        alternatives = [n for n in capable(spec) if n != backend.name]
+        hint = f": use one of {alternatives}" if alternatives else ""
+        raise ValueError(
+            f"backend {backend.name!r} does not support {reason} "
+            f"(spec {spec.describe()}){hint}")
+    return backend, spec
+
+
+def select(spec: DPSpec, *, preferred: str | None = None
+           ) -> tuple[Backend, DPSpec]:
+    """Pick a backend for the spec: the preferred one when capable,
+    else the first capable backend in preference order.
+
+    Returns ``(backend, spec)`` with alias overrides applied — execute
+    with the RETURNED spec, never the one you passed in.
+    """
+    if preferred is not None:
+        return resolve(preferred, spec)
+    choices = capable(spec)
+    if not choices:
+        raise ValueError(f"no registered backend supports spec "
+                         f"{spec.describe()}")
+    return _REGISTRY[choices[0]], spec
+
+
+def capability_rows() -> list[dict]:
+    """One dict per backend — the README/benchmark capability table."""
+    _ensure_builtins()
+    rows = []
+    for name in sorted(_REGISTRY):
+        c = _REGISTRY[name].capabilities
+        rows.append({
+            "backend": name,
+            "distances": ",".join(sorted(c.distances)),
+            "reductions": ",".join(sorted(c.reductions)),
+            "banding": c.banding,
+            "differentiable": c.differentiable,
+            "per_query_reference": c.per_query_reference,
+            "exact": c.exact,
+            "device": c.device,
+        })
+    return rows

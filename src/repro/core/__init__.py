@@ -1,12 +1,18 @@
-"""repro.core — the paper's contribution: batched subsequence DTW."""
+"""repro.core — the paper's contribution: batched subsequence DTW.
+
+One declarative recurrence (``DPSpec``), many engines (see
+``repro.backends.registry``).
+"""
 
 from repro.core.api import sdtw_batch, sdtw_search
 from repro.core.engine import sdtw_engine
 from repro.core.normalize import normalize_batch
 from repro.core.ref import sdtw_ref, sdtw_numpy, dtw_global_numpy
 from repro.core.softdtw import sdtw_soft
+from repro.core.spec import DEFAULT_SPEC, DPSpec, resolve_spec
 
 __all__ = [
     "sdtw_batch", "sdtw_search", "sdtw_engine", "normalize_batch",
     "sdtw_ref", "sdtw_numpy", "dtw_global_numpy", "sdtw_soft",
+    "DPSpec", "DEFAULT_SPEC", "resolve_spec",
 ]

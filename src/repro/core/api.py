@@ -2,67 +2,79 @@
 
     normalize(reference); normalize(batch of queries); runSDTW(batch)
 
-with selectable execution backends:
-  * ``"ref"``    — trusted scan oracle (slow, for validation)
-  * ``"engine"`` — anti-diagonal XLA engine (default)
-  * ``"kernel"`` — Pallas TPU wavefront kernel (interpret=True on CPU)
+now a thin resolve-spec → registry → execute path: the recurrence is a
+declarative ``DPSpec`` (distance × reduction × band × accum dtype) and
+the execution backend is looked up in ``repro.backends.registry``, which
+validates the spec against the backend's declared Capabilities:
+
+  * ``"ref"``         — trusted scan oracle (slow, for validation)
+  * ``"engine"``      — anti-diagonal XLA engine (default; hard+soft)
+  * ``"kernel"``      — Pallas TPU wavefront kernel (auto-interpreted
+                        off-TPU; hard-min, non-cosine)
+  * ``"quantized"``   — uint8 codebook sDTW (approximate; paper §8)
+  * ``"distributed"`` — shard_map pipeline (needs options={"mesh": ...})
+  * ``"soft"``        — alias: engine with reduction="softmin"
+
+Asking an incapable backend fails loudly ("backend 'kernel' does not
+support soft-min ...: use one of ['engine', ...]") instead of silently
+computing the wrong recurrence; ``backend=None`` lets the registry pick
+the first capable backend.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import engine as _engine
-from repro.core import ref as _ref
+from repro.backends import registry
 from repro.core.normalize import normalize_batch
+from repro.core.spec import DPSpec, resolve_spec, validate_batch_inputs
 
 
 def sdtw_batch(queries, reference, *, normalize: bool = True,
-               backend: str = "engine", segment_width: int = 8,
-               interpret: bool | None = None):
+               backend: str | None = "engine",
+               spec: DPSpec | None = None,
+               distance: str | None = None,
+               reduction: str | None = None,
+               gamma: float | None = None,
+               band: int | None = None,
+               segment_width: int = 8,
+               interpret: bool | None = None,
+               options: dict | None = None):
     """Align a batch of queries against one reference.
 
     queries: (B, M); reference: (N,). Returns (costs (B,), end_idx (B,)).
 
     Mirrors the paper's pipeline: optional z-normalization of both inputs
-    (§5.1), then the batched subsequence-DTW sweep (§5.2). ``end_idx`` is
-    the reference index where the best alignment ends (the paper only
-    reports the min cost; the end index falls out of the same fold).
+    (§5.1), then the batched subsequence-DTW sweep (§5.2) under the
+    resolved spec. ``end_idx`` is the reference index where the best
+    alignment ends (for soft-min specs: the bottom row's hard argmin,
+    which converges to the hard end index as gamma -> 0).
+
+    ``spec`` carries the recurrence; the ``distance`` / ``reduction`` /
+    ``gamma`` / ``band`` kwargs are per-call overrides of its fields
+    (``gamma`` alone implies ``reduction="softmin"``). ``backend=None``
+    asks the registry for the first backend capable of the spec.
+    ``interpret=None`` auto-selects the Pallas mode from
+    ``jax.default_backend()`` (compiled on TPU, interpreted elsewhere).
+    ``options`` passes backend extras (e.g. ``{"mesh": ...}`` for
+    ``backend="distributed"``).
     """
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
-    if queries.ndim != 2:
-        raise ValueError(
-            f"queries must be 2-D (batch, length), got shape {queries.shape}")
-    if reference.ndim != 1:
-        raise ValueError(
-            f"reference must be 1-D (length,), got shape {reference.shape}")
-    if queries.shape[0] == 0:
-        raise ValueError("empty query batch (queries.shape[0] == 0)")
-    if queries.shape[1] == 0:
-        raise ValueError("zero-length queries (queries.shape[1] == 0)")
-    if reference.shape[0] == 0:
-        raise ValueError("empty reference (reference.shape[0] == 0)")
-    if segment_width < 1:
-        raise ValueError(f"segment_width must be >= 1, got {segment_width}")
+    validate_batch_inputs(queries, reference, segment_width=segment_width)
+    resolved = resolve_spec(spec, distance=distance, reduction=reduction,
+                            gamma=gamma, band=band)
+    if backend is None:
+        backend_impl, resolved = registry.select(resolved)
+    else:
+        backend_impl, resolved = registry.resolve(backend, resolved)
     if normalize:
         queries = normalize_batch(queries)
         reference = normalize_batch(reference)
-    if backend == "ref":
-        return _ref.sdtw_ref(queries, reference)
-    if backend == "engine":
-        return _engine.sdtw_engine(queries, reference)
-    if backend == "kernel":
-        from repro.kernels import ops as _ops  # deferred: pallas import
-        return _ops.sdtw_wavefront(
-            queries, reference, segment_width=segment_width,
-            interpret=True if interpret is None else interpret)
-    if backend == "quantized":
-        # uint8 codebook sDTW — the paper's §8 future work (inputs were
-        # already normalized above when requested)
-        from repro.core.quantized import sdtw_quantized
-        return sdtw_quantized(queries, reference, normalize=False)
-    raise ValueError(f"unknown backend {backend!r}")
+    plan = registry.ExecutionPlan(
+        queries=queries, reference=reference, segment_width=segment_width,
+        interpret=interpret, options=options)
+    return backend_impl.execute(resolved, plan)
 
 
 def sdtw_search(query, reference, **kw):

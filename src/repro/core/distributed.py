@@ -30,14 +30,21 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-INF = jnp.float32(jnp.inf)
+from repro.core.spec import DEFAULT_SPEC, DPSpec
+from repro.core.spec import INF as _SPEC_INF
+
+INF = jnp.float32(_SPEC_INF)
 
 
 def sdtw_block(q_block: jnp.ndarray,
                r_chunk: jnp.ndarray,
                top: jnp.ndarray,
                left: jnp.ndarray,
-               corner: jnp.ndarray):
+               corner: jnp.ndarray,
+               *,
+               spec: DPSpec = DEFAULT_SPEC,
+               i0=None,
+               j0=None):
     """DP over one (row-block × reference-chunk) tile, batched over queries.
 
     q_block: (B, Rb)   query rows of this block
@@ -45,6 +52,12 @@ def sdtw_block(q_block: jnp.ndarray,
     top:     (B, C)    D[i0-1, j0:j0+C]   (virtual row above the tile)
     left:    (B, Rb)   D[i0:i0+Rb, j0-1]  (virtual column left of the tile)
     corner:  (B,)      D[i0-1, j0-1]
+    spec:    recurrence spec (hard-min reductions only — soft-min's
+             streaming readout does not tree-reduce across chunks)
+    i0, j0:  the tile's global (row, column) offset, required when
+             ``spec.band`` is set: the Sakoe–Chiba mask is a *global*
+             |i - j| <= band predicate folded into each tile's local
+             anti-diagonal index math
     returns  (bottom_row (B, C), right_col (B, Rb))
 
     §Perf part 2 iter 2: boundary-aware ANTI-DIAGONAL sweep, vectorized
@@ -72,7 +85,7 @@ def sdtw_block(q_block: jnp.ndarray,
         d1, d2, bottom, right = carry
         j = t - ii                                     # (Rb,)
         rv = lax.dynamic_slice(r_ext, (C - 1 - t + Rb - 1,), (Rb,))
-        cost = (q_block - rv[None, :]) ** 2            # (B, Rb)
+        cost = spec.cell_cost(q_block, rv[None, :])    # (B, Rb)
 
         top_t = lax.dynamic_slice(topp, (0, jnp.minimum(t, C + Rb - 1)),
                                   (B, 1))              # D[-1, t]
@@ -88,8 +101,12 @@ def sdtw_block(q_block: jnp.ndarray,
                        jnp.where((ii == t)[None, :], left_m1,
                                  jnp.roll(d2, 1, axis=1)))
 
-        d0 = cost + jnp.minimum(jnp.minimum(lf, up), ul)
-        d0 = jnp.where(((j >= 0) & (j < C))[None, :], d0, inf)
+        d0 = spec.cell_update(cost, lf, up, ul)
+        valid = (j >= 0) & (j < C)
+        if spec.band is not None:
+            # global Sakoe–Chiba mask in tile-local coordinates
+            valid = valid & spec.band_valid(i0 + ii, j0 + j)
+        d0 = jnp.where(valid[None, :], d0, inf)
 
         # collect the tile's bottom row / right column as produced
         jb = jnp.clip(t - (Rb - 1), 0, C - 1)
@@ -110,7 +127,8 @@ def sdtw_block(q_block: jnp.ndarray,
 
 
 def _pipeline_local(q: jnp.ndarray, r_local: jnp.ndarray, *,
-                    axis_name: str, n_dev: int, row_block: int):
+                    axis_name: str, n_dev: int, row_block: int,
+                    spec: DPSpec = DEFAULT_SPEC):
     """Per-device body of the reference-sharded pipeline (inside shard_map)."""
     B, M = q.shape
     C = r_local.shape[0]
@@ -137,7 +155,9 @@ def _pipeline_local(q: jnp.ndarray, r_local: jnp.ndarray, *,
                            jnp.where(is_first_dev, INF, recv_corner))
         top_eff = jnp.where(b == 0, 0.0, top)      # virtual row -1 == 0
 
-        bottom, right = sdtw_block(qb, r_local, top_eff, left, corner)
+        bottom, right = sdtw_block(qb, r_local, top_eff, left, corner,
+                                   spec=spec, i0=bsafe * row_block,
+                                   j0=m * C)
 
         top = jnp.where(active, bottom, top)
         last_bottom = jnp.where(b == nblocks - 1, bottom, last_bottom)
@@ -172,7 +192,8 @@ def _pipeline_local(q: jnp.ndarray, r_local: jnp.ndarray, *,
 def make_sdtw_distributed(mesh: Mesh, *,
                           batch_axes: Sequence[str] = ("data",),
                           ref_axis: str = "model",
-                          row_block: int = 64):
+                          row_block: int = 64,
+                          spec: DPSpec | None = None):
     """Build a jit-able distributed sDTW: queries sharded over
     ``batch_axes`` (DP), reference sharded over ``ref_axis`` (pipeline).
 
@@ -180,11 +201,16 @@ def make_sdtw_distributed(mesh: Mesh, *,
     B must divide by prod(mesh[batch_axes]); N by mesh[ref_axis];
     M by row_block.
     """
+    spec = DEFAULT_SPEC if spec is None else spec
+    if spec.soft:
+        raise ValueError(
+            "distributed backend does not support soft-min (the final "
+            "pmin tree-reduce is hard-min shaped): use engine")
     n_ref = mesh.shape[ref_axis]
     batch_axes = tuple(batch_axes)
 
     local = functools.partial(_pipeline_local, axis_name=ref_axis,
-                              n_dev=n_ref, row_block=row_block)
+                              n_dev=n_ref, row_block=row_block, spec=spec)
 
     def wrapped(q, r):
         best, end = local(q.astype(jnp.float32), r.astype(jnp.float32))

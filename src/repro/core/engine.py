@@ -1,5 +1,5 @@
 """Anti-diagonal (wavefront) sDTW engine — the paper's parallel pattern
-expressed at the XLA level.
+expressed at the XLA level, parameterized by a ``DPSpec``.
 
 The DP matrix is swept along anti-diagonals t = i + j; every cell on a
 diagonal is independent, so each scan step is one fused vector op of
@@ -8,10 +8,20 @@ same wavefront the paper's kernel executes across GPU threads (§5.2);
 here XLA's vector units play the role of the wavefront and the two
 rotating diagonal buffers play the role of the per-thread double buffers.
 
-The subsequence minimum is folded into the sweep exactly like the paper's
-streaming ``__hmin2`` reduction: whenever the diagonal crosses the bottom
-row, the freshly produced cell enters a running (min, argmin) pair, so no
-final reduction pass over the bottom row is needed.
+The recurrence itself — per-cell cost, 3-way reduction (hard- or
+soft-min), Sakoe–Chiba band mask — comes from ``repro.core.spec.DPSpec``
+via ``spec.cell_cost`` / ``spec.cell_update`` / ``spec.band_valid``.
+Spec fields are static under jit, so the default (unbanded hard-min
+squared-Euclidean) spec compiles the exact graph this engine always
+compiled, and a soft-min spec recovers the former ``core.softdtw`` fork:
+the streaming bottom-row reduction becomes a running-max logsumexp of
+``-D[M-1, j] / gamma`` (the underflow-safe analogue of the paper's
+streaming ``__hmin2`` fold), and the whole map queries -> cost is
+differentiable (see examples/audio_align.py).
+
+For both reductions the end index is the argmin of the bottom row —
+for soft-min that is the position whose smoothed alignment cost is
+lowest, which converges to the hard end index as gamma -> 0.
 
 Complexity: (M + N - 1) scan steps of O(M) vector work ≈ O(M·N + M²).
 """
@@ -24,31 +34,42 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-INF = jnp.inf
+from repro.core.spec import DEFAULT_SPEC, DPSpec, INF, SOFT_BIG  # noqa: F401
+# INF re-exported for backward compatibility (engine.INF predates spec.py)
 
 
-@functools.partial(jax.jit, static_argnames=("return_end", "accum_dtype"))
+@functools.partial(jax.jit, static_argnames=("spec", "return_end",
+                                             "accum_dtype"))
 def sdtw_engine(queries: jnp.ndarray,
                 reference: jnp.ndarray,
                 *,
+                spec: DPSpec | None = None,
                 return_end: bool = True,
-                accum_dtype: jnp.dtype = jnp.float32):
-    """Batched anti-diagonal sDTW.
+                accum_dtype=None):
+    """Batched anti-diagonal sDTW under ``spec``.
 
     queries:   (B, M)
     reference: (N,) shared across the batch (the paper's setting) or (B, N)
+    spec:      recurrence spec; None = squared-Euclidean hard-min unbanded
+    accum_dtype: overrides ``spec.accum_dtype`` when given (kept for the
+               benchmark harnesses that lower ``sdtw_engine.__wrapped__``)
     returns:   costs (B,) [, end_indices (B,)]
+
+    Input validation lives in ``core.api.sdtw_batch`` /
+    ``search.SearchService`` (the shared validator in ``core.spec``);
+    this function assumes well-shaped arrays.
     """
+    spec = DEFAULT_SPEC if spec is None else spec
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
-    if queries.ndim != 2:
-        raise ValueError(f"queries must be (B, M), got {queries.shape}")
     B, M = queries.shape
     shared_ref = reference.ndim == 1
     N = reference.shape[-1]
+    dt = jnp.dtype(accum_dtype) if accum_dtype is not None else spec.accum
+    soft = spec.soft
 
-    q = queries.astype(accum_dtype)
-    r = reference.astype(accum_dtype)
+    q = queries.astype(dt)
+    r = reference.astype(dt)
 
     # §Perf part 2 iter 1: reverse the reference ONCE so each diagonal is
     # a contiguous slice — v[i] = r[t-i] = r_rev[(N-1-t) + i] — instead of
@@ -66,40 +87,68 @@ def sdtw_engine(queries: jnp.ndarray,
             return lax.dynamic_slice(r_ext, (start,), (M,))
         return lax.dynamic_slice(r_ext, (0, start), (B, M))
 
-    inf = jnp.asarray(INF, accum_dtype)
+    big = jnp.asarray(spec.big, dt)
 
     def step(carry, t):
-        d1, d2, best, best_j = carry
+        if soft:
+            d1, d2, m_run, s_run, best, best_j = carry
+        else:
+            d1, d2, best, best_j = carry
         # cell (i, t-i):
         #   left   = D[i,   t-1-i] = d1[i]
         #   up     = D[i-1, t-i  ] = d1[i-1]
         #   upleft = D[i-1, t-1-i] = d2[i-1]
         rv = diag_vals(t)                      # (M,) or (B, M)
-        cost = (q - rv) ** 2                   # (B, M) via broadcast
+        cost = spec.cell_cost(q, rv)           # (B, M) via broadcast
         up = jnp.roll(d1, 1, axis=-1)
         upleft = jnp.roll(d2, 1, axis=-1)
-        # i == 0: virtual row -1 is all zeros -> min term is 0.
-        prev = jnp.minimum(jnp.minimum(d1, up), upleft)
-        prev = jnp.where(ii == 0, 0.0, prev)
-        d0 = cost + prev
-        # mask invalid cells (j = t - i outside [0, N-1]) to +inf
+        # i == 0: virtual row -1 is all zeros -> free subsequence start
+        d0 = spec.cell_update(cost, d1, up, upleft, free_start=(ii == 0))
+        # mask invalid cells (j = t - i outside [0, N-1], or out of band)
         j = t - ii
         valid = (j >= 0) & (j < N)
-        d0 = jnp.where(valid, d0, inf)
-        # streaming bottom-row min (paper's folded __hmin2 reduction)
+        in_band = spec.band_valid(ii, j)
+        if in_band is not None:
+            valid = valid & in_band
+        d0 = jnp.where(valid, d0, big)
+        # streaming bottom-row reduction (paper's folded __hmin2): the
+        # running (min, argmin) pair doubles as the soft path's end index
         bottom = d0[..., M - 1]
         bottom_valid = (t >= M - 1) & (t - (M - 1) < N)
-        cand = jnp.where(bottom_valid, bottom, inf)
+        cand = jnp.where(bottom_valid, bottom, big)
         take = cand < best
         best = jnp.where(take, cand, best)
         best_j = jnp.where(take, t - (M - 1), best_j)
+        if soft:
+            # streaming soft-min over the bottom row via a running-max
+            # logsumexp of x = -D[M-1, j] / gamma (underflow-safe)
+            x = jnp.where(bottom_valid, -bottom / spec.gamma, -SOFT_BIG)
+            m_new = jnp.maximum(m_run, x)
+            s_run = s_run * jnp.exp(m_run - m_new) + jnp.exp(x - m_new)
+            return (d0, d1, m_new, s_run, best, best_j), None
         return (d0, d1, best, best_j), None
 
-    d_init = jnp.full((B, M), inf, accum_dtype)
-    best0 = jnp.full((B,), inf, accum_dtype)
+    d_init = jnp.full((B, M), big, dt)
+    best0 = jnp.full((B,), big, dt)
     bj0 = jnp.zeros((B,), jnp.int32)
-    (d0, d1, best, best_j), _ = lax.scan(
-        step, (d_init, d_init, best0, bj0), jnp.arange(M + N - 1))
+    if soft:
+        m0 = jnp.full((B,), -SOFT_BIG, dt)
+        s0 = jnp.zeros((B,), dt)
+        carry, _ = lax.scan(step, (d_init, d_init, m0, s0, best0, bj0),
+                            jnp.arange(M + N - 1))
+        _, _, m_run, s_run, best, best_j = carry
+        cost_out = -spec.gamma * (m_run + jnp.log(s_run))
+        # no reachable bottom cell (e.g. the band blocks the whole
+        # bottom row): the logsumexp of SOFT_BIG-masked cells is a
+        # finite ~SOFT_BIG value — report +inf like the hard path and
+        # the numpy oracle do. `best` is the hard min of the bottom
+        # cells, so best >= SOFT_BIG/2 iff every one was masked.
+        blocked = best >= jnp.asarray(SOFT_BIG / 2, dt)
+        cost_out = jnp.where(blocked, jnp.asarray(INF, dt), cost_out)
+    else:
+        carry, _ = lax.scan(step, (d_init, d_init, best0, bj0),
+                            jnp.arange(M + N - 1))
+        _, _, cost_out, best_j = carry
     if return_end:
-        return best, best_j
-    return best
+        return cost_out, best_j
+    return cost_out

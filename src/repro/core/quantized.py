@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.engine import sdtw_engine
 from repro.core.normalize import normalize_batch
+from repro.core.spec import DPSpec
 
 
 def build_codebook(reference: jnp.ndarray, n_levels: int = 256
@@ -50,7 +51,8 @@ def decode(codes: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
 
 
 def sdtw_quantized(queries: jnp.ndarray, reference: jnp.ndarray, *,
-                   n_levels: int = 256, normalize: bool = True):
+                   n_levels: int = 256, normalize: bool = True,
+                   spec: DPSpec | None = None):
     """Batched sDTW over uint8-coded inputs (paper §8).
 
     queries (B, M), reference (N,) -> (costs (B,), ends (B,)).
@@ -58,6 +60,10 @@ def sdtw_quantized(queries: jnp.ndarray, reference: jnp.ndarray, *,
     than the paper's fp16) — on TPU this quarters the HBM streaming of
     the q/r inputs, which is the whole HBM traffic of the VMEM-resident
     kernel (EXPERIMENTS.md §Perf part 2).
+
+    The DP over the decoded centroids runs under ``spec`` — quantization
+    is a wire/storage transform, orthogonal to the recurrence, so any
+    engine-supported (distance, reduction, band) combination works here.
     """
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
@@ -67,4 +73,4 @@ def sdtw_quantized(queries: jnp.ndarray, reference: jnp.ndarray, *,
     cb = build_codebook(reference, n_levels)
     q8 = encode(queries, cb)           # the uint8 wire/storage format
     r8 = encode(reference, cb)
-    return sdtw_engine(decode(q8, cb), decode(r8, cb))
+    return sdtw_engine(decode(q8, cb), decode(r8, cb), spec=spec)

@@ -6,31 +6,63 @@ engine, Pallas kernels, distributed pipeline) is validated against.
 Subsequence DTW (sDTW) recurrence, 0-based query rows ``i`` and reference
 columns ``j``::
 
-    D[i, j] = (q[i] - r[j])**2 + min(D[i-1, j], D[i, j-1], D[i-1, j-1])
+    D[i, j] = cost(q[i], r[j]) + reduce(D[i-1, j], D[i, j-1], D[i-1, j-1])
 
 with the *subsequence* boundary condition ``D[-1, j] = 0`` for every j
 (an alignment may start anywhere in the reference) and ``D[i, -1] = inf``
-for ``i >= 0``.  The result is ``min_j D[M-1, j]`` — the best alignment
-cost of the whole query against *some* contiguous window of the
-reference (paper §2).
+for ``i >= 0``.  The result is the reduction of ``D[M-1, j]`` over j —
+the best alignment cost of the whole query against *some* contiguous
+window of the reference (paper §2).
+
+Both oracles here consume a :class:`repro.core.spec.DPSpec`, so every
+(distance × reduction × band) combination a faster backend claims to
+support can be checked cell-by-cell against the same trusted loop:
+``cost`` is ``spec.cell_cost``, ``reduce`` is hard-min or the smoothed
+soft-min, and a Sakoe–Chiba band leaves out-of-band cells at the
+masked sentinel.  The default spec reproduces the original
+squared-Euclidean hard-min oracle exactly.
 """
 
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-INF = jnp.inf
+from repro.core.spec import DEFAULT_SPEC, DPSpec, INF  # noqa: F401
+# INF re-exported for backward compatibility (ref.INF predates spec.py)
 
 
-def sdtw_numpy(q: np.ndarray, r: np.ndarray) -> tuple[float, int]:
+def _np_cost(spec: DPSpec, a: float, b: float) -> float:
+    if spec.distance == "sqeuclidean":
+        return (a - b) ** 2
+    if spec.distance == "abs":
+        return abs(a - b)
+    return 1.0 - (a * b) / (abs(a) * abs(b) + 1e-8)
+
+
+def _np_softmin(vals, gamma: float) -> float:
+    a = -np.asarray(vals, dtype=np.float64) / gamma
+    mx = np.max(a)
+    if not np.isfinite(mx):          # every predecessor blocked
+        return np.inf
+    return float(-gamma * (mx + np.log(np.sum(np.exp(a - mx)))))
+
+
+def sdtw_numpy(q: np.ndarray, r: np.ndarray,
+               spec: DPSpec | None = None) -> tuple[float, int]:
     """Brute-force full-matrix sDTW. O(M*N) memory. Trusted oracle.
 
-    Returns (min_cost, end_index) where end_index is the reference column
-    at which the best alignment ends.
+    Returns (cost, end_index) where end_index is the reference column at
+    which the best alignment ends.  For soft-min specs the cost is the
+    smoothed soft-min over the bottom row (matching the engine's
+    streaming logsumexp readout) and the end index is the bottom row's
+    hard argmin.
     """
+    spec = DEFAULT_SPEC if spec is None else spec
     q = np.asarray(q, dtype=np.float64)
     r = np.asarray(r, dtype=np.float64)
     m, n = len(q), len(r)
@@ -38,10 +70,29 @@ def sdtw_numpy(q: np.ndarray, r: np.ndarray) -> tuple[float, int]:
     D[0, :] = 0.0  # subsequence: free start anywhere in the reference
     for i in range(1, m + 1):
         for j in range(1, n + 1):
-            c = (q[i - 1] - r[j - 1]) ** 2
-            D[i, j] = c + min(D[i - 1, j], D[i, j - 1], D[i - 1, j - 1])
-    end = int(np.argmin(D[m, 1:]))
-    return float(D[m, 1 + end]), end
+            if spec.band is not None and abs((i - 1) - (j - 1)) > spec.band:
+                continue                      # out of band: stays +inf
+            c = _np_cost(spec, q[i - 1], r[j - 1])
+            if i == 1:
+                prev = 0.0                    # free start: D[-1, j] == 0
+            elif spec.soft:
+                prev = _np_softmin(
+                    (D[i, j - 1], D[i - 1, j], D[i - 1, j - 1]), spec.gamma)
+            else:
+                prev = min(D[i, j - 1], D[i - 1, j], D[i - 1, j - 1])
+            D[i, j] = c + prev
+    last = D[m, 1:]
+    end = int(np.argmin(last))
+    if spec.soft:
+        return -spec.gamma * float(_np_logsumexp(-last / spec.gamma)), end
+    return float(last[end]), end
+
+
+def _np_logsumexp(a: np.ndarray) -> float:
+    mx = np.max(a)
+    if not np.isfinite(mx):
+        return -np.inf
+    return float(mx + np.log(np.sum(np.exp(a - mx))))
 
 
 def dtw_global_numpy(q: np.ndarray, r: np.ndarray) -> float:
@@ -59,50 +110,84 @@ def dtw_global_numpy(q: np.ndarray, r: np.ndarray) -> float:
     return float(D[m, n])
 
 
-def _sdtw_rowscan_single(q: jnp.ndarray, r: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _sdtw_rowscan_single(q: jnp.ndarray, r: jnp.ndarray,
+                         spec: DPSpec) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Row-by-row scan sDTW for one (query, reference) pair.
 
     Sequential over both axes (inner scan carries the left cell), so it is
     slow but structurally simple — it mirrors the CPU-side generator the
     paper uses for correctness evaluation (§4).
-    Returns (min_cost, end_index).
+    Returns (cost, end_index).
     """
-    # Virtual row -1 is all zeros (free start): D[0, j] = cost(0, j) because
-    # min(D[-1,j]=0, D[0,j-1]>=0, D[-1,j-1]=0) = 0 (all costs are >= 0).
-    row0 = (q[0] - r) ** 2
+    big = jnp.asarray(spec.big, q.dtype)
+    banded = spec.band is not None
+    n = r.shape[0]
+    jj = jnp.arange(n)
 
-    def row_step_rest(prev_row, qi):
-        cost = (qi - r) ** 2
+    # Virtual row -1 is all zeros (free start): D[0, j] = cost(0, j). For
+    # hard-min that is min(D[-1,j]=0, D[0,j-1]>=0, D[-1,j-1]=0) = 0; for
+    # soft-min the free start is the same exact-zero boundary (matching
+    # the engine's free_start mask).
+    row0 = spec.cell_cost(q[0], r)
+    if banded:
+        row0 = jnp.where(spec.band_valid(0, jj), row0, big)
 
-        def col_step(carry, xs):
+    def row_step(prev_row, xs):
+        if banded:
+            qi, i = xs
+            valid = spec.band_valid(i, jj)
+        else:
+            qi = xs
+        cost = spec.cell_cost(qi, r)
+
+        def col_step(carry, cxs):
             left, upleft = carry
-            c, up = xs
-            val = c + jnp.minimum(jnp.minimum(left, upleft), up)
+            if banded:
+                c, up, ok = cxs
+            else:
+                c, up = cxs
+            val = spec.cell_update(c, left, up, upleft)
+            if banded:
+                # out-of-band cells must read as blocked to their
+                # neighbours, exactly like the engine's masked diagonals
+                val = jnp.where(ok, val, big)
             return (val, up), val
 
-        (_, _), row = lax.scan(
-            col_step,
-            (jnp.asarray(INF, q.dtype), jnp.asarray(INF, q.dtype)),
-            (cost, prev_row),
-        )
+        cxs = (cost, prev_row, valid) if banded else (cost, prev_row)
+        (_, _), row = lax.scan(col_step, (big, big), cxs)
         return row, None
 
-    last_row, _ = lax.scan(row_step_rest, row0, q[1:])
+    if banded:
+        xs = (q[1:], jnp.arange(1, q.shape[0]))
+    else:
+        xs = q[1:]
+    last_row, _ = lax.scan(row_step, row0, xs)
     end = jnp.argmin(last_row)
+    if spec.soft:
+        cost = -spec.gamma * jax.nn.logsumexp(-last_row / spec.gamma)
+        # whole bottom row masked (band blocks it): +inf, like hard-min
+        # and the numpy oracle, not the finite ~SOFT_BIG logsumexp
+        cost = jnp.where(last_row[end] >= big / 2,
+                         jnp.asarray(jnp.inf, cost.dtype), cost)
+        return cost, end
     return last_row[end], end
 
 
-def sdtw_ref(queries: jnp.ndarray, reference: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+def sdtw_ref(queries: jnp.ndarray, reference: jnp.ndarray,
+             spec: DPSpec | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Batched scan-based sDTW oracle.
 
     queries:   (B, M) float
     reference: (N,) shared or (B, N) per-query
+    spec:      recurrence spec; None = squared-Euclidean hard-min unbanded
     returns:   (costs (B,), end_indices (B,))
     """
+    spec = DEFAULT_SPEC if spec is None else spec
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
+    single = functools.partial(_sdtw_rowscan_single, spec=spec)
     if reference.ndim == 1:
-        fn = jax.vmap(_sdtw_rowscan_single, in_axes=(0, None))
+        fn = jax.vmap(single, in_axes=(0, None))
     else:
-        fn = jax.vmap(_sdtw_rowscan_single, in_axes=(0, 0))
+        fn = jax.vmap(single, in_axes=(0, 0))
     return fn(queries, reference)

@@ -1,81 +1,40 @@
-"""Differentiable soft subsequence DTW (beyond-paper extension).
+"""Differentiable soft subsequence DTW — now just "the engine with a
+soft-min reduction".
 
-Replaces ``min`` with the smoothed soft-min
+Historically this module carried a full fork of the anti-diagonal sweep
+with ``min`` replaced by the smoothed soft-min
 
     softmin_gamma(a) = -gamma * log(sum_i exp(-a_i / gamma))
 
-(Cuturi & Blondel 2017) over the same anti-diagonal sweep as
-``repro.core.engine``.  As gamma -> 0 this recovers hard sDTW.  The
-subsequence readout (min over the bottom row) is also smoothed, so the
-whole map queries -> cost is differentiable and usable as an alignment
-loss (see examples/audio_align.py).
+(Cuturi & Blondel 2017).  The fork collapsed into
+``repro.core.engine.sdtw_engine`` executing a
+``DPSpec(reduction="softmin")`` — one wavefront implementation, two
+reductions.  As gamma -> 0 this recovers hard sDTW.  The subsequence
+readout (min over the bottom row) is also smoothed, so the whole map
+queries -> cost is differentiable and usable as an alignment loss (see
+examples/audio_align.py).
+
+``gamma`` is folded into the (static) spec, so each distinct gamma value
+compiles once; pass a Python float.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax import lax
 
-BIG = 1e30  # finite stand-in for +inf: keeps gradients NaN-free
+from repro.core.engine import sdtw_engine
+from repro.core.spec import SOFT_BIG, DPSpec
 
-
-def _softmin3(a, b, c, gamma):
-    stacked = jnp.stack([a, b, c], axis=0)
-    return -gamma * jax.nn.logsumexp(-stacked / gamma, axis=0)
+BIG = SOFT_BIG   # backward-compat alias (softdtw.BIG predates spec.py)
 
 
-@functools.partial(jax.jit, static_argnames=())
 def sdtw_soft(queries: jnp.ndarray, reference: jnp.ndarray,
-              gamma: jnp.ndarray | float = 1.0) -> jnp.ndarray:
+              gamma: float = 1.0, *, band: int | None = None) -> jnp.ndarray:
     """Soft-sDTW cost per query. queries (B, M), reference (N,) or (B, N).
 
-    Fully differentiable wrt queries, reference and gamma.
+    Fully differentiable wrt queries and reference (gamma is static).
     """
-    queries = jnp.asarray(queries, jnp.float32)
-    reference = jnp.asarray(reference, jnp.float32)
-    gamma = jnp.asarray(gamma, jnp.float32)
-    B, M = queries.shape
-    shared_ref = reference.ndim == 1
-    N = reference.shape[-1]
-
-    pad = ((M - 1, M - 1),) if shared_ref else ((0, 0), (M - 1, M - 1))
-    r_ext = jnp.pad(reference, pad)
-    ii = jnp.arange(M)
-
-    def diag_vals(t):
-        if shared_ref:
-            sl = lax.dynamic_slice(r_ext, (t,), (M,))
-        else:
-            sl = lax.dynamic_slice(r_ext, (0, t), (B, M))
-        return jnp.flip(sl, axis=-1)
-
-    def step(carry, t):
-        d1, d2, m_run, s_run = carry
-        rv = diag_vals(t)
-        cost = (queries - rv) ** 2
-        up = jnp.roll(d1, 1, axis=-1)
-        upleft = jnp.roll(d2, 1, axis=-1)
-        prev = _softmin3(d1, up, upleft, gamma)
-        prev = jnp.where(ii == 0, 0.0, prev)   # free start (row -1 == 0)
-        d0 = cost + prev
-        j = t - ii
-        d0 = jnp.where((j >= 0) & (j < N), d0, BIG)
-        # streaming soft-min over the bottom row via a running-max
-        # logsumexp of x = -D[M-1, j] / gamma (underflow-safe analogue of
-        # the paper's streaming __hmin2 fold).
-        bottom = d0[..., M - 1]
-        bottom_valid = (t >= M - 1) & (t - (M - 1) < N)
-        x = jnp.where(bottom_valid, -bottom / gamma, -BIG)
-        m_new = jnp.maximum(m_run, x)
-        s_run = s_run * jnp.exp(m_run - m_new) + jnp.exp(x - m_new)
-        return (d0, d1, m_new, s_run), None
-
-    d_init = jnp.full((B, M), BIG, jnp.float32)
-    m0 = jnp.full((B,), -BIG, jnp.float32)
-    s0 = jnp.zeros((B,), jnp.float32)
-    (_, _, m_run, s_run), _ = lax.scan(step, (d_init, d_init, m0, s0),
-                                       jnp.arange(M + N - 1))
-    return -gamma * (m_run + jnp.log(s_run))
+    spec = DPSpec(reduction="softmin", gamma=float(gamma), band=band)
+    return sdtw_engine(jnp.asarray(queries, jnp.float32),
+                       jnp.asarray(reference, jnp.float32),
+                       spec=spec, return_end=False)

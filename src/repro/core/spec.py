@@ -1,0 +1,240 @@
+"""DPSpec — ONE declarative recurrence specification shared by every
+sDTW backend.
+
+The paper's contribution is a single DP recurrence
+
+    D[i, j] = cost(q[i], r[j]) + reduce(D[i-1, j], D[i, j-1], D[i-1, j-1])
+
+executed through progressively lower-level machinery (scan oracle →
+anti-diagonal XLA engine → Pallas wavefront kernel → mesh pipeline).
+Before this module each implementation hard-coded squared-Euclidean
+cost, hard-min and a private infinity sentinel; ``DPSpec`` makes the
+recurrence a *value* that every backend consumes:
+
+  * ``distance``   — the per-cell cost: ``sqeuclidean`` (the paper's),
+                     ``abs`` (Manhattan / L1), or ``cosine``;
+  * ``reduction``  — ``hardmin`` (the paper), or ``softmin`` with
+                     temperature ``gamma`` (Cuturi & Blondel 2017),
+                     which makes the whole map differentiable;
+  * ``band``       — optional Sakoe–Chiba radius: cell (i, j) is valid
+                     iff ``|i - j| <= band`` on the (query-row,
+                     reference-column) grid.  ``None`` disables banding
+                     (and compiles the exact same graph as before the
+                     spec existed).  Note the mask is *static* in (i, j),
+                     so for subsequence matching it constrains how far
+                     from the main diagonal an alignment may wander —
+                     useful when queries are anchored near a known
+                     reference offset; ``band >= M + N`` is equivalent
+                     to unbanded;
+  * ``accum_dtype``— the accumulator dtype of the DP sweep.
+
+Backends declare which corners of this space they support via
+``repro.backends.registry.Capabilities``; ``repro.core.api.sdtw_batch``
+resolves a spec, asks the registry for a capable backend, and executes.
+
+The helpers here (``cell_cost``, ``reduce3``, ``cell_update``,
+``band_valid``) are written so that the default spec reproduces each
+backend's pre-spec computation graph bit-for-bit: hard-min keeps the
+``min(min(left, up), upleft)`` operand order, squared-Euclidean keeps
+the ``(q - r)**2`` form, and band/softmin branches are *Python-level*
+(spec fields are static under ``jax.jit``), so an unbanded hard-min
+spec adds zero ops to the sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+DISTANCES = ("sqeuclidean", "abs", "cosine")
+REDUCTIONS = ("hardmin", "softmin")
+
+# ----------------------------------------------------------- sentinels
+# The one home of every "effectively infinite" constant in the repo.
+# Each value is chosen for the dtype and differentiation regime of the
+# path that uses it:
+#
+INF = jnp.inf
+#   Hard-min accumulators (engine, ref, distributed) in f32/f64: +inf is
+#   the true identity of ``min`` and these paths are never
+#   differentiated, so inf - inf NaNs cannot reach a gradient; masked
+#   cells are overwritten with ``where`` before any read.
+#
+SOFT_BIG = 1e30
+#   Soft-min accumulators: must stay FINITE so that
+#   ``exp(-SOFT_BIG / gamma)`` underflows to exactly 0.0 without an
+#   ``inf - inf = NaN`` appearing inside the logsumexp *gradient*.
+#   1e30 leaves ~8 orders of magnitude of headroom below the f32 max
+#   (~3.4e38), so ``cost + SOFT_BIG`` and ``SOFT_BIG / gamma`` for any
+#   sane gamma cannot overflow to inf.
+#
+KERNEL_BIG = 3.0e38
+#   Pallas wavefront kernel (hard-min, configurable compute dtype):
+#   the largest round value representable in BOTH f32 and bf16 (bf16
+#   max ≈ 3.39e38).  The kernel casts its carries to ``compute_dtype``,
+#   so the sentinel must survive an f32 -> bf16 round trip without
+#   becoming inf (inf arithmetic differs between interpret and compiled
+#   modes).  Kept as a Python float so tracing never captures a traced
+#   constant.
+#
+PAD_VALUE = 1.0e6
+#   Reference PADDING columns in the kernel layout: ``(q - 1e6)**2 =
+#   1e12`` dominates any real z-normalized cost yet stays far from f32
+#   overflow even accumulated over long paths; ``|q - 1e6| ≈ 1e6`` does
+#   the same for the ``abs`` distance.  NOT safe for ``cosine`` — the
+#   cosine cost of a huge pad value is still O(1) — which is one reason
+#   the kernel backend declines cosine (see repro.backends.builtin).
+
+
+@dataclasses.dataclass(frozen=True)
+class DPSpec:
+    """Frozen, hashable recurrence spec — safe as a jit static argument."""
+
+    distance: str = "sqeuclidean"
+    reduction: str = "hardmin"
+    gamma: float = 1.0           # softmin temperature (static; > 0)
+    band: int | None = None      # Sakoe–Chiba radius, None = unbanded
+    accum_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.distance not in DISTANCES:
+            raise ValueError(f"unknown distance {self.distance!r}; "
+                             f"choose from {DISTANCES}")
+        if self.reduction not in REDUCTIONS:
+            raise ValueError(f"unknown reduction {self.reduction!r}; "
+                             f"choose from {REDUCTIONS}")
+        if self.reduction == "softmin" and not self.gamma > 0:
+            raise ValueError(f"softmin needs gamma > 0, got {self.gamma}")
+        if self.band is not None and self.band < 0:
+            raise ValueError(f"band must be >= 0 or None, got {self.band}")
+        jnp.dtype(self.accum_dtype)   # fail fast on bogus dtype strings
+
+    # ------------------------------------------------------- properties
+    @property
+    def accum(self):
+        return jnp.dtype(self.accum_dtype)
+
+    @property
+    def soft(self) -> bool:
+        return self.reduction == "softmin"
+
+    @property
+    def differentiable(self) -> bool:
+        """Soft-min specs yield NaN-free gradients end to end."""
+        return self.soft
+
+    @property
+    def big(self) -> float:
+        """The masked/initial-cell sentinel for this reduction (see the
+        sentinel notes above)."""
+        return SOFT_BIG if self.soft else INF
+
+    def describe(self) -> str:
+        parts = [self.distance, self.reduction]
+        if self.soft:
+            parts.append(f"gamma={self.gamma:g}")
+        if self.band is not None:
+            parts.append(f"band={self.band}")
+        return "/".join(parts)
+
+    # ---------------------------------------------------- cell helpers
+    def cell_cost(self, q, r):
+        """Elementwise local cost. Broadcasts like ``q - r``."""
+        if self.distance == "sqeuclidean":
+            return (q - r) ** 2
+        if self.distance == "abs":
+            return jnp.abs(q - r)
+        # cosine on scalar samples: 1 - qr/(|q||r|) ∈ [0, 2] (0 when the
+        # signs agree). Degenerate but well-defined; eps guards 0-values.
+        return 1.0 - (q * r) / (jnp.abs(q) * jnp.abs(r) + 1e-8)
+
+    def reduce3(self, left, up, upleft):
+        """The 3-way predecessor reduction. Hard-min keeps the operand
+        order min(min(left, up), upleft) every pre-spec backend used;
+        soft-min keeps softdtw's [left, up, upleft] stack order — both
+        so the default paths stay bit-identical."""
+        if not self.soft:
+            return jnp.minimum(jnp.minimum(left, up), upleft)
+        stacked = jnp.stack([left, up, upleft], axis=0)
+        return -self.gamma * jax.nn.logsumexp(-stacked / self.gamma, axis=0)
+
+    def cell_update(self, cost, left, up, upleft, *, free_start=None):
+        """One DP cell: ``cost + reduce3(...)``.
+
+        ``free_start`` (bool mask, True where the cell sits in query row
+        0) implements the subsequence boundary ``D[-1, j] = 0``: the
+        reduced predecessor is replaced by exactly 0 there, for hard and
+        soft reductions alike.
+        """
+        prev = self.reduce3(left, up, upleft)
+        if free_start is not None:
+            prev = jnp.where(free_start, jnp.zeros_like(prev), prev)
+        return cost + prev
+
+    def band_valid(self, i, j):
+        """Sakoe–Chiba validity mask ``|i - j| <= band`` (None when
+        unbanded, so callers can skip the op entirely)."""
+        if self.band is None:
+            return None
+        return jnp.abs(i - j) <= self.band
+
+
+DEFAULT_SPEC = DPSpec()
+
+
+def resolve_spec(spec: DPSpec | None = None, *, distance: str | None = None,
+                 reduction: str | None = None, gamma: float | None = None,
+                 band: int | None = None,
+                 accum_dtype: str | None = None) -> DPSpec:
+    """Merge convenience kwargs over an optional base spec.
+
+    ``resolve_spec()`` is the default spec; kwargs override individual
+    fields (``gamma`` implies ``reduction="softmin"`` unless reduction
+    is given explicitly).
+    """
+    base = spec if spec is not None else DEFAULT_SPEC
+    if gamma is not None and reduction is None and not base.soft:
+        reduction = "softmin"
+    updates = {k: v for k, v in [("distance", distance),
+                                 ("reduction", reduction),
+                                 ("gamma", gamma), ("band", band),
+                                 ("accum_dtype", accum_dtype)]
+               if v is not None}
+    return dataclasses.replace(base, **updates) if updates else base
+
+
+# --------------------------------------------------- shared validation
+# One home for the input checks that used to be duplicated between
+# ``core.api.sdtw_batch``, ``core.engine`` and ``search.SearchService``.
+
+def validate_batch_inputs(queries, reference, *, segment_width=None):
+    """The public batch contract: queries (B, M), reference (N,) shared
+    across the batch, non-empty everywhere.  (Per-query (B, N)
+    references are a backend capability — engine/ref accept them when
+    called directly, as the search service's pair sweeps do — but the
+    public ``sdtw_batch`` contract stays 1-D.)"""
+    if queries.ndim != 2:
+        raise ValueError(
+            f"queries must be 2-D (batch, length), got shape {queries.shape}")
+    if reference.ndim != 1:
+        raise ValueError(
+            f"reference must be 1-D (length,), got shape {reference.shape}")
+    if queries.shape[0] == 0:
+        raise ValueError("empty query batch (queries.shape[0] == 0)")
+    if queries.shape[1] == 0:
+        raise ValueError("zero-length queries (queries.shape[1] == 0)")
+    if reference.shape[0] == 0:
+        raise ValueError("empty reference (reference.shape[0] == 0)")
+    if segment_width is not None and segment_width < 1:
+        raise ValueError(f"segment_width must be >= 1, got {segment_width}")
+
+
+def validate_query_list(queries) -> None:
+    """The search-service contract: a non-empty list of 1-D queries."""
+    if len(queries) == 0:
+        raise ValueError("empty query batch")
+    for q in queries:
+        if q.ndim != 1:
+            raise ValueError(f"each query must be 1-D, got shape {q.shape}")

@@ -21,11 +21,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.spec import DEFAULT_SPEC, PAD_VALUE, DPSpec  # noqa: F401
+# PAD_VALUE re-exported: cost >= (q - 1e6)^2 never wins — the dtype
+# rationale (and why it rules out cosine) lives with the other
+# sentinels in core/spec.py.
 from repro.kernels.sdtw_wavefront import (LANES, SUBLANES,
                                           sdtw_wavefront_pallas)
 from repro.kernels.normalizer import normalizer_pallas
 
-PAD_VALUE = 1.0e6   # padded reference columns: cost >= (q - 1e6)^2 never wins
+
+def default_interpret() -> bool:
+    """Pallas ``interpret`` default: compiled on TPU, interpreted
+    everywhere else — so the same call site runs the real kernel on TPU
+    and the reference interpreter on CPU CI. Explicit ``interpret=``
+    arguments always win."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else interpret
 
 
 def ceil_to(x: int, m: int) -> int:
@@ -66,12 +80,13 @@ def _prep(queries, reference, *, segment_width, compute_dtype):
 
 
 @functools.partial(jax.jit, static_argnames=("m", "segment_width",
-                                             "interpret", "compute_dtype"))
+                                             "interpret", "compute_dtype",
+                                             "spec"))
 def _dispatch(q_prepped, r_layout, *, m, segment_width, compute_dtype,
-              interpret):
+              interpret, spec):
     costs, ends = sdtw_wavefront_pallas(
         q_prepped, r_layout, m=m, segment_width=segment_width,
-        compute_dtype=compute_dtype, interpret=interpret)
+        compute_dtype=compute_dtype, interpret=interpret, spec=spec)
     return costs.reshape(-1), ends.reshape(-1)
 
 
@@ -79,13 +94,18 @@ def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
                            batch: int, m: int, n: int,
                            segment_width: int = 8,
                            compute_dtype=jnp.float32,
-                           interpret: bool = True):
+                           interpret: bool | None = None,
+                           spec: DPSpec | None = None):
     """Dispatch the wavefront kernel on pre-packed operands.
 
     q_prepped: (G, SUBLANES, m + 2*(LANES-1)) from :func:`prepare_queries`
     r_layout:  (R, w, LANES) from :func:`swizzle_reference`
     batch:     true (un-padded) query count; m: query length; n: true
                reference length (pre-swizzle-padding).
+    interpret: None = auto (:func:`default_interpret`).
+    spec:      recurrence spec; None = squared-Euclidean hard-min
+               unbanded (the kernel's capability set is declared in
+               ``repro.backends.builtin``).
     Returns (costs (batch,) f32, end_indices (batch,) i32) with ends
     clamped to ``n - 1`` so padded reference columns can never leak out
     as match positions.
@@ -99,17 +119,20 @@ def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
     costs, ends = _dispatch(q_prepped, r_layout, m=m,
                             segment_width=segment_width,
                             compute_dtype=compute_dtype,
-                            interpret=interpret)
+                            interpret=_resolve_interpret(interpret),
+                            spec=DEFAULT_SPEC if spec is None else spec)
     return costs[:batch], jnp.minimum(ends[:batch], n - 1)
 
 
 def sdtw_wavefront(queries: jnp.ndarray, reference: jnp.ndarray, *,
                    segment_width: int = 8,
                    compute_dtype=jnp.float32,
-                   interpret: bool = True):
+                   interpret: bool | None = None,
+                   spec: DPSpec | None = None):
     """Batched subsequence DTW via the Pallas wavefront kernel.
 
     queries: (B, M) float; reference: (N,) float.
+    interpret: None = auto (compiled on TPU, interpreted elsewhere).
     Returns (costs (B,) f32, end_indices (B,) i32).
     """
     queries = jnp.asarray(queries)
@@ -120,17 +143,23 @@ def sdtw_wavefront(queries: jnp.ndarray, reference: jnp.ndarray, *,
                    compute_dtype=compute_dtype)
     return sdtw_wavefront_prepped(
         qk, rk, batch=B, m=M, n=N, segment_width=segment_width,
-        compute_dtype=compute_dtype, interpret=interpret)
+        compute_dtype=compute_dtype, interpret=interpret, spec=spec)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def normalize(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
-    """Batch z-normalization via the Pallas kernel. x: (B, L) -> (B, L)."""
-    x = jnp.asarray(x)
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def _normalize_padded(x, *, n: int, interpret: bool):
     B, L = x.shape
     b_pad = ceil_to(B, SUBLANES)
     l_pad = ceil_to(L, LANES)
     xp = jnp.pad(x, ((0, b_pad - B), (0, l_pad - L)))
     xp = xp.reshape(-1, SUBLANES, l_pad)
-    out = normalizer_pallas(xp, n=L, interpret=interpret)
+    out = normalizer_pallas(xp, n=n, interpret=interpret)
     return out.reshape(b_pad, l_pad)[:B, :L]
+
+
+def normalize(x: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
+    """Batch z-normalization via the Pallas kernel. x: (B, L) -> (B, L).
+    interpret: None = auto (compiled on TPU, interpreted elsewhere)."""
+    x = jnp.asarray(x)
+    return _normalize_padded(x, n=x.shape[1],
+                             interpret=_resolve_interpret(interpret))

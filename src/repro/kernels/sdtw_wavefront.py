@@ -36,15 +36,19 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.spec import DEFAULT_SPEC, KERNEL_BIG, DPSpec
+
 LANES = 128          # TPU VPU lane count (the paper's wavefront width = 64)
 SUBLANES = 8         # queries processed per grid step (sublane packing)
 NEG = -1           # sentinel for argmin init
-BIG = 3.0e38       # python float: avoids capturing a traced constant
+BIG = KERNEL_BIG   # python float: avoids capturing a traced constant
+#                    (value + dtype rationale live in core/spec.py)
 
 
 def _kernel(q_ref, r_ref, cost_ref, end_ref,
             boundary, minval, minidx, *,
-            m: int, w: int, num_ref_blocks: int, compute_dtype):
+            m: int, w: int, num_ref_blocks: int, compute_dtype,
+            spec: DPSpec):
     """One (batch-group, reference-block) grid cell.
 
     q_ref:    (1, SUBLANES, Mp)  reversed+padded queries (see ops.py)
@@ -94,8 +98,14 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
             up = jnp.where(is_row0, zero, up)       # virtual row -1 == 0
             upleft = jnp.where(is_row0, zero, upleft)
             rv = r_blk[k].astype(cdt)               # (LANES,) -> bcast (S, L)
-            cost = (qv - rv) ** 2
-            val = cost + jnp.minimum(jnp.minimum(left, up), upleft)
+            cost = spec.cell_cost(qv, rv)
+            val = spec.cell_update(cost, left, up, upleft)
+            if spec.band is not None:
+                # Sakoe–Chiba mask folded into the lane index math:
+                # lane l, segment slot k owns global column j_base + k
+                # while computing query row i_l — out-of-band cells read
+                # as BIG so no path can cross them.
+                val = jnp.where(spec.band_valid(i_l, j_base + k), val, big)
             new_row.append(val)
             if best_v is None:
                 best_v, best_k = val, jnp.zeros_like(i_l)
@@ -157,20 +167,33 @@ def sdtw_wavefront_pallas(q_rev_pad: jnp.ndarray,
                           r_layout: jnp.ndarray,
                           *, m: int, segment_width: int,
                           compute_dtype=jnp.float32,
-                          interpret: bool = True):
+                          interpret: bool = True,
+                          spec: DPSpec = DEFAULT_SPEC):
     """Raw pallas_call wrapper. Use ``repro.kernels.ops.sdtw_wavefront``.
 
     q_rev_pad: (G, SUBLANES, Mp) reversed queries, Mp = m + 2*(LANES-1)
     r_layout:  (R, w, LANES) pre-swizzled reference blocks
     returns (costs (G, SUBLANES) f32, ends (G, SUBLANES) i32)
+
+    Capability floor (``repro.backends`` enforces this for API callers;
+    direct callers get the same error here): hard-min reductions and
+    padding-safe distances only — the streaming (min, argmin) fold and
+    the PAD_VALUE reference padding are hard-min / growing-cost shaped.
     """
+    if spec.soft:
+        raise ValueError("kernel backend does not support soft-min: "
+                         "use engine")
+    if spec.distance == "cosine":
+        raise ValueError("kernel backend does not support cosine "
+                         "(PAD_VALUE padding columns would not lose the "
+                         "argmin): use engine or ref")
     G, S, Mp = q_rev_pad.shape
     R, w, L = r_layout.shape
     assert S == SUBLANES and L == LANES and w == segment_width
     assert Mp == m + 2 * (LANES - 1), (Mp, m)
 
     kernel = functools.partial(_kernel, m=m, w=w, num_ref_blocks=R,
-                               compute_dtype=compute_dtype)
+                               compute_dtype=compute_dtype, spec=spec)
     grid = (G, R)
     out_shape = (jax.ShapeDtypeStruct((G, SUBLANES), jnp.float32),
                  jax.ShapeDtypeStruct((G, SUBLANES), jnp.int32))

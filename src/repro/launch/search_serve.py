@@ -6,6 +6,10 @@ CPU-scale usage (reduced workload):
       --queries 64 --chunk 16 --k 2
   PYTHONPATH=src python -m repro.launch.search_serve --backend kernel
   PYTHONPATH=src python -m repro.launch.search_serve --no-prune
+  PYTHONPATH=src python -m repro.launch.search_serve --distance abs
+  PYTHONPATH=src python -m repro.launch.search_serve --band 256
+  PYTHONPATH=src python -m repro.launch.search_serve --reduction softmin \
+      --gamma 1.0      # soft specs disable the (inadmissible) cascade
 
 The driver mirrors launch/serve.py: build the index once (normalized +
 cached layouts), then drive the SearchService over arriving chunks the
@@ -17,6 +21,7 @@ from __future__ import annotations
 import argparse
 import time
 
+from repro.core.spec import DISTANCES, REDUCTIONS, DPSpec
 from repro.data.cbf import make_search_dataset
 from repro.search import ReferenceIndex, SearchConfig, SearchService
 
@@ -31,16 +36,24 @@ def main(argv=None):
                     help="queries per arriving batch")
     ap.add_argument("--k", type=int, default=1)
     ap.add_argument("--backend", default="engine",
-                    choices=["ref", "engine", "kernel"])
+                    choices=["ref", "engine", "kernel", "soft", "quantized"])
+    ap.add_argument("--distance", default="sqeuclidean", choices=DISTANCES)
+    ap.add_argument("--reduction", default="hardmin", choices=REDUCTIONS)
+    ap.add_argument("--gamma", type=float, default=1.0,
+                    help="softmin temperature (reduction=softmin)")
+    ap.add_argument("--band", type=int, default=None,
+                    help="Sakoe-Chiba radius (default: unbanded)")
     ap.add_argument("--no-prune", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    spec = DPSpec(distance=args.distance, reduction=args.reduction,
+                  gamma=args.gamma, band=args.band)
     refs, queries, labels = make_search_dataset(
         seed=args.seed, n_refs=args.refs,
         motifs_per_ref=args.motifs_per_ref, n_queries=args.queries,
         query_motifs=args.query_motifs)
-    index = ReferenceIndex()
+    index = ReferenceIndex(spec=spec)
     for name, series in refs.items():
         index.add(name, series)
     svc = SearchService(index, SearchConfig(
@@ -49,7 +62,8 @@ def main(argv=None):
     n = len(queries)
     print(f"[search] {len(index)} refs x {refs['track0'].shape[0]} samples, "
           f"{n} queries arriving in chunks of {args.chunk}, "
-          f"backend={args.backend}, prune={not args.no_prune}")
+          f"backend={svc.backend.name}, spec={svc.spec.describe()}, "
+          f"prune={svc.prune_active}")
     svc.topk(queries[:args.chunk], k=args.k)      # warm-up compile
     hits = 0
     dp_pairs = pairs = skipped = 0

@@ -24,6 +24,7 @@ from typing import Iterable
 import jax.numpy as jnp
 
 from repro.core.normalize import normalize_batch
+from repro.core.spec import DEFAULT_SPEC, DPSpec
 from repro.kernels import ops as _ops
 
 
@@ -39,10 +40,21 @@ class RefEntry:
 
 
 class ReferenceIndex:
-    """Many named references, prepared once, searched many times."""
+    """Many named references, prepared once, searched many times.
 
-    def __init__(self, *, normalize: bool = True):
+    ``spec`` is the index's default recurrence (distance / reduction /
+    band): the matching regime this reference set is meant to serve.
+    ``SearchService`` uses it whenever its own config does not override
+    the spec, so an index built for e.g. banded ``abs``-distance search
+    carries that intent with it.  The cached preparations themselves
+    (swizzled layouts, min/max envelopes) are spec-independent — the
+    same cache serves every recurrence.
+    """
+
+    def __init__(self, *, normalize: bool = True,
+                 spec: DPSpec | None = None):
         self.normalize = normalize
+        self.spec = DEFAULT_SPEC if spec is None else spec
         self._refs: dict[str, RefEntry] = {}
 
     # ------------------------------------------------------------ build

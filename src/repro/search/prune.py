@@ -36,7 +36,31 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-INF = jnp.inf
+from repro.core.spec import DEFAULT_SPEC, INF, DPSpec  # noqa: F401
+# INF re-exported for backward compatibility (prune.INF predates spec.py)
+
+# The envelope-gap argument only lower-bounds costs that are monotone in
+# |q - r| (the gap is a lower bound of |q - r| when both values lie
+# inside their block envelopes), and the coarse DP plus the top-k
+# threshold comparison are hard-min shaped: a soft-min sweep can land
+# BELOW any hard lower bound. Hence the cascade only runs for:
+PRUNABLE_DISTANCES = frozenset({"sqeuclidean", "abs"})
+
+
+def prune_admissible(spec: DPSpec) -> bool:
+    """True when the cascade's bounds are true lower bounds of the
+    spec'd sweep. Banding is always fine: a band only shrinks the path
+    set, so the unbanded bound still lower-bounds the banded cost."""
+    return (spec.reduction == "hardmin"
+            and spec.distance in PRUNABLE_DISTANCES)
+
+
+def _gap_cost(gap: jnp.ndarray, spec: DPSpec) -> jnp.ndarray:
+    """Envelope gap -> cost under the spec's distance (coarse analogue
+    of ``spec.cell_cost``)."""
+    if spec.distance == "abs":
+        return gap
+    return gap * gap
 
 
 def paa_envelopes(x: jnp.ndarray, chunk: int):
@@ -57,11 +81,18 @@ def paa_envelopes(x: jnp.ndarray, chunk: int):
     return xb.min(axis=-1), xb.max(axis=-1)
 
 
-def envelope_gap2(qlo, qhi, rlo, rhi):
-    """Squared gap between intervals [qlo, qhi] and [rlo, rhi] (0 if they
-    overlap) — the coarse analogue of the (q - r)**2 local cost."""
+def envelope_gap_cost(qlo, qhi, rlo, rhi, spec: DPSpec = DEFAULT_SPEC):
+    """Gap between intervals [qlo, qhi] and [rlo, rhi] (0 if they
+    overlap), mapped through the spec's distance — the coarse analogue
+    of ``spec.cell_cost``."""
     gap = jnp.maximum(jnp.maximum(rlo - qhi, qlo - rhi), 0.0)
-    return gap * gap
+    return _gap_cost(gap, spec)
+
+
+def envelope_gap2(qlo, qhi, rlo, rhi):
+    """Squared interval gap — the sqeuclidean case of
+    :func:`envelope_gap_cost` (kept for backward compatibility)."""
+    return envelope_gap_cost(qlo, qhi, rlo, rhi, DEFAULT_SPEC)
 
 
 def _sdtw_over_costs(C: jnp.ndarray) -> jnp.ndarray:
@@ -90,29 +121,35 @@ def _sdtw_over_costs(C: jnp.ndarray) -> jnp.ndarray:
     return jnp.min(last_row)
 
 
-@functools.partial(jax.jit, static_argnames=("query_chunk", "ref_chunk"))
+@functools.partial(jax.jit, static_argnames=("query_chunk", "ref_chunk",
+                                             "spec"))
 def lb_paa_sdtw(queries: jnp.ndarray, reference: jnp.ndarray, *,
-                query_chunk: int, ref_chunk: int) -> jnp.ndarray:
+                query_chunk: int, ref_chunk: int,
+                spec: DPSpec = DEFAULT_SPEC) -> jnp.ndarray:
     """Batched admissible lower bound. queries (B, M), reference (N,) -> (B,).
 
     lb_paa_sdtw(...)[b] <= sdtw(queries[b], reference) for every b, for
     any chunk sizes >= 1. (query_chunk=ref_chunk=1 recovers the exact
     sweep.) Bounds are only valid against a DP over the *same* arrays —
-    normalize first, bound second, exactly like the service does.
+    normalize first, bound second, exactly like the service does — and
+    only for specs where :func:`prune_admissible` holds; the gap cost
+    follows ``spec.distance``.
     """
     qlo, qhi = paa_envelopes(queries, query_chunk)
     rlo, rhi = paa_envelopes(reference, ref_chunk)
 
     def one(ql, qh):
-        C = envelope_gap2(ql[:, None], qh[:, None], rlo[None, :], rhi[None, :])
+        C = envelope_gap_cost(ql[:, None], qh[:, None],
+                              rlo[None, :], rhi[None, :], spec)
         return _sdtw_over_costs(C)
 
     return jax.vmap(one)(qlo, qhi)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("spec",))
 def lb_keogh_sdtw(queries: jnp.ndarray, rlo: jnp.ndarray,
-                  rhi: jnp.ndarray) -> jnp.ndarray:
+                  rhi: jnp.ndarray, *,
+                  spec: DPSpec = DEFAULT_SPEC) -> jnp.ndarray:
     """Fast admissible bound: full-resolution queries against a
     reference *interval series* (the cached [lo, hi] envelopes), swept
     anti-diagonally like ``core.engine`` — (M + Nc - 1) fused vector
@@ -144,7 +181,7 @@ def lb_keogh_sdtw(queries: jnp.ndarray, rlo: jnp.ndarray,
         lo = lax.dynamic_slice(lo_ext, (start,), (M,))
         hi = lax.dynamic_slice(hi_ext, (start,), (M,))
         gap = jnp.maximum(jnp.maximum(lo - q, q - hi), 0.0)
-        cost = gap * gap
+        cost = _gap_cost(gap, spec)
         up = jnp.roll(d1, 1, axis=-1)
         upleft = jnp.roll(d2, 1, axis=-1)
         prev = jnp.minimum(jnp.minimum(d1, up), upleft)
@@ -165,11 +202,13 @@ def lb_keogh_sdtw(queries: jnp.ndarray, rlo: jnp.ndarray,
     return best
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("spec",))
 def lb_keogh_sdtw_multi(queries: jnp.ndarray, rlo: jnp.ndarray,
-                        rhi: jnp.ndarray) -> jnp.ndarray:
+                        rhi: jnp.ndarray, *,
+                        spec: DPSpec = DEFAULT_SPEC) -> jnp.ndarray:
     """Stage-0 fan-out: bounds for every (query, reference) pair in one
     dispatch. queries: (B, M); rlo/rhi: (R, Nc) stacked equal-length
     envelopes -> (B, R)."""
-    return jax.vmap(lambda lo, hi: lb_keogh_sdtw(queries, lo, hi))(
+    return jax.vmap(
+        lambda lo, hi: lb_keogh_sdtw(queries, lo, hi, spec=spec))(
         rlo, rhi).T

@@ -22,6 +22,15 @@ strictly exceeds the k-th best true cost found so far, so ``topk``
 returns results identical to a brute-force ``sdtw_batch`` loop over
 every registered reference (same costs and end indices, any backend).
 Ties break by registration order, matching the brute-force iteration.
+
+The recurrence itself is a ``DPSpec`` (``config.spec``, falling back to
+the index's default): top-k search runs banded and under any distance /
+reduction the chosen backend supports.  The pruning cascade only
+engages for specs whose bounds are admissible
+(:func:`repro.search.prune.prune_admissible` — hard-min with a
+gap-monotone distance); for soft-min or cosine specs the service
+transparently falls back to full sweeps, still exact for the spec'd
+recurrence.
 """
 
 from __future__ import annotations
@@ -32,23 +41,25 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine as _engine
-from repro.core import ref as _ref
+from repro.backends import registry
 from repro.core.api import sdtw_batch
 from repro.core.normalize import normalize_batch
+from repro.core.spec import DPSpec, validate_query_list
 from repro.kernels import ops as _ops
 from repro.kernels.ops import ceil_to
 from repro.kernels.sdtw_wavefront import SUBLANES
 from repro.search.batcher import QueryBatcher, grid_size
 from repro.search.index import ReferenceIndex
-from repro.search.prune import lb_keogh_sdtw, lb_keogh_sdtw_multi
+from repro.search.prune import (lb_keogh_sdtw, lb_keogh_sdtw_multi,
+                                prune_admissible)
 
 
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
-    backend: str = "engine"          # "ref" | "engine" | "kernel"
+    backend: str = "engine"          # any registry backend or alias
+    spec: DPSpec | None = None       # recurrence; None = the index's spec
     segment_width: int = 8           # kernel backend only
-    interpret: bool = True           # kernel backend only (True on CPU)
+    interpret: bool | None = None    # kernel backend only (None = auto)
     normalize: bool = True           # must match the index's setting
     prune: bool = True
     stages: tuple = (4, 2)           # ref_chunk per cascade stage, coarse
@@ -105,6 +116,20 @@ class SearchService:
             raise ValueError("prune=True needs at least one cascade stage")
         self.index = index
         self.config = config
+        # resolve the recurrence + backend ONCE: alias expansion and
+        # capability validation fail fast here, not mid-search
+        spec = config.spec if config.spec is not None else index.spec
+        self.backend, self.spec = registry.resolve(config.backend, spec)
+        if self.backend.name == "distributed":
+            raise ValueError(
+                "SearchService does not support the distributed backend "
+                "yet: no mesh plumbing through ExecutionPlan.options "
+                "(see ROADMAP open items)")
+        # the cascade's bounds are lower bounds of the EXACT spec'd
+        # sweep, and only for hard-min, gap-monotone specs; approximate
+        # backends (quantized) or other specs fall back to full sweeps
+        self.prune_active = (config.prune and prune_admissible(self.spec)
+                             and self.backend.capabilities.exact)
         self.stats = SearchStats()
 
     # ------------------------------------------------------------ topk
@@ -126,7 +151,7 @@ class SearchService:
         # queries packed into the sweeps' fixed shapes and equal-length
         # reference envelopes stacked into one fan-out dispatch
         lb0 = np.zeros((B, R))
-        if cfg.prune:
+        if self.prune_active:
             by_nc: dict[int, list[int]] = {}
             envs = {}
             for j, e in enumerate(refs):
@@ -139,13 +164,13 @@ class SearchService:
             for batch in batcher.pack(qlist):
                 for nc, refidx in by_nc.items():
                     rlo, rhi = stacked[nc]
-                    vals = np.asarray(
-                        lb_keogh_sdtw_multi(batch.queries, rlo, rhi))
+                    vals = np.asarray(lb_keogh_sdtw_multi(
+                        batch.queries, rlo, rhi, spec=self.spec))
                     lb0[np.ix_(list(batch.ids), refidx)] = \
                         vals[:batch.n_real]
 
         # --- per-query pending references, best-bound-first
-        if cfg.prune:
+        if self.prune_active:
             pending = [list(np.argsort(lb0[i], kind="stable"))
                        for i in range(B)]
         else:
@@ -173,7 +198,7 @@ class SearchService:
             for i in range(B):
                 while pending[i]:
                     j = pending[i][0]
-                    if cfg.prune and lb0[i, j] > threshold(i) + \
+                    if self.prune_active and lb0[i, j] > threshold(i) + \
                             cfg.prune_margin:
                         # pending is sorted by lb0: everything left prunes
                         self.stats.pruned_stage0 += len(pending[i])
@@ -186,14 +211,21 @@ class SearchService:
             rounds += 1
             if not nominations:
                 break
-            if cfg.prune:
+            if self.prune_active:
                 nominations = self._later_stages(nominations, refs, qlist,
                                                  threshold)
-            if cfg.backend == "kernel":
+            if self.backend.name == "kernel":
                 # per-reference batches: the kernel wants one shared,
                 # pre-swizzled reference per dispatch
                 for j, qids in sorted(nominations.items()):
                     self._sweep_kernel(refs[j], j, qids, qlist, found)
+            elif not self.backend.capabilities.per_query_reference:
+                # backends whose semantics need ONE reference per
+                # dispatch (e.g. quantized: the codebook is built from
+                # the reference) — stacking different references would
+                # silently change the recurrence
+                for j, qids in sorted(nominations.items()):
+                    self._sweep_shared(refs[j], j, qids, qlist, found)
             else:
                 self._sweep_pairs(nominations, refs, qlist, found)
 
@@ -222,8 +254,8 @@ class SearchService:
                 batcher = QueryBatcher(max_slots=cfg.max_slots)
                 for batch in batcher.pack([qlist[i] for i in qids],
                                           ids=qids):
-                    vals = np.asarray(
-                        lb_keogh_sdtw(batch.queries, rlo, rhi))
+                    vals = np.asarray(lb_keogh_sdtw(
+                        batch.queries, rlo, rhi, spec=self.spec))
                     for row, i in enumerate(batch.ids):
                         if vals[row] > threshold(i) + cfg.prune_margin:
                             self.stats.pruned_later += 1
@@ -245,7 +277,28 @@ class SearchService:
             rk = self.index.layout(entry.name, cfg.segment_width)
             costs, ends = _ops.sdtw_wavefront_prepped(
                 qk, rk, batch=batch.n_real, m=batch.length, n=entry.length,
+                segment_width=cfg.segment_width, interpret=cfg.interpret,
+                spec=self.spec)
+            costs, ends = np.asarray(costs), np.asarray(ends)
+            for row, i in enumerate(batch.ids):
+                bisect.insort(found[i], (float(costs[row]), order,
+                                         int(ends[row]), entry.name))
+            self.stats.dp_pairs += batch.n_real
+            self.stats.dp_calls += 1
+
+    def _sweep_shared(self, entry, order: int, qids: list[int], qlist,
+                      found):
+        """Full sweep of the nominated queries against ONE shared
+        reference through the registry backend — for backends without
+        per-query reference batching (their semantics are defined per
+        reference, e.g. the quantized codebook)."""
+        cfg = self.config
+        batcher = QueryBatcher(max_slots=cfg.max_slots)
+        for batch in batcher.pack([qlist[i] for i in qids], ids=qids):
+            plan = registry.ExecutionPlan(
+                queries=batch.queries, reference=entry.series,
                 segment_width=cfg.segment_width, interpret=cfg.interpret)
+            costs, ends = self.backend.execute(self.spec, plan)
             costs, ends = np.asarray(costs), np.asarray(ends)
             for row, i in enumerate(batch.ids):
                 bisect.insort(found[i], (float(costs[row]), order,
@@ -254,17 +307,16 @@ class SearchService:
             self.stats.dp_calls += 1
 
     def _sweep_pairs(self, nominations: dict, refs, qlist, found):
-        """Full DP of one round's (query, reference) pairs for the XLA
-        backends, which support a per-row reference batch: all pairs with
-        the same (query length, reference length) go in ONE stacked call,
-        so a round costs O(distinct shapes) dispatches, not O(refs)."""
+        """Full DP of one round's (query, reference) pairs for backends
+        with per-row reference batching: all pairs with the same (query
+        length, reference length) go in ONE stacked call, so a round
+        costs O(distinct shapes) dispatches, not O(refs)."""
         cfg = self.config
         shapes: dict[tuple, list[tuple]] = {}    # (M, N) -> [(i, j)]
         for j, qids in sorted(nominations.items()):
             for i in qids:
                 key = (int(qlist[i].shape[0]), refs[j].length)
                 shapes.setdefault(key, []).append((i, j))
-        fn = _ref.sdtw_ref if cfg.backend == "ref" else _engine.sdtw_engine
         for (m, n), pairs in shapes.items():
             qg = jnp.stack([qlist[i] for i, _ in pairs])
             rg = jnp.stack([refs[j].series for _, j in pairs])
@@ -274,7 +326,10 @@ class SearchService:
             qg = jnp.pad(qg, ((0, g - p), (0, 0)))
             rg = jnp.concatenate(
                 [rg, jnp.broadcast_to(rg[:1], (g - p, n))]) if g > p else rg
-            costs, ends = fn(qg, rg)
+            plan = registry.ExecutionPlan(
+                queries=qg, reference=rg,
+                segment_width=cfg.segment_width, interpret=cfg.interpret)
+            costs, ends = self.backend.execute(self.spec, plan)
             costs, ends = np.asarray(costs)[:p], np.asarray(ends)[:p]
             for row, (i, j) in enumerate(pairs):
                 bisect.insort(found[i], (float(costs[row]), j,
@@ -288,24 +343,20 @@ class SearchService:
             qs = list(jnp.asarray(queries))
         else:
             qs = [jnp.asarray(q) for q in queries]
-            for q in qs:
-                if q.ndim != 1:
-                    raise ValueError(
-                        f"each query must be 1-D, got shape {q.shape}")
-        if len(qs) == 0:
-            raise ValueError("empty query batch")
+        validate_query_list(qs)              # shared contract (core.spec)
         if self.config.normalize:
             qs = [normalize_batch(q) for q in qs]
         return qs
 
 
 def brute_force_topk(index: ReferenceIndex, queries, k: int = 1, *,
-                     backend: str = "engine", segment_width: int = 8,
-                     interpret: bool = True) -> list[list[Match]]:
+                     backend: str = "engine", spec: DPSpec | None = None,
+                     segment_width: int = 8,
+                     interpret: bool | None = None) -> list[list[Match]]:
     """Reference implementation: full DP of every query against every
     registered reference — what SearchService.topk must reproduce."""
     svc = SearchService(index, SearchConfig(
-        backend=backend, normalize=index.normalize, prune=False,
+        backend=backend, spec=spec, normalize=index.normalize, prune=False,
         segment_width=segment_width, interpret=interpret))
     qs = svc._as_query_list(queries)
     groups: dict[int, list[int]] = {}
@@ -316,7 +367,7 @@ def brute_force_topk(index: ReferenceIndex, queries, k: int = 1, *,
         qg = jnp.stack([qs[i] for i in qids])
         for order, e in enumerate(index.references()):
             costs, ends = sdtw_batch(qg, e.series, normalize=False,
-                                     backend=backend,
+                                     backend=backend, spec=svc.spec,
                                      segment_width=segment_width,
                                      interpret=interpret)
             costs, ends = np.asarray(costs), np.asarray(ends)

@@ -1,0 +1,113 @@
+"""Backend registry: registration, alias resolution, capability
+validation, and selection."""
+import numpy as np
+import pytest
+
+from repro.backends import registry
+from repro.backends.registry import Backend, Capabilities
+from repro.core.api import sdtw_batch
+from repro.core.spec import DEFAULT_SPEC, DPSpec
+
+
+def test_builtins_registered():
+    names = registry.names()
+    for expected in ("ref", "engine", "kernel", "quantized", "distributed",
+                     "soft"):
+        assert expected in names, names
+
+
+def test_unknown_backend():
+    with pytest.raises(ValueError, match="unknown backend"):
+        registry.get("gpu")
+
+
+def test_kernel_rejects_softmin_with_suggestion():
+    spec = DPSpec(reduction="softmin")
+    with pytest.raises(ValueError, match="does not support soft-min"):
+        registry.validate("kernel", spec)
+    with pytest.raises(ValueError, match="engine"):
+        registry.validate("kernel", spec)
+
+
+def test_kernel_rejects_cosine():
+    with pytest.raises(ValueError, match="cosine"):
+        registry.validate("kernel", DPSpec(distance="cosine"))
+
+
+def test_distributed_rejects_softmin():
+    with pytest.raises(ValueError, match="soft-min"):
+        registry.validate("distributed", DPSpec(reduction="softmin"))
+
+
+def test_soft_alias_rewrites_spec():
+    backend, spec = registry.resolve("soft", DEFAULT_SPEC)
+    assert backend.name == "engine"
+    assert spec.reduction == "softmin"
+    # explicit gamma survives the alias rewrite
+    _, spec2 = registry.resolve("soft", DPSpec(gamma=0.25,
+                                               reduction="softmin"))
+    assert spec2.gamma == 0.25
+
+
+def test_alias_overrides_apply_in_every_capability_query():
+    """supports/validate/select must see the alias-rewritten spec, not
+    the caller's raw spec — 'soft' is capability-checked as soft-min."""
+    assert registry.supports("soft", DEFAULT_SPEC)
+    assert registry.validate("soft", DEFAULT_SPEC).name == "engine"
+    backend, spec = registry.select(DEFAULT_SPEC, preferred="soft")
+    assert backend.name == "engine"
+    assert spec.reduction == "softmin"   # overrides travel with the pick
+
+
+def test_select_prefers_engine_and_respects_capability():
+    assert registry.select(DEFAULT_SPEC)[0].name == "engine"
+    assert registry.select(DPSpec(reduction="softmin"))[0].name == "engine"
+    backend, spec = registry.select(DEFAULT_SPEC, preferred="kernel")
+    assert backend.name == "kernel" and spec == DEFAULT_SPEC
+    with pytest.raises(ValueError, match="does not support"):
+        registry.select(DPSpec(reduction="softmin"), preferred="kernel")
+
+
+def test_capable_ordering_and_exactness():
+    hard = registry.capable(DEFAULT_SPEC)
+    assert hard[0] == "engine" and "kernel" in hard
+    exact = registry.capable(DEFAULT_SPEC, exact_only=True)
+    assert "quantized" not in exact and "quantized" in hard
+
+
+def test_capability_rows_table():
+    rows = registry.capability_rows()
+    assert {r["backend"] for r in rows} >= {"ref", "engine", "kernel",
+                                            "quantized", "distributed"}
+    kernel = next(r for r in rows if r["backend"] == "kernel")
+    assert "cosine" not in kernel["distances"]
+    assert kernel["reductions"] == "hardmin"
+
+
+def test_duplicate_registration_rejected():
+    eng = registry.get("engine")
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register(Backend("engine", eng.capabilities, eng.execute))
+
+
+def test_unsupported_reason_banding():
+    caps = Capabilities(distances=frozenset({"sqeuclidean"}),
+                        reductions=frozenset({"hardmin"}), banding=False)
+    assert caps.unsupported_reason(DPSpec(band=3)) == "banding"
+    assert caps.unsupported_reason(DEFAULT_SPEC) is None
+
+
+def test_api_backend_none_selects(rng):
+    q = rng.normal(size=(2, 8)).astype(np.float32)
+    r = rng.normal(size=(64,)).astype(np.float32)
+    c0, e0 = sdtw_batch(q, r, backend=None)
+    c1, e1 = sdtw_batch(q, r, backend="engine")
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+
+
+def test_api_distributed_without_mesh_errors(rng):
+    q = rng.normal(size=(2, 8)).astype(np.float32)
+    r = rng.normal(size=(64,)).astype(np.float32)
+    with pytest.raises(ValueError, match="mesh"):
+        sdtw_batch(q, r, backend="distributed")

@@ -7,11 +7,13 @@ import pytest
 
 from repro.core.normalize import normalize_batch
 from repro.core.ref import sdtw_ref
+from repro.core.spec import DPSpec
 from repro.data.cbf import make_search_dataset
 from repro.kernels.sdtw_wavefront import SUBLANES
 from repro.search import (QueryBatcher, ReferenceIndex, SearchConfig,
                           SearchService, brute_force_topk, grid_size,
-                          lb_keogh_sdtw, lb_paa_sdtw, paa_envelopes)
+                          lb_keogh_sdtw, lb_paa_sdtw, paa_envelopes,
+                          prune_admissible)
 
 
 @pytest.fixture(scope="module")
@@ -180,6 +182,67 @@ def test_service_prunes_search_workload(workload):
     assert svc.stats.skip_fraction >= 0.3
     hits = sum(m[0].reference == labels[i] for i, m in enumerate(matches))
     assert hits == len(queries)
+
+
+@pytest.mark.parametrize("backend,spec", [
+    ("engine", DPSpec(distance="abs")),            # new distance, pruned
+    ("kernel", DPSpec(distance="abs")),            # ... through the kernel
+    ("engine", DPSpec(band=900)),                  # banded hard-min, pruned
+    ("engine", DPSpec(reduction="softmin", gamma=1.0, band=900)),
+], ids=["abs-engine", "abs-kernel", "banded-engine", "soft-banded-engine"])
+def test_service_spec_combinations_equal_brute_force(workload, backend,
+                                                     spec):
+    """The spec layer's end-to-end contract: top-k search stays exact
+    for the spec'd recurrence under new distances, banding and soft-min
+    — with the cascade auto-disabled where its bounds are inadmissible."""
+    index, queries, _ = workload
+    svc = SearchService(index, SearchConfig(backend=backend, spec=spec))
+    assert svc.prune_active == prune_admissible(spec)
+    got = svc.topk(queries[:4], k=2)
+    want = brute_force_topk(index, queries[:4], k=2, backend=backend,
+                            spec=spec)
+    assert got == want
+    st = svc.stats
+    assert st.dp_pairs + st.skipped == st.pairs
+
+
+def test_index_spec_is_service_default(workload):
+    """An index built for a matching regime carries it: the service
+    falls back to index.spec when the config doesn't override."""
+    index, queries, _ = workload
+    spec = DPSpec(distance="abs")
+    idx2 = ReferenceIndex(spec=spec)
+    for e in index.references():
+        idx2.add(e.name, e.series)
+    # idx2 already normalized the entries once; re-normalizing is a no-op
+    svc = SearchService(idx2, SearchConfig(backend="engine"))
+    assert svc.spec == spec
+    got = svc.topk(queries[:3], k=1)
+    want = brute_force_topk(idx2, queries[:3], k=1, backend="engine",
+                            spec=spec)
+    assert got == want
+
+
+def test_service_rejects_incapable_backend(workload):
+    index, _, _ = workload
+    with pytest.raises(ValueError, match="does not support soft-min"):
+        SearchService(index, SearchConfig(
+            backend="kernel", spec=DPSpec(reduction="softmin")))
+    with pytest.raises(ValueError, match="distributed"):
+        SearchService(index, SearchConfig(backend="distributed"))
+
+
+def test_service_quantized_backend_equals_brute_force(workload):
+    """Backends without per-query reference batching (the quantized
+    codebook is built per reference) must sweep one reference per
+    dispatch — and their approximation makes the cascade's exact-DP
+    bounds inadmissible, so pruning must stay off."""
+    index, queries, _ = workload
+    svc = SearchService(index, SearchConfig(backend="quantized"))
+    assert not svc.prune_active          # approximate backend: no pruning
+    got = svc.topk(queries[:3], k=2)
+    want = brute_force_topk(index, queries[:3], k=2, backend="quantized")
+    assert got == want
 
 
 def test_service_validation(workload, rng):

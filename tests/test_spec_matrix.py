@@ -1,0 +1,167 @@
+"""The DPSpec scenario matrix: every exact backend that declares support
+for a (distance × reduction × band) combination must agree with the
+numpy oracle under that spec — plus the two continuity contracts
+(gamma -> 0 recovers hard-min, band=inf recovers unbanded) and the
+differentiability of soft specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import registry
+from repro.core.api import sdtw_batch
+from repro.core.engine import sdtw_engine
+from repro.core.ref import sdtw_numpy
+from repro.core.spec import DPSpec
+
+B, M, N = 3, 14, 96
+
+SPECS = [
+    DPSpec(),
+    DPSpec(distance="abs"),
+    DPSpec(distance="cosine"),
+    DPSpec(reduction="softmin", gamma=1.0),
+    DPSpec(reduction="softmin", gamma=0.1, band=24),
+    DPSpec(band=24),
+    DPSpec(band=0),
+    DPSpec(distance="abs", band=24),
+    DPSpec(distance="abs", reduction="softmin", gamma=1.0),
+]
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(11)
+    q = rng.normal(size=(B, M)).astype(np.float32)
+    r = rng.normal(size=(N,)).astype(np.float32)
+    return q, r
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+def test_capable_backends_match_oracle(data, spec):
+    """The acceptance contract of the spec layer: the registry's
+    capability declarations are honest — whoever claims a spec computes
+    the same recurrence the trusted loop computes."""
+    q, r = data
+    oracle = [sdtw_numpy(q[b], r, spec=spec) for b in range(B)]
+    backends = [n for n in registry.capable(spec, exact_only=True)
+                if n != "distributed"]      # needs a multi-device mesh
+    assert "ref" in backends and "engine" in backends
+    for name in backends:
+        c, e = sdtw_batch(q, r, backend=name, spec=spec, normalize=False,
+                          segment_width=2)
+        for b in range(B):
+            c0, e0 = oracle[b]
+            np.testing.assert_allclose(
+                float(c[b]), c0, rtol=2e-3, atol=2e-3,
+                err_msg=f"{name} disagrees with oracle under "
+                        f"{spec.describe()} (query {b})")
+            # end indices: exact for hard-min, except cosine, whose
+            # near-discrete scalar costs tie massively and the f32
+            # backends break ties differently than the f64 oracle
+            if not spec.soft and spec.distance != "cosine":
+                assert int(e[b]) == e0, (name, spec.describe(), b)
+
+
+def test_gamma_to_zero_recovers_hardmin(data):
+    """softmin --gamma->0--> hardmin, banded and unbanded."""
+    q, r = data
+    for band in (None, 24):
+        hard, _ = sdtw_engine(q, r, spec=DPSpec(band=band))
+        soft = sdtw_engine(
+            q, r, spec=DPSpec(reduction="softmin", gamma=1e-3, band=band),
+            return_end=False)
+        np.testing.assert_allclose(np.asarray(soft), np.asarray(hard),
+                                   rtol=1e-2, atol=1e-2)
+
+
+def test_band_infinite_matches_unbanded(data):
+    """A band wider than the DP matrix is a no-op for every backend."""
+    q, r = data
+    wide = DPSpec(band=M + N)
+    for name in ("ref", "engine", "kernel"):
+        c0, e0 = sdtw_batch(q, r, backend=name, normalize=False,
+                            segment_width=2)
+        c1, e1 = sdtw_batch(q, r, backend=name, spec=wide, normalize=False,
+                            segment_width=2)
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(c0),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
+
+
+def test_band_tightens_cost_monotonically(data):
+    """Shrinking the band restricts the path set, so costs only grow."""
+    q, r = data
+    prev = None
+    for band in (M + N, 24, 8, 2):
+        c, _ = sdtw_engine(q, r, spec=DPSpec(band=band))
+        if prev is not None:
+            assert (np.asarray(c) >= np.asarray(prev) - 1e-5).all(), band
+        prev = c
+
+
+def test_band_blocking_entire_bottom_row_is_inf(rng):
+    """M > N + band: no bottom-row cell is in band, so there is no valid
+    alignment — every backend (soft included) must report +inf, not a
+    finite ~sentinel logsumexp."""
+    q = rng.normal(size=(2, 32)).astype(np.float32)
+    r = rng.normal(size=(16,)).astype(np.float32)
+    for spec in (DPSpec(band=2), DPSpec(reduction="softmin", band=2)):
+        c_np = [sdtw_numpy(q[b], r, spec=spec)[0] for b in range(2)]
+        assert all(np.isinf(c) for c in c_np)
+        c_eng = np.asarray(sdtw_engine(q, r, spec=spec, return_end=False))
+        c_ref = np.asarray(sdtw_batch(q, r, backend="ref", spec=spec,
+                                      normalize=False)[0])
+        assert np.isinf(c_eng).all(), (spec.describe(), c_eng)
+        assert np.isinf(c_ref).all(), (spec.describe(), c_ref)
+
+
+def test_soft_spec_is_differentiable(data):
+    """Soft specs (banded included) must give finite, useful gradients —
+    the former core.softdtw contract, now an engine property."""
+    q, r = data
+    spec = DPSpec(reduction="softmin", gamma=0.5, band=24)
+
+    def loss(qq):
+        return jnp.sum(sdtw_engine(qq, r, spec=spec, return_end=False))
+
+    g = jax.grad(loss)(jnp.asarray(q))
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.linalg.norm(g)) > 0
+
+
+def test_quantized_follows_spec(data):
+    """The quantized backend approximates whatever recurrence the spec
+    selects (here: abs distance) rather than hard-coding its own."""
+    q, r = data
+    spec = DPSpec(distance="abs")
+    c8, e8 = sdtw_batch(q, r, backend="quantized", spec=spec)
+    c32, _ = sdtw_batch(q, r, backend="engine", spec=spec)
+    c8, c32 = np.asarray(c8), np.asarray(c32)
+    assert np.isfinite(c8).all()
+    rel = np.abs(c8 - c32) / np.maximum(c32, 1e-6)
+    assert np.median(rel) < 0.15, rel
+
+
+@pytest.mark.filterwarnings("ignore:Explicitly requested dtype")
+def test_accum_dtype_is_spec_driven(data):
+    """float64 truncates to float32 without jax_enable_x64 — either way
+    the spec's accum_dtype must drive the sweep without changing the
+    default-precision result."""
+    q, r = data
+    c64, _ = sdtw_engine(q, r, spec=DPSpec(accum_dtype="float64"))
+    c32, _ = sdtw_engine(q, r)
+    assert np.asarray(c64).dtype == np.float64 or not jax.config.jax_enable_x64
+    np.testing.assert_allclose(np.asarray(c64, np.float32),
+                               np.asarray(c32), rtol=1e-4)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown distance"):
+        DPSpec(distance="euclidean")
+    with pytest.raises(ValueError, match="unknown reduction"):
+        DPSpec(reduction="min")
+    with pytest.raises(ValueError, match="gamma"):
+        DPSpec(reduction="softmin", gamma=0.0)
+    with pytest.raises(ValueError, match="band"):
+        DPSpec(band=-1)
