@@ -1,0 +1,84 @@
+"""Alignment overhead: matched windows on vs distance-only, per backend.
+
+The start-pointer lanes ride the existing DP carries (one int32 lane
+pair next to the f32 lanes; same pallas_call on the kernel path), so
+windows should cost a small constant factor, not a second sweep — this
+bench measures that factor per window-capable backend and cross-checks
+the windows against the full-matrix backtrack oracle while it is at it.
+
+  PYTHONPATH=src python -m benchmarks.align_throughput
+  PYTHONPATH=src python -m benchmarks.align_throughput --ci   # tiny, asserts
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import time_fn
+
+
+BACKENDS = ("engine", "kernel", "ref")
+
+
+def run(*, full: bool = False, ci: bool = False, csv: list | None = None):
+    import jax
+    import jax.numpy as jnp
+    from repro.align import sdtw_window
+    from repro.align.oracle import oracle_window
+    from repro.core.api import sdtw_batch
+
+    if ci:
+        B, M, N, reps = 4, 12, 80, 1
+    elif full:
+        B, M, N, reps = 64, 128, 4096, 3
+    else:
+        B, M, N, reps = 16, 64, 1024, 3
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, M)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(N,)).astype(np.float32))
+    seg = 2 if ci else 4
+
+    print(f"[align_throughput] B={B} M={M} N={N} "
+          f"({'ci' if ci else 'full' if full else 'reduced'})")
+    oracle = [oracle_window(np.asarray(q)[b], np.asarray(r))
+              for b in range(B)] if (ci or not full) else None
+    for backend in BACKENDS:
+        def dist_only():
+            return jax.block_until_ready(sdtw_batch(
+                q, r, backend=backend, normalize=False,
+                segment_width=seg))
+
+        def windows():
+            return jax.block_until_ready(sdtw_window(
+                q, r, backend=backend, normalize=False,
+                segment_width=seg))
+
+        t0 = time_fn(dist_only, warmup=1, runs=reps)
+        t1 = time_fn(windows, warmup=1, runs=reps)
+        costs, starts, ends = windows()
+        if oracle is not None:
+            for b in range(B):
+                _, s0, e0 = oracle[b]
+                assert (int(starts[b]), int(ends[b])) == (s0, e0), \
+                    (backend, b, int(starts[b]), int(ends[b]), s0, e0)
+        overhead = t1 / t0 if t0 > 0 else float("nan")
+        print(f"  {backend:7s}: distance-only {t0 * 1e3:8.2f} ms   "
+              f"windows {t1 * 1e3:8.2f} ms   overhead {overhead:5.2f}x")
+        if csv is not None:
+            csv.append({"bench": "align_throughput", "backend": backend,
+                        "B": B, "M": M, "N": N,
+                        "ms_distance": round(t0 * 1e3, 3),
+                        "ms_windows": round(t1 * 1e3, 3),
+                        "overhead": round(overhead, 3)})
+    if ci:
+        print("  windows == oracle on every backend (ci assert)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ci", action="store_true")
+    args = ap.parse_args()
+    run(full=args.full, ci=args.ci)

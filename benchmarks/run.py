@@ -24,6 +24,7 @@ def main(argv=None):
     from benchmarks import table1_throughput, fig3_segment_width
     from benchmarks import train_step_bench, sdtw_scaling
     from benchmarks import search_throughput, backend_matrix
+    from benchmarks import align_throughput
 
     print("=" * 70)
     table1_throughput.run(full=args.full, kernel=args.kernel, csv=rows)
@@ -37,6 +38,8 @@ def main(argv=None):
     search_throughput.run(full=args.full, csv=rows)
     print("=" * 70)
     backend_matrix.run(full=args.full, csv=rows)
+    print("=" * 70)
+    align_throughput.run(full=args.full, csv=rows)
 
     os.makedirs(args.out, exist_ok=True)
     keys = sorted({k for r in rows for k in r})

@@ -2,8 +2,10 @@
 
 Generates a batch of cylinder-bell-funnel queries and a reference (the
 paper's test dataset, §4), z-normalizes both, and runs batched
-subsequence-DTW — reporting the best-match cost and where in the
-reference each query's alignment ends.
+subsequence-DTW — reporting the best-match cost and WHERE in the
+reference each query aligned: the matched window [start..end] comes
+from start pointers propagated through the same sweep (repro.align),
+not a second pass.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +13,7 @@ reference each query's alignment ends.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.api import sdtw_batch
+from repro.align import sdtw_window
 from repro.data.cbf import make_cylinder_bell_funnel
 
 from repro.core.normalize import normalize_batch
@@ -26,11 +28,13 @@ reference = np.array(normalize_batch(jnp.asarray(
 # is an exact subsequence match for it
 reference[300:300 + 128] = queries[3]
 
-costs, ends = sdtw_batch(jnp.asarray(queries), jnp.asarray(reference),
-                         normalize=False)
-for i, (c, e) in enumerate(zip(costs, ends)):
-    mark = "  <-- planted at 300..428" if i == 3 else ""
-    print(f"query {i}: cost={float(c):8.2f} match ends at ref[{int(e)}]{mark}")
+costs, starts, ends = sdtw_window(jnp.asarray(queries),
+                                  jnp.asarray(reference), normalize=False)
+for i, (c, s, e) in enumerate(zip(costs, starts, ends)):
+    mark = "  <-- planted at 300..427" if i == 3 else ""
+    print(f"query {i}: cost={float(c):8.2f} "
+          f"matches ref[{int(s)}..{int(e)}]{mark}")
 
 assert int(np.argmin(np.asarray(costs))) == 3, "planted query must win"
-print("OK: planted query has the lowest alignment cost")
+assert (int(starts[3]), int(ends[3])) == (300, 427), "window must be exact"
+print("OK: planted query wins and its matched window is exact")

@@ -1,8 +1,10 @@
 """Top-k subsequence search over multiple references with repro.search.
 
 Registers a handful of CBF "tracks" in a ReferenceIndex, then asks the
-SearchService where each query best aligns — the pruning cascade skips
-most full DP sweeps while returning *exactly* the brute-force answer
+SearchService WHERE each query best aligns — every hit carries its
+matched reference window ``track[start..end]`` (start pointers riding
+the DP sweeps, repro.align), the pruning cascade skips most full DP
+sweeps, and the result is *exactly* the brute-force answer
 (cross-checked below against a plain sdtw_batch loop on every backend).
 
   PYTHONPATH=src python examples/sdtw_search.py
@@ -31,7 +33,8 @@ def main():
     for name, series in refs.items():
         index.add(name, series)
 
-    service = SearchService(index, SearchConfig(backend=args.backend))
+    service = SearchService(index, SearchConfig(backend=args.backend,
+                                                windows=True))
     best = service.topk(queries, k=1)
     st = service.stats
     hits = sum(m[0].reference == labels[i] for i, m in enumerate(best))
@@ -40,18 +43,22 @@ def main():
           f"pruning skipped {st.skipped}/{st.pairs} sweeps "
           f"({st.skip_fraction:.0%})")
 
-    # full top-k table (note: exact top-k can only prune references that
-    # are provably worse than the k-th best, so large k prunes less)
+    # full top-k table with matched windows (note: exact top-k can only
+    # prune references that are provably worse than the k-th best, so
+    # large k prunes less)
     matches = service.topk(queries, k=args.k)
     for i, ms in enumerate(matches):
-        row = "  ".join(f"{m.reference}@{m.end} ({m.cost:.3f})" for m in ms)
+        row = "  ".join(f"{m.reference}[{m.start}..{m.end}] ({m.cost:.3f})"
+                        for m in ms)
         mark = "ok" if ms[0].reference == labels[i] else "??"
         print(f"  q{i:2d} from {labels[i]:8s} [{mark}] -> {row}")
 
-    want = brute_force_topk(index, queries, k=args.k, backend=args.backend)
+    want = brute_force_topk(index, queries, k=args.k, backend=args.backend,
+                            windows=True)
     assert matches == want, "service result differs from brute force!"
-    print(f"verified: identical to the brute-force sdtw_batch loop "
-          f"({len(index)} refs x {len(queries)} queries, k={args.k})")
+    print(f"verified: identical to the brute-force sdtw_batch loop, "
+          f"windows included ({len(index)} refs x {len(queries)} queries, "
+          f"k={args.k})")
 
 
 if __name__ == "__main__":

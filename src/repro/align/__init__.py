@@ -1,0 +1,35 @@
+"""repro.align — matched windows, warping paths and soft alignments.
+
+The layer that turns the repo from a distance calculator into an
+aligner.  Three artifacts, all backend-aware through the registry's
+``Capabilities.alignment`` axis:
+
+  * **windows** (``sdtw_window``) — (cost, start, end) triples from
+    start-pointer propagation inside the SAME O(M)-memory sweep every
+    backend already runs (``DPSpec.start3``; int32 lanes riding the
+    Pallas wavefront carries on the kernel path);
+  * **paths** (``warping_path`` / ``warping_paths``) — the full
+    alignment via Hirschberg divide-and-conquer over the matched
+    window, O(M + N) memory;
+  * **soft alignments** (``expected_alignment``) — the smoothed
+    alignment matrix of softmin specs via ``jax.grad`` through a
+    cost-matrix engine sweep.
+
+``repro.align.oracle`` holds the full-matrix numpy backtrack ground
+truth the fast paths are tested against (shared tie-break contract).
+"""
+
+from repro.align.oracle import oracle_path, oracle_window, sdtw_matrix
+from repro.align.soft import (cost_matrix, expected_alignment,
+                              row_position_distribution,
+                              sdtw_soft_from_costs)
+from repro.align.traceback import warping_path, warping_paths
+from repro.align.window import sdtw_window, window_arrays
+
+__all__ = [
+    "sdtw_window", "window_arrays",
+    "warping_path", "warping_paths",
+    "expected_alignment", "row_position_distribution",
+    "cost_matrix", "sdtw_soft_from_costs",
+    "oracle_window", "oracle_path", "sdtw_matrix",
+]

@@ -1,0 +1,128 @@
+"""Soft alignment — the smoothed analogue of windows and paths.
+
+Soft-min specs have no argmin path: every monotone alignment
+contributes with Gibbs weight ``exp(-cost/gamma)``.  The useful object
+(SoftDTW-CUDA-Torch's backward pass, Cuturi & Blondel 2017 §2) is the
+EXPECTED ALIGNMENT matrix
+
+    E[i, j] = ∂ sdtw_gamma / ∂ C[i, j]  =  P(the alignment visits (i, j))
+
+obtained here with ``jax.grad`` straight through an anti-diagonal
+engine sweep that takes the cost matrix as an explicit input — no
+hand-written backward recursion to keep in sync with the forward spec.
+``E`` is nonnegative, each query row carries total mass >= 1 (every
+path visits every row at least once; left-moves add mass), and as
+``gamma -> 0`` it converges to the indicator of the hard optimal path.
+``row_position_distribution`` renormalizes each row into a proper
+where-is-row-i distribution over reference columns.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.normalize import normalize_batch
+from repro.core.spec import DEFAULT_SPEC, DPSpec
+
+
+def cost_matrix(queries, reference, spec: DPSpec = DEFAULT_SPEC):
+    """(B, M) x (N,) -> the (B, M, N) local cost tensor under the spec."""
+    q = jnp.asarray(queries)
+    r = jnp.asarray(reference)
+    return spec.cell_cost(q[:, :, None], r[None, None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def sdtw_soft_from_costs(C: jnp.ndarray, *, spec: DPSpec) -> jnp.ndarray:
+    """Soft-min sDTW from an explicit (B, M, N) cost tensor.
+
+    Same anti-diagonal recurrence, free-start boundary and logsumexp
+    bottom-row readout as ``core.engine`` under a softmin spec — but
+    differentiable w.r.t. ``C`` itself, which is what the expected
+    alignment needs.  Returns soft costs (B,).
+    """
+    if not spec.soft:
+        raise ValueError("sdtw_soft_from_costs needs a softmin spec")
+    B, M, N = C.shape
+    dt = C.dtype
+    big = jnp.asarray(spec.big, dt)
+    ii = jnp.arange(M)
+
+    # skew the cost tensor so diagonal t is one slice: Cs[:, i, t] =
+    # C[:, i, t - i] (pad left by i via one (M, M+N-1) gather)
+    tt = jnp.arange(M + N - 1)
+    jj = tt[None, :] - ii[:, None]                       # (M, T)
+    gather = jnp.clip(jj, 0, N - 1)
+    Cs = jnp.take_along_axis(C, gather[None, :, :].repeat(B, 0), axis=2)
+
+    def step(carry, xs):
+        d1, d2 = carry
+        cost, t = xs                                     # cost: (B, M)
+        up = jnp.roll(d1, 1, axis=-1)
+        upleft = jnp.roll(d2, 1, axis=-1)
+        d0 = spec.cell_update(cost, d1, up, upleft, free_start=(ii == 0))
+        j = t - ii
+        valid = (j >= 0) & (j < N)
+        in_band = spec.band_valid(ii, j)
+        if in_band is not None:
+            valid = valid & in_band
+        d0 = jnp.where(valid, d0, big)
+        bottom_valid = (t >= M - 1) & (t - (M - 1) < N)
+        b = jnp.where(bottom_valid, d0[..., M - 1], big)
+        return (d0, d1), b
+
+    d_init = jnp.full((B, M), big, dt)
+    _, bottoms = lax.scan(
+        step, (d_init, d_init),
+        (jnp.moveaxis(Cs, 2, 0), jnp.arange(M + N - 1)))
+    # bottoms: (T, B) -> soft-min over the reachable bottom row
+    bottoms = jnp.swapaxes(bottoms, 0, 1)
+    cost = -spec.gamma * jax.nn.logsumexp(-bottoms / spec.gamma, axis=1)
+    # engine parity: a band blocking the WHOLE bottom row means no
+    # alignment exists — report +inf, not the finite ~SOFT_BIG logsumexp
+    # (the where also zeroes the gradient of blocked rows)
+    blocked = jnp.min(bottoms, axis=1) >= jnp.asarray(big / 2, dt)
+    return jnp.where(blocked, jnp.asarray(jnp.inf, dt), cost)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _expected_alignment_jit(C, *, spec):
+    grad = jax.grad(lambda c: jnp.sum(sdtw_soft_from_costs(c, spec=spec)))
+    return grad(C)
+
+
+def expected_alignment(queries, reference, *,
+                       spec: DPSpec | None = None,
+                       normalize: bool = True) -> jnp.ndarray:
+    """The (B, M, N) expected alignment matrices of a softmin spec.
+
+    ``E[b, i, j]`` is the probability (Gibbs weight at temperature
+    ``gamma``) that query ``b``'s alignment visits cell (i, j) — the
+    soft analogue of the hard path indicator, batched through one
+    ``jax.grad`` of the cost-matrix engine sweep.
+    """
+    spec = DEFAULT_SPEC if spec is None else spec
+    if not spec.soft:
+        raise ValueError(
+            "expected_alignment needs a softmin spec (reduction="
+            "'softmin'); hard-min alignment lives in repro.align.window "
+            "/ repro.align.traceback")
+    q = jnp.asarray(queries)
+    r = jnp.asarray(reference)
+    if normalize:
+        q = normalize_batch(q)
+        r = normalize_batch(r)
+    C = cost_matrix(q, r, spec).astype(spec.accum)
+    return _expected_alignment_jit(C, spec=spec)
+
+
+def row_position_distribution(E: jnp.ndarray) -> jnp.ndarray:
+    """Normalize an expected-alignment tensor per query row: each
+    (b, i) slice becomes a probability distribution over reference
+    columns (rows sum to exactly 1) — 'where is query row i aligned'."""
+    E = jnp.asarray(E)
+    return E / jnp.maximum(E.sum(axis=-1, keepdims=True), 1e-30)

@@ -1,0 +1,63 @@
+"""Matched-window extraction — WHERE a query aligns, not just how well.
+
+``sdtw_window`` is the alignment-aware sibling of
+``repro.core.api.sdtw_batch``: the same resolve-spec → registry →
+execute path, but the execution plan asks for windows
+(``ExecutionPlan.windows``), so every window-capable backend threads a
+start-column pointer through its DP carries (``DPSpec.start3``) and the
+(distance, start, end) triple falls out of the SAME O(M)-memory sweep —
+no second pass, no materialized matrix.  The Pallas kernel path carries
+the pointers as int32 lanes riding the f32 wavefront (one pallas_call
+either way).
+
+Capability handling: ``backend=None`` auto-falls back to the first
+window-capable backend for the spec; naming an incapable backend (e.g.
+``quantized``) raises the registry's loud who-can-instead error.
+Soft-min specs have no argmin path — ask :mod:`repro.align.soft` for
+the expected alignment matrix instead.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.api import sdtw_batch
+from repro.core.spec import DPSpec, resolve_spec
+
+
+def sdtw_window(queries, reference, *, normalize: bool = True,
+                backend: str | None = None,
+                spec: DPSpec | None = None,
+                distance: str | None = None,
+                band: int | None = None,
+                segment_width: int = 8,
+                interpret: bool | None = None,
+                options: dict | None = None):
+    """Matched windows for a batch of queries against one reference.
+
+    queries: (B, M); reference: (N,).
+    Returns (costs (B,), starts (B,), ends (B,)): query ``b``'s best
+    alignment covers ``reference[starts[b] : ends[b] + 1]`` inclusive.
+
+    ``backend=None`` (the default here, unlike ``sdtw_batch``) picks
+    the first window-capable backend so serving code never has to know
+    which engines carry start pointers.  Hard-min specs only.
+    """
+    resolved = resolve_spec(spec, distance=distance, band=band)
+    if resolved.soft:
+        raise ValueError(
+            "sdtw_window needs a hard-min spec: soft-min smooths over "
+            "every path, so there is no argmin window — use "
+            "repro.align.soft.expected_alignment for the smoothed "
+            "alignment matrix")
+    return sdtw_batch(queries, reference, normalize=normalize,
+                      backend=backend, spec=resolved,
+                      segment_width=segment_width, interpret=interpret,
+                      return_window=True, options=options)
+
+
+def window_arrays(starts, ends):
+    """Convenience: (starts, ends) -> list of ``slice`` objects over the
+    reference (inclusive ends, like the kernel's clamped indices)."""
+    return [slice(int(s), int(e) + 1)
+            for s, e in zip(jnp.asarray(starts), jnp.asarray(ends))]

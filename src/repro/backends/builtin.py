@@ -14,12 +14,14 @@ from repro.backends.registry import (Backend, Capabilities, register,
 _ALL = frozenset({"sqeuclidean", "abs", "cosine"})
 _HARD = frozenset({"hardmin"})
 _BOTH = frozenset({"hardmin", "softmin"})
+_WINDOW = frozenset({"window"})
 
 
 # ------------------------------------------------------------------ ref
 def _exec_ref(spec, plan):
     from repro.core import ref
-    return ref.sdtw_ref(plan.queries, plan.reference, spec=spec)
+    return ref.sdtw_ref(plan.queries, plan.reference, spec=spec,
+                        return_window=plan.windows)
 
 
 register(Backend(
@@ -27,7 +29,7 @@ register(Backend(
     capabilities=Capabilities(
         distances=_ALL, reductions=_BOTH, banding=True,
         differentiable=True, per_query_reference=True, exact=True,
-        device="any",
+        alignment=_WINDOW, device="any",
         notes="trusted row-scan oracle; slow, for validation"),
     execute=_exec_ref,
 ))
@@ -36,7 +38,8 @@ register(Backend(
 # --------------------------------------------------------------- engine
 def _exec_engine(spec, plan):
     from repro.core import engine
-    return engine.sdtw_engine(plan.queries, plan.reference, spec=spec)
+    return engine.sdtw_engine(plan.queries, plan.reference, spec=spec,
+                              return_window=plan.windows)
 
 
 register(Backend(
@@ -44,7 +47,7 @@ register(Backend(
     capabilities=Capabilities(
         distances=_ALL, reductions=_BOTH, banding=True,
         differentiable=True, per_query_reference=True, exact=True,
-        device="any",
+        alignment=_WINDOW, device="any",
         notes="anti-diagonal XLA wavefront; the default"),
     execute=_exec_engine,
 ))
@@ -59,7 +62,7 @@ def _exec_kernel(spec, plan):
     from repro.kernels import ops
     return ops.sdtw_wavefront(
         plan.queries, plan.reference, segment_width=plan.segment_width,
-        interpret=plan.interpret, spec=spec)
+        interpret=plan.interpret, spec=spec, return_window=plan.windows)
 
 
 register(Backend(
@@ -71,7 +74,8 @@ register(Backend(
         # handoff are hard-min shaped.
         distances=frozenset({"sqeuclidean", "abs"}), reductions=_HARD,
         banding=True, differentiable=False, per_query_reference=False,
-        exact=True, device="tpu (interpret=True elsewhere)",
+        exact=True, alignment=_WINDOW,
+        device="tpu (interpret=True elsewhere)",
         notes="Pallas wavefront kernel; shared 1-D reference only"),
     execute=_exec_kernel,
 ))
@@ -98,6 +102,11 @@ register(Backend(
 
 
 # ---------------------------------------------------------- distributed
+_DISTRIBUTED_CACHE: dict = {}
+_DISTRIBUTED_CACHE_MAX = 8     # bounded: entries pin Mesh objects and
+#                                compiled shard_map pipelines
+
+
 def _exec_distributed(spec, plan):
     from repro.core.distributed import make_sdtw_distributed
     mesh = plan.option("mesh")
@@ -106,11 +115,20 @@ def _exec_distributed(spec, plan):
             "distributed backend needs a mesh: pass "
             "options={'mesh': Mesh(...)} (and optionally 'row_block', "
             "'batch_axes', 'ref_axis') to sdtw_batch")
-    fn = make_sdtw_distributed(
-        mesh, spec=spec,
-        batch_axes=plan.option("batch_axes", ("data",)),
-        ref_axis=plan.option("ref_axis", "model"),
-        row_block=plan.option("row_block", 64))
+    batch_axes = tuple(plan.option("batch_axes", ("data",)))
+    ref_axis = plan.option("ref_axis", "model")
+    row_block = plan.option("row_block", 64)
+    # cache the built shard_map per (mesh, spec, layout): a SearchService
+    # routing every sweep round through one mesh must not rebuild (and
+    # re-trace) the pipeline per dispatch
+    key = (mesh, spec, batch_axes, ref_axis, row_block)
+    fn = _DISTRIBUTED_CACHE.get(key)
+    if fn is None:
+        while len(_DISTRIBUTED_CACHE) >= _DISTRIBUTED_CACHE_MAX:
+            _DISTRIBUTED_CACHE.pop(next(iter(_DISTRIBUTED_CACHE)))
+        fn = _DISTRIBUTED_CACHE[key] = make_sdtw_distributed(
+            mesh, spec=spec, batch_axes=batch_axes, ref_axis=ref_axis,
+            row_block=row_block)
     return fn(plan.queries, plan.reference)
 
 

@@ -40,11 +40,18 @@ class Capabilities:
     per_query_reference: bool = True   # accepts a (B, N) reference batch
     exact: bool = True             # reproduces the spec'd recurrence (the
     #                                quantized backend approximates it)
+    alignment: frozenset = frozenset()
+    #   which alignment artifacts the backend can materialize beyond the
+    #   (cost, end) pair: "window" = matched (start, end) windows via
+    #   start-pointer propagation (``ExecutionPlan.windows``, hard-min
+    #   specs only — repro.align builds paths and soft alignments on top)
     device: str = "any"            # human-readable requirement
     notes: str = ""
 
-    def unsupported_reason(self, spec: DPSpec) -> str | None:
-        """None when the spec is executable, else a short reason."""
+    def unsupported_reason(self, spec: DPSpec,
+                           alignment: str | None = None) -> str | None:
+        """None when the spec (and requested ``alignment`` artifact, if
+        any) is executable, else a short reason."""
         if spec.distance not in self.distances:
             return f"distance {spec.distance!r}"
         if spec.reduction not in self.reductions:
@@ -52,6 +59,12 @@ class Capabilities:
                 f"reduction {spec.reduction!r}"
         if spec.band is not None and not self.banding:
             return "banding"
+        if alignment is not None:
+            if alignment not in self.alignment:
+                return f"alignment={alignment!r}"
+            if alignment == "window" and spec.soft:
+                return ("alignment='window' under soft-min (no argmin "
+                        "path; use repro.align.soft)")
         return None
 
 
@@ -64,6 +77,11 @@ class ExecutionPlan:
     reference: Any
     segment_width: int = 8
     interpret: bool | None = None      # None = auto (kernels.ops)
+    windows: bool = False              # also return matched-window starts:
+    #                                    execute yields (costs, starts,
+    #                                    ends) — only valid on backends
+    #                                    whose Capabilities.alignment
+    #                                    includes "window"
     options: Mapping | None = None     # backend extras, e.g. {"mesh": ...}
 
     def option(self, key, default=None):
@@ -136,21 +154,25 @@ def get(name: str) -> Backend:
     return _expand(name, DPSpec())[0]
 
 
-def supports(name: str, spec: DPSpec) -> bool:
+def supports(name: str, spec: DPSpec, *,
+             alignment: str | None = None) -> bool:
     backend, spec = _expand(name, spec)
-    return backend.capabilities.unsupported_reason(spec) is None
+    return backend.capabilities.unsupported_reason(
+        spec, alignment=alignment) is None
 
 
-def capable(spec: DPSpec, *, exact_only: bool = False) -> list[str]:
-    """Backend names able to execute ``spec``, in preference order."""
+def capable(spec: DPSpec, *, exact_only: bool = False,
+            alignment: str | None = None) -> list[str]:
+    """Backend names able to execute ``spec`` (and produce the
+    ``alignment`` artifact, when asked), in preference order."""
     _ensure_builtins()
     ordered = [n for n in _PRIORITY if n in _REGISTRY]
     ordered += [n for n in sorted(_REGISTRY) if n not in ordered]
     out = []
     for n in ordered:
         caps = _REGISTRY[n].capabilities
-        if caps.unsupported_reason(spec) is None and \
-                (caps.exact or not exact_only):
+        if caps.unsupported_reason(spec, alignment=alignment) is None \
+                and (caps.exact or not exact_only):
             out.append(n)
     return out
 
@@ -162,17 +184,22 @@ def validate(name: str, spec: DPSpec) -> Backend:
     return resolve(name, spec)[0]
 
 
-def resolve(name: str, spec: DPSpec) -> tuple[Backend, DPSpec]:
+def resolve(name: str, spec: DPSpec, *,
+            alignment: str | None = None) -> tuple[Backend, DPSpec]:
     """Alias expansion + capability validation.
 
     Returns the concrete backend and the (possibly alias-rewritten)
     spec — e.g. ``resolve("soft", spec)`` -> (engine, spec with
-    reduction="softmin").
+    reduction="softmin").  ``alignment`` additionally requires the
+    backend to produce that artifact (e.g. ``"window"``), failing with
+    the same loud who-can-instead error.
     """
     backend, spec = _expand(name, spec)
-    reason = backend.capabilities.unsupported_reason(spec)
+    reason = backend.capabilities.unsupported_reason(spec,
+                                                     alignment=alignment)
     if reason is not None:
-        alternatives = [n for n in capable(spec) if n != backend.name]
+        alternatives = [n for n in capable(spec, alignment=alignment)
+                        if n != backend.name]
         hint = f": use one of {alternatives}" if alternatives else ""
         raise ValueError(
             f"backend {backend.name!r} does not support {reason} "
@@ -180,20 +207,24 @@ def resolve(name: str, spec: DPSpec) -> tuple[Backend, DPSpec]:
     return backend, spec
 
 
-def select(spec: DPSpec, *, preferred: str | None = None
-           ) -> tuple[Backend, DPSpec]:
+def select(spec: DPSpec, *, preferred: str | None = None,
+           alignment: str | None = None) -> tuple[Backend, DPSpec]:
     """Pick a backend for the spec: the preferred one when capable,
-    else the first capable backend in preference order.
+    else the first capable backend in preference order (the auto-
+    fallback path: ``preferred=None, alignment="window"`` lands on the
+    fastest window-capable backend).
 
     Returns ``(backend, spec)`` with alias overrides applied — execute
     with the RETURNED spec, never the one you passed in.
     """
     if preferred is not None:
-        return resolve(preferred, spec)
-    choices = capable(spec)
+        return resolve(preferred, spec, alignment=alignment)
+    choices = capable(spec, alignment=alignment)
     if not choices:
-        raise ValueError(f"no registered backend supports spec "
-                         f"{spec.describe()}")
+        what = f"spec {spec.describe()}"
+        if alignment is not None:
+            what += f" with alignment={alignment!r}"
+        raise ValueError(f"no registered backend supports {what}")
     return _REGISTRY[choices[0]], spec
 
 
@@ -211,6 +242,7 @@ def capability_rows() -> list[dict]:
             "differentiable": c.differentiable,
             "per_query_reference": c.per_query_reference,
             "exact": c.exact,
+            "alignment": ",".join(sorted(c.alignment)) or "-",
             "device": c.device,
         })
     return rows

@@ -39,10 +39,12 @@ def sdtw_batch(queries, reference, *, normalize: bool = True,
                band: int | None = None,
                segment_width: int = 8,
                interpret: bool | None = None,
+               return_window: bool = False,
                options: dict | None = None):
     """Align a batch of queries against one reference.
 
-    queries: (B, M); reference: (N,). Returns (costs (B,), end_idx (B,)).
+    queries: (B, M); reference: (N,). Returns (costs (B,), end_idx (B,))
+    — or (costs, starts, ends) when ``return_window``.
 
     Mirrors the paper's pipeline: optional z-normalization of both inputs
     (§5.1), then the batched subsequence-DTW sweep (§5.2) under the
@@ -56,7 +58,11 @@ def sdtw_batch(queries, reference, *, normalize: bool = True,
     asks the registry for the first backend capable of the spec.
     ``interpret=None`` auto-selects the Pallas mode from
     ``jax.default_backend()`` (compiled on TPU, interpreted elsewhere).
-    ``options`` passes backend extras (e.g. ``{"mesh": ...}`` for
+    ``return_window`` asks for the matched window's start column as
+    well (hard-min specs on window-capable backends — the registry
+    validates and, with ``backend=None``, auto-falls back to the first
+    window-capable backend; ``repro.align`` is the friendlier front
+    end). ``options`` passes backend extras (e.g. ``{"mesh": ...}`` for
     ``backend="distributed"``).
     """
     queries = jnp.asarray(queries)
@@ -64,16 +70,19 @@ def sdtw_batch(queries, reference, *, normalize: bool = True,
     validate_batch_inputs(queries, reference, segment_width=segment_width)
     resolved = resolve_spec(spec, distance=distance, reduction=reduction,
                             gamma=gamma, band=band)
+    alignment = "window" if return_window else None
     if backend is None:
-        backend_impl, resolved = registry.select(resolved)
+        backend_impl, resolved = registry.select(resolved,
+                                                 alignment=alignment)
     else:
-        backend_impl, resolved = registry.resolve(backend, resolved)
+        backend_impl, resolved = registry.resolve(backend, resolved,
+                                                  alignment=alignment)
     if normalize:
         queries = normalize_batch(queries)
         reference = normalize_batch(reference)
     plan = registry.ExecutionPlan(
         queries=queries, reference=reference, segment_width=segment_width,
-        interpret=interpret, options=options)
+        interpret=interpret, windows=return_window, options=options)
     return backend_impl.execute(resolved, plan)
 
 

@@ -39,27 +39,39 @@ from repro.core.spec import DEFAULT_SPEC, DPSpec, INF, SOFT_BIG  # noqa: F401
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "return_end",
+                                             "return_window",
                                              "accum_dtype"))
 def sdtw_engine(queries: jnp.ndarray,
                 reference: jnp.ndarray,
                 *,
                 spec: DPSpec | None = None,
                 return_end: bool = True,
+                return_window: bool = False,
                 accum_dtype=None):
     """Batched anti-diagonal sDTW under ``spec``.
 
     queries:   (B, M)
     reference: (N,) shared across the batch (the paper's setting) or (B, N)
     spec:      recurrence spec; None = squared-Euclidean hard-min unbanded
+    return_window: also propagate the matched window's START column
+               through the recurrence (``spec.start3``) — one extra
+               int32 lane pair riding the same O(M) diagonal carries, no
+               second sweep.  Hard-min specs only.  Returns
+               (costs, starts, ends).
     accum_dtype: overrides ``spec.accum_dtype`` when given (kept for the
                benchmark harnesses that lower ``sdtw_engine.__wrapped__``)
-    returns:   costs (B,) [, end_indices (B,)]
+    returns:   costs (B,) [, end_indices (B,)], or (costs, starts, ends)
+               when ``return_window``
 
     Input validation lives in ``core.api.sdtw_batch`` /
     ``search.SearchService`` (the shared validator in ``core.spec``);
     this function assumes well-shaped arrays.
     """
     spec = DEFAULT_SPEC if spec is None else spec
+    if return_window and spec.soft:
+        raise ValueError(
+            "return_window needs a hard-min spec: soft-min has no argmin "
+            "path (use repro.align.soft.expected_alignment)")
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
     B, M = queries.shape
@@ -92,6 +104,8 @@ def sdtw_engine(queries: jnp.ndarray,
     def step(carry, t):
         if soft:
             d1, d2, m_run, s_run, best, best_j = carry
+        elif return_window:
+            d1, d2, s1, s2, best, best_j, best_s = carry
         else:
             d1, d2, best, best_j = carry
         # cell (i, t-i):
@@ -111,6 +125,15 @@ def sdtw_engine(queries: jnp.ndarray,
         if in_band is not None:
             valid = valid & in_band
         d0 = jnp.where(valid, d0, big)
+        if return_window:
+            # the start column rides the same diagonal carries: row 0
+            # cells BEGIN a path at their own column, every other cell
+            # inherits the start of the predecessor hard-min picked
+            s0_ = spec.start3(d1, up, upleft, s1,
+                              jnp.roll(s1, 1, axis=-1),
+                              jnp.roll(s2, 1, axis=-1))
+            s0_ = jnp.where(ii == 0, j.astype(jnp.int32), s0_)
+            s0_ = jnp.where(valid, s0_, -1)
         # streaming bottom-row reduction (paper's folded __hmin2): the
         # running (min, argmin) pair doubles as the soft path's end index
         bottom = d0[..., M - 1]
@@ -126,6 +149,9 @@ def sdtw_engine(queries: jnp.ndarray,
             m_new = jnp.maximum(m_run, x)
             s_run = s_run * jnp.exp(m_run - m_new) + jnp.exp(x - m_new)
             return (d0, d1, m_new, s_run, best, best_j), None
+        if return_window:
+            best_s = jnp.where(take, s0_[..., M - 1], best_s)
+            return (d0, d1, s0_, s1, best, best_j, best_s), None
         return (d0, d1, best, best_j), None
 
     d_init = jnp.full((B, M), big, dt)
@@ -145,6 +171,18 @@ def sdtw_engine(queries: jnp.ndarray,
         # cells, so best >= SOFT_BIG/2 iff every one was masked.
         blocked = best >= jnp.asarray(SOFT_BIG / 2, dt)
         cost_out = jnp.where(blocked, jnp.asarray(INF, dt), cost_out)
+    elif return_window:
+        s_init = jnp.full((B, M), -1, jnp.int32)
+        # -1 = "no window": survives when no bottom cell is ever
+        # reachable (e.g. a band blocking the whole bottom row), matching
+        # ref and the backtrack oracle
+        bs0 = jnp.full((B,), -1, jnp.int32)
+        carry, _ = lax.scan(step,
+                            (d_init, d_init, s_init, s_init, best0, bj0,
+                             bs0),
+                            jnp.arange(M + N - 1))
+        _, _, _, _, cost_out, best_j, best_s = carry
+        return cost_out, best_s, best_j
     else:
         carry, _ = lax.scan(step, (d_init, d_init, best0, bj0),
                             jnp.arange(M + N - 1))

@@ -111,13 +111,16 @@ def dtw_global_numpy(q: np.ndarray, r: np.ndarray) -> float:
 
 
 def _sdtw_rowscan_single(q: jnp.ndarray, r: jnp.ndarray,
-                         spec: DPSpec) -> tuple[jnp.ndarray, jnp.ndarray]:
+                         spec: DPSpec,
+                         return_window: bool = False):
     """Row-by-row scan sDTW for one (query, reference) pair.
 
     Sequential over both axes (inner scan carries the left cell), so it is
     slow but structurally simple — it mirrors the CPU-side generator the
     paper uses for correctness evaluation (§4).
-    Returns (cost, end_index).
+    Returns (cost, end_index), or (cost, start, end) when
+    ``return_window`` (hard-min only): the start column is propagated
+    through the same scans via ``spec.start3``.
     """
     big = jnp.asarray(spec.big, q.dtype)
     banded = spec.band is not None
@@ -129,10 +132,14 @@ def _sdtw_rowscan_single(q: jnp.ndarray, r: jnp.ndarray,
     # soft-min the free start is the same exact-zero boundary (matching
     # the engine's free_start mask).
     row0 = spec.cell_cost(q[0], r)
+    starts0 = jj.astype(jnp.int32)          # row 0: a path starts HERE
     if banded:
-        row0 = jnp.where(spec.band_valid(0, jj), row0, big)
+        ok0 = spec.band_valid(0, jj)
+        row0 = jnp.where(ok0, row0, big)
+        starts0 = jnp.where(ok0, starts0, -1)
 
-    def row_step(prev_row, xs):
+    def row_step(carry, xs):
+        prev_row, prev_starts = carry
         if banded:
             qi, i = xs
             valid = spec.band_valid(i, jj)
@@ -141,27 +148,35 @@ def _sdtw_rowscan_single(q: jnp.ndarray, r: jnp.ndarray,
         cost = spec.cell_cost(qi, r)
 
         def col_step(carry, cxs):
-            left, upleft = carry
+            left, upleft, s_left, s_upleft = carry
             if banded:
-                c, up, ok = cxs
+                c, up, s_up, ok = cxs
             else:
-                c, up = cxs
+                c, up, s_up = cxs
             val = spec.cell_update(c, left, up, upleft)
+            if return_window:
+                start = spec.start3(left, up, upleft,
+                                    s_left, s_up, s_upleft)
+            else:
+                start = s_left
             if banded:
                 # out-of-band cells must read as blocked to their
                 # neighbours, exactly like the engine's masked diagonals
                 val = jnp.where(ok, val, big)
-            return (val, up), val
+                start = jnp.where(ok, start, -1)
+            return (val, up, start, s_up), (val, start)
 
-        cxs = (cost, prev_row, valid) if banded else (cost, prev_row)
-        (_, _), row = lax.scan(col_step, (big, big), cxs)
-        return row, None
+        cxs = ((cost, prev_row, prev_starts, valid) if banded
+               else (cost, prev_row, prev_starts))
+        neg = jnp.asarray(-1, jnp.int32)
+        _, (row, starts) = lax.scan(col_step, (big, big, neg, neg), cxs)
+        return (row, starts), None
 
     if banded:
         xs = (q[1:], jnp.arange(1, q.shape[0]))
     else:
         xs = q[1:]
-    last_row, _ = lax.scan(row_step, row0, xs)
+    (last_row, last_starts), _ = lax.scan(row_step, (row0, starts0), xs)
     end = jnp.argmin(last_row)
     if spec.soft:
         cost = -spec.gamma * jax.nn.logsumexp(-last_row / spec.gamma)
@@ -170,22 +185,33 @@ def _sdtw_rowscan_single(q: jnp.ndarray, r: jnp.ndarray,
         cost = jnp.where(last_row[end] >= big / 2,
                          jnp.asarray(jnp.inf, cost.dtype), cost)
         return cost, end
+    if return_window:
+        return last_row[end], last_starts[end], end
     return last_row[end], end
 
 
 def sdtw_ref(queries: jnp.ndarray, reference: jnp.ndarray,
-             spec: DPSpec | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+             spec: DPSpec | None = None, *,
+             return_window: bool = False):
     """Batched scan-based sDTW oracle.
 
     queries:   (B, M) float
     reference: (N,) shared or (B, N) per-query
     spec:      recurrence spec; None = squared-Euclidean hard-min unbanded
-    returns:   (costs (B,), end_indices (B,))
+    return_window: also return the matched windows' start columns
+               (hard-min specs only)
+    returns:   (costs (B,), end_indices (B,)), or
+               (costs (B,), starts (B,), ends (B,)) when ``return_window``
     """
     spec = DEFAULT_SPEC if spec is None else spec
+    if return_window and spec.soft:
+        raise ValueError(
+            "return_window needs a hard-min spec: soft-min has no argmin "
+            "path (use repro.align.soft.expected_alignment)")
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
-    single = functools.partial(_sdtw_rowscan_single, spec=spec)
+    single = functools.partial(_sdtw_rowscan_single, spec=spec,
+                               return_window=return_window)
     if reference.ndim == 1:
         fn = jax.vmap(single, in_axes=(0, None))
     else:

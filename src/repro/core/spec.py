@@ -180,6 +180,25 @@ class DPSpec:
             return None
         return jnp.abs(i - j) <= self.band
 
+    def start3(self, left, up, upleft, s_left, s_up, s_upleft):
+        """Start-pointer propagation companion of :meth:`reduce3`:
+        the start index of the predecessor the hard-min picks.
+
+        The tie-break mirrors ``min(min(left, up), upleft)`` exactly —
+        on a tie ``left`` beats ``up`` and the inner min beats
+        ``upleft`` (strict ``<`` flips the winner) — so every backend
+        and the full-matrix backtrack oracle (``repro.align.oracle``)
+        agree on WHICH optimal path they report, not just on its cost.
+        Hard-min only: soft-min windows are ill-defined (use
+        ``repro.align.soft`` for the expected alignment instead).
+        """
+        if self.soft:
+            raise ValueError("start3 is hard-min only: soft-min specs "
+                             "have no argmin path (see repro.align.soft)")
+        s = jnp.where(up < left, s_up, s_left)
+        s = jnp.where(upleft < jnp.minimum(left, up), s_upleft, s)
+        return s
+
 
 DEFAULT_SPEC = DPSpec()
 

@@ -81,13 +81,14 @@ def _prep(queries, reference, *, segment_width, compute_dtype):
 
 @functools.partial(jax.jit, static_argnames=("m", "segment_width",
                                              "interpret", "compute_dtype",
-                                             "spec"))
+                                             "spec", "with_window"))
 def _dispatch(q_prepped, r_layout, *, m, segment_width, compute_dtype,
-              interpret, spec):
-    costs, ends = sdtw_wavefront_pallas(
+              interpret, spec, with_window=False):
+    out = sdtw_wavefront_pallas(
         q_prepped, r_layout, m=m, segment_width=segment_width,
-        compute_dtype=compute_dtype, interpret=interpret, spec=spec)
-    return costs.reshape(-1), ends.reshape(-1)
+        compute_dtype=compute_dtype, interpret=interpret, spec=spec,
+        with_window=with_window)
+    return tuple(x.reshape(-1) for x in out)
 
 
 def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
@@ -95,7 +96,8 @@ def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
                            segment_width: int = 8,
                            compute_dtype=jnp.float32,
                            interpret: bool | None = None,
-                           spec: DPSpec | None = None):
+                           spec: DPSpec | None = None,
+                           return_window: bool = False):
     """Dispatch the wavefront kernel on pre-packed operands.
 
     q_prepped: (G, SUBLANES, m + 2*(LANES-1)) from :func:`prepare_queries`
@@ -106,9 +108,18 @@ def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
     spec:      recurrence spec; None = squared-Euclidean hard-min
                unbanded (the kernel's capability set is declared in
                ``repro.backends.builtin``).
-    Returns (costs (batch,) f32, end_indices (batch,) i32) with ends
-    clamped to ``n - 1`` so padded reference columns can never leak out
-    as match positions.
+    return_window: also return matched-window start columns — the start
+               pointers ride the same wavefront carries (ONE
+               pallas_call either way, see kernels.sdtw_wavefront).
+               When a band blocks every real alignment the kernel
+               reports a pad-dominated finite cost rather than the
+               engine/ref +inf (its long-standing blocked-band
+               semantics), so its start is a clamped index, not the -1
+               no-window sentinel those backends return.
+    Returns (costs (batch,) f32, end_indices (batch,) i32) — or
+    (costs, starts, ends) when ``return_window`` — with indices clamped
+    to ``n - 1`` so padded reference columns can never leak out as
+    match positions.
 
     ``batch`` and ``n`` only trim the padded rows and clamp the end
     indices, OUTSIDE the jit: the compile cache is keyed by the padded
@@ -116,11 +127,19 @@ def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
     grid with varying real-row counts (or references whose lengths
     differ but pad to the same layout) reuses one executable.
     """
-    costs, ends = _dispatch(q_prepped, r_layout, m=m,
-                            segment_width=segment_width,
-                            compute_dtype=compute_dtype,
-                            interpret=_resolve_interpret(interpret),
-                            spec=DEFAULT_SPEC if spec is None else spec)
+    out = _dispatch(q_prepped, r_layout, m=m,
+                    segment_width=segment_width,
+                    compute_dtype=compute_dtype,
+                    interpret=_resolve_interpret(interpret),
+                    spec=DEFAULT_SPEC if spec is None else spec,
+                    with_window=return_window)
+    if return_window:
+        costs, starts, ends = out
+        # clamp padded-column starts like the ends, but keep the -1
+        # "no window" sentinel (blocked alignments) intact
+        return (costs[:batch], jnp.clip(starts[:batch], -1, n - 1),
+                jnp.minimum(ends[:batch], n - 1))
+    costs, ends = out
     return costs[:batch], jnp.minimum(ends[:batch], n - 1)
 
 
@@ -128,12 +147,14 @@ def sdtw_wavefront(queries: jnp.ndarray, reference: jnp.ndarray, *,
                    segment_width: int = 8,
                    compute_dtype=jnp.float32,
                    interpret: bool | None = None,
-                   spec: DPSpec | None = None):
+                   spec: DPSpec | None = None,
+                   return_window: bool = False):
     """Batched subsequence DTW via the Pallas wavefront kernel.
 
     queries: (B, M) float; reference: (N,) float.
     interpret: None = auto (compiled on TPU, interpreted elsewhere).
-    Returns (costs (B,) f32, end_indices (B,) i32).
+    Returns (costs (B,) f32, end_indices (B,) i32), or
+    (costs, starts, ends) when ``return_window``.
     """
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
@@ -143,7 +164,8 @@ def sdtw_wavefront(queries: jnp.ndarray, reference: jnp.ndarray, *,
                    compute_dtype=compute_dtype)
     return sdtw_wavefront_prepped(
         qk, rk, batch=B, m=M, n=N, segment_width=segment_width,
-        compute_dtype=compute_dtype, interpret=interpret, spec=spec)
+        compute_dtype=compute_dtype, interpret=interpret, spec=spec,
+        return_window=return_window)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "interpret"))

@@ -45,10 +45,9 @@ BIG = KERNEL_BIG   # python float: avoids capturing a traced constant
 #                    (value + dtype rationale live in core/spec.py)
 
 
-def _kernel(q_ref, r_ref, cost_ref, end_ref,
-            boundary, minval, minidx, *,
+def _kernel(q_ref, r_ref, *refs,
             m: int, w: int, num_ref_blocks: int, compute_dtype,
-            spec: DPSpec):
+            spec: DPSpec, with_window: bool):
     """One (batch-group, reference-block) grid cell.
 
     q_ref:    (1, SUBLANES, Mp)  reversed+padded queries (see ops.py)
@@ -59,7 +58,22 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
                                  becomes the left column of the next block
     minval:   (SUBLANES, LANES)  running min   (persists across ref blocks)
     minidx:   (SUBLANES, LANES)  running argmin
+
+    ``with_window`` adds a start-pointer carry lane to the SAME wavefront
+    (no second pallas_call): int32 start columns ride alongside every f32
+    DP lane — the per-segment left/up/upleft carries, the ``__shfl_up``
+    roll, the inter-block boundary strip, and the streaming argmin fold
+    each gain an int32 twin — plus one extra output:
+
+    start_ref:      (1, SUBLANES)  start column of the winning window
+    boundary_start: (SUBLANES, m)  int32 twin of the boundary strip
+    minstart:       (SUBLANES, LANES)  start column of each lane's best
     """
+    if with_window:
+        (cost_ref, end_ref, start_ref,
+         boundary, boundary_start, minval, minidx, minstart) = refs
+    else:
+        cost_ref, end_ref, boundary, minval, minidx = refs
     rblk = pl.program_id(1)
     cdt = compute_dtype
     big = jnp.asarray(BIG, cdt)
@@ -70,12 +84,18 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
     def _init():
         minval[...] = jnp.full((SUBLANES, LANES), BIG, jnp.float32)
         minidx[...] = jnp.full((SUBLANES, LANES), NEG, jnp.int32)
+        if with_window:
+            minstart[...] = jnp.full((SUBLANES, LANES), NEG, jnp.int32)
 
     r_blk = r_ref[0]                      # (w, LANES)
     j_base = (rblk * LANES + lane) * w    # global ref index of lane's k=0
 
     def step(t, carry):
-        prev_row, left_in, prev_left = carry
+        if with_window:
+            (prev_row, left_in, prev_left,
+             prev_row_s, left_s_in, prev_left_s) = carry
+        else:
+            prev_row, left_in, prev_left = carry
         # lane l is computing query row i = t - l this step
         i_l = t - lane                                    # (S, L) int32
         is_row0 = (i_l == 0)
@@ -89,9 +109,12 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
 
         zero = jnp.asarray(0.0, cdt)
         new_row = []
+        new_row_s = []
         best_v = None
         best_k = None
+        best_s = None
         left = left_in
+        left_s = left_s_in if with_window else None
         for k in range(w):
             up = prev_row[k]
             upleft = prev_left if k == 0 else prev_row[k - 1]
@@ -100,19 +123,36 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
             rv = r_blk[k].astype(cdt)               # (LANES,) -> bcast (S, L)
             cost = spec.cell_cost(qv, rv)
             val = spec.cell_update(cost, left, up, upleft)
+            in_band = None
             if spec.band is not None:
                 # Sakoe–Chiba mask folded into the lane index math:
                 # lane l, segment slot k owns global column j_base + k
                 # while computing query row i_l — out-of-band cells read
                 # as BIG so no path can cross them.
-                val = jnp.where(spec.band_valid(i_l, j_base + k), val, big)
+                in_band = spec.band_valid(i_l, j_base + k)
+                val = jnp.where(in_band, val, big)
+            if with_window:
+                # start pointer of the predecessor the hard-min picked;
+                # row 0 cells BEGIN a path at their own global column
+                s_up = prev_row_s[k]
+                s_upleft = prev_left_s if k == 0 else prev_row_s[k - 1]
+                start = spec.start3(left, up, upleft,
+                                    left_s, s_up, s_upleft)
+                start = jnp.where(is_row0, j_base + k, start)
+                if in_band is not None:
+                    start = jnp.where(in_band, start, NEG)
+                new_row_s.append(start)
+                left_s = start
             new_row.append(val)
             if best_v is None:
                 best_v, best_k = val, jnp.zeros_like(i_l)
+                best_s = new_row_s[0] if with_window else None
             else:
                 take = val < best_v
                 best_v = jnp.where(take, val, best_v)
                 best_k = jnp.where(take, k, best_k)
+                if with_window:
+                    best_s = jnp.where(take, start, best_s)
             left = val
 
         # streaming (min, argmin) fold when a lane finishes its bottom row
@@ -121,6 +161,8 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
         take = at_bottom & (cand < minval[...])
         minval[...] = jnp.where(take, cand, minval[...])
         minidx[...] = jnp.where(take, j_base + best_k, minidx[...])
+        if with_window:
+            minstart[...] = jnp.where(take, best_s, minstart[...])
 
         last = new_row[w - 1]                             # (S, L)
         # __shfl_up analogue: neighbour's last cell becomes my left value
@@ -132,6 +174,13 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
         use_strip = (rblk > 0) & ((t + 1) < m)
         lane0_val = jnp.where(use_strip, strip, big)
         next_left = jnp.where(lane == 0, lane0_val, rolled)
+        if with_window:
+            last_s = new_row_s[w - 1]
+            rolled_s = pltpu.roll(last_s, 1, 1)
+            strip_s = pl.load(boundary_start,
+                              (slice(None), pl.dslice(t_next, 1)))
+            lane0_s = jnp.where(use_strip, strip_s, NEG)
+            next_left_s = jnp.where(lane == 0, lane0_s, rolled_s)
 
         # publish my right column for the next block (lane LANES-1, row i127)
         i127 = t - (LANES - 1)
@@ -141,7 +190,15 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
             col = lax.slice(last, (0, LANES - 1), (SUBLANES, LANES))  # (S, 1)
             pl.store(boundary, (slice(None), pl.dslice(i127, 1)),
                      col.astype(jnp.float32))
+            if with_window:
+                col_s = lax.slice(last_s, (0, LANES - 1),
+                                  (SUBLANES, LANES))
+                pl.store(boundary_start,
+                         (slice(None), pl.dslice(i127, 1)), col_s)
 
+        if with_window:
+            return (new_row, next_left, left_in,
+                    new_row_s, next_left_s, left_s_in)
         return (new_row, next_left, left_in)
 
     prev0 = [jnp.zeros((SUBLANES, LANES), cdt) for _ in range(w)]
@@ -150,7 +207,16 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
     left0 = jnp.where(lane == 0,
                       jnp.where(rblk > 0, strip0, big), big)
     prev_left0 = jnp.full((SUBLANES, LANES), big, cdt)
-    carry = (prev0, left0, prev_left0)
+    if with_window:
+        prev0_s = [jnp.full((SUBLANES, LANES), NEG, jnp.int32)
+                   for _ in range(w)]
+        strip0_s = pl.load(boundary_start, (slice(None), pl.dslice(0, 1)))
+        negs = jnp.full((SUBLANES, LANES), NEG, jnp.int32)
+        left0_s = jnp.where(lane == 0,
+                            jnp.where(rblk > 0, strip0_s, NEG), NEG)
+        carry = (prev0, left0, prev_left0, prev0_s, left0_s, negs)
+    else:
+        carry = (prev0, left0, prev_left0)
     carry = lax.fori_loop(0, m + LANES - 1, step, carry)
 
     @pl.when(rblk == num_ref_blocks - 1)
@@ -161,6 +227,9 @@ def _kernel(q_ref, r_ref, cost_ref, end_ref,
         idx = jnp.take_along_axis(minidx[...], arg[:, None], axis=1)[:, 0]
         cost_ref[0, :] = best
         end_ref[0, :] = idx
+        if with_window:
+            start_ref[0, :] = jnp.take_along_axis(
+                minstart[...], arg[:, None], axis=1)[:, 0]
 
 
 def sdtw_wavefront_pallas(q_rev_pad: jnp.ndarray,
@@ -168,12 +237,16 @@ def sdtw_wavefront_pallas(q_rev_pad: jnp.ndarray,
                           *, m: int, segment_width: int,
                           compute_dtype=jnp.float32,
                           interpret: bool = True,
-                          spec: DPSpec = DEFAULT_SPEC):
+                          spec: DPSpec = DEFAULT_SPEC,
+                          with_window: bool = False):
     """Raw pallas_call wrapper. Use ``repro.kernels.ops.sdtw_wavefront``.
 
     q_rev_pad: (G, SUBLANES, Mp) reversed queries, Mp = m + 2*(LANES-1)
     r_layout:  (R, w, LANES) pre-swizzled reference blocks
-    returns (costs (G, SUBLANES) f32, ends (G, SUBLANES) i32)
+    returns (costs (G, SUBLANES) f32, ends (G, SUBLANES) i32), plus
+    starts (G, SUBLANES) i32 in the middle when ``with_window`` —
+    computed by the SAME pallas_call (the start pointers ride the
+    wavefront carries; see ``_kernel``), never a second sweep.
 
     Capability floor (``repro.backends`` enforces this for API callers;
     direct callers get the same error here): hard-min reductions and
@@ -193,27 +266,39 @@ def sdtw_wavefront_pallas(q_rev_pad: jnp.ndarray,
     assert Mp == m + 2 * (LANES - 1), (Mp, m)
 
     kernel = functools.partial(_kernel, m=m, w=w, num_ref_blocks=R,
-                               compute_dtype=compute_dtype, spec=spec)
+                               compute_dtype=compute_dtype, spec=spec,
+                               with_window=with_window)
     grid = (G, R)
-    out_shape = (jax.ShapeDtypeStruct((G, SUBLANES), jnp.float32),
-                 jax.ShapeDtypeStruct((G, SUBLANES), jnp.int32))
+    out_shape = [jax.ShapeDtypeStruct((G, SUBLANES), jnp.float32),
+                 jax.ShapeDtypeStruct((G, SUBLANES), jnp.int32)]
     in_specs = [
         pl.BlockSpec((1, SUBLANES, Mp), lambda b, r: (b, 0, 0)),
         pl.BlockSpec((1, w, LANES), lambda b, r: (r, 0, 0)),
     ]
-    out_specs = (pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)),
-                 pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)))
+    out_specs = [pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)),
+                 pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0))]
     scratch = [
         pltpu.VMEM((SUBLANES, m), jnp.float32),    # boundary strip
         pltpu.VMEM((SUBLANES, LANES), jnp.float32),  # running min
         pltpu.VMEM((SUBLANES, LANES), jnp.int32),    # running argmin
     ]
+    if with_window:
+        # one extra output + the int32 twins of the strip / argmin
+        # scratch — same grid, same pallas_call
+        out_shape.append(jax.ShapeDtypeStruct((G, SUBLANES), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)))
+        scratch.insert(1, pltpu.VMEM((SUBLANES, m), jnp.int32))
+        scratch.append(pltpu.VMEM((SUBLANES, LANES), jnp.int32))
     kwargs = {}
     if not interpret:
         kwargs["compiler_params"] = pltpu.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"))
-    return pl.pallas_call(
-        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
-        out_shape=out_shape, scratch_shapes=scratch,
+    out = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape), scratch_shapes=scratch,
         interpret=interpret, **kwargs,
     )(q_rev_pad, r_layout)
+    if with_window:
+        costs, ends, starts = out
+        return costs, starts, ends
+    return out

@@ -8,12 +8,16 @@ CPU-scale usage (reduced workload):
   PYTHONPATH=src python -m repro.launch.search_serve --no-prune
   PYTHONPATH=src python -m repro.launch.search_serve --distance abs
   PYTHONPATH=src python -m repro.launch.search_serve --band 256
+  PYTHONPATH=src python -m repro.launch.search_serve --no-windows
   PYTHONPATH=src python -m repro.launch.search_serve --reduction softmin \
       --gamma 1.0      # soft specs disable the (inadmissible) cascade
+                       # and the (argmin-shaped) matched windows
 
 The driver mirrors launch/serve.py: build the index once (normalized +
 cached layouts), then drive the SearchService over arriving chunks the
-way a serving frontend would.
+way a serving frontend would.  Hits come back with their matched
+reference window — ``track3[412..540]`` — not just a distance, unless
+``--no-windows`` (or a soft-min spec) turns the start lanes off.
 """
 
 from __future__ import annotations
@@ -44,11 +48,19 @@ def main(argv=None):
     ap.add_argument("--band", type=int, default=None,
                     help="Sakoe-Chiba radius (default: unbanded)")
     ap.add_argument("--no-prune", action="store_true")
+    ap.add_argument("--no-windows", action="store_true",
+                    help="report distances only (matched windows are on "
+                         "by default for hard-min specs)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     spec = DPSpec(distance=args.distance, reduction=args.reduction,
                   gamma=args.gamma, band=args.band)
+    # windows ride hard-min argmin pointers; soft-min specs (and the
+    # quantized backend) fall back to distance-only hits
+    from repro.backends import registry
+    windows = (not args.no_windows and
+               registry.supports(args.backend, spec, alignment="window"))
     refs, queries, labels = make_search_dataset(
         seed=args.seed, n_refs=args.refs,
         motifs_per_ref=args.motifs_per_ref, n_queries=args.queries,
@@ -57,13 +69,13 @@ def main(argv=None):
     for name, series in refs.items():
         index.add(name, series)
     svc = SearchService(index, SearchConfig(
-        backend=args.backend, prune=not args.no_prune))
+        backend=args.backend, prune=not args.no_prune, windows=windows))
 
     n = len(queries)
     print(f"[search] {len(index)} refs x {refs['track0'].shape[0]} samples, "
           f"{n} queries arriving in chunks of {args.chunk}, "
           f"backend={svc.backend.name}, spec={svc.spec.describe()}, "
-          f"prune={svc.prune_active}")
+          f"prune={svc.prune_active}, windows={windows}")
     svc.topk(queries[:args.chunk], k=args.k)      # warm-up compile
     hits = 0
     dp_pairs = pairs = skipped = 0
@@ -81,8 +93,11 @@ def main(argv=None):
     print(f"[search] {n / dt:8.1f} q/s   top-1 hit-rate {hits / n:.0%}   "
           f"sweeps {dp_pairs}/{pairs} (skipped {skipped / max(pairs, 1):.0%})")
     for i, m in enumerate(svc.topk(queries[:3], k=args.k)):
-        best = ", ".join(f"{x.reference}@{x.end} cost={x.cost:.3f}"
-                         for x in m)
+        best = ", ".join(
+            (f"{x.reference}[{x.start}..{x.end}] cost={x.cost:.3f}"
+             if x.start is not None else
+             f"{x.reference}@{x.end} cost={x.cost:.3f}")
+            for x in m)
         print(f"  q{i} ({labels[i]}): {best}")
 
 

@@ -8,10 +8,10 @@ kernel packing) -> SearchService (exact top-k front end).
 from repro.core.spec import DPSpec
 from repro.search.batcher import QueryBatch, QueryBatcher, grid_size
 from repro.search.index import RefEntry, ReferenceIndex
-from repro.search.prune import (envelope_gap2, envelope_gap_cost,
-                                lb_keogh_sdtw, lb_keogh_sdtw_multi,
-                                lb_paa_sdtw, paa_envelopes,
-                                prune_admissible)
+from repro.search.prune import (envelope_cost_cosine, envelope_gap2,
+                                envelope_gap_cost, lb_keogh_sdtw,
+                                lb_keogh_sdtw_multi, lb_paa_sdtw,
+                                paa_envelopes, prune_admissible)
 from repro.search.service import (Match, SearchConfig, SearchService,
                                   SearchStats, brute_force_topk)
 
@@ -19,7 +19,8 @@ __all__ = [
     "DPSpec",
     "QueryBatch", "QueryBatcher", "grid_size",
     "RefEntry", "ReferenceIndex",
-    "envelope_gap2", "envelope_gap_cost", "lb_keogh_sdtw",
+    "envelope_cost_cosine", "envelope_gap2", "envelope_gap_cost",
+    "lb_keogh_sdtw",
     "lb_keogh_sdtw_multi", "lb_paa_sdtw", "paa_envelopes",
     "prune_admissible",
     "Match", "SearchConfig", "SearchService", "SearchStats",

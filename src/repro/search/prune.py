@@ -39,12 +39,21 @@ from jax import lax
 from repro.core.spec import DEFAULT_SPEC, INF, DPSpec  # noqa: F401
 # INF re-exported for backward compatibility (prune.INF predates spec.py)
 
-# The envelope-gap argument only lower-bounds costs that are monotone in
-# |q - r| (the gap is a lower bound of |q - r| when both values lie
-# inside their block envelopes), and the coarse DP plus the top-k
-# threshold comparison are hard-min shaped: a soft-min sweep can land
-# BELOW any hard lower bound. Hence the cascade only runs for:
-PRUNABLE_DISTANCES = frozenset({"sqeuclidean", "abs"})
+# Admissibility per distance:
+#   * sqeuclidean / abs — costs monotone in |q - r|, so the interval
+#     GAP (a lower bound of |q - r| when both values lie inside their
+#     block envelopes) maps through the cost to a true lower bound;
+#   * cosine — the scalar cosine cost 1 - qr/(|q||r|+eps) is a SIGN
+#     test, not a gap test: it is ~0 whenever q and r can agree in
+#     sign and >= 1 + |qr|/(|qr|+eps) when the intervals are strictly
+#     opposite-signed, so an ANGULAR (sign-aware) interval bound is
+#     admissible where the gap bound is not (see
+#     :func:`envelope_cost_cosine`).
+# The coarse DP plus the top-k threshold comparison stay hard-min
+# shaped either way: a soft-min sweep can land BELOW any hard lower
+# bound, so soft specs never prune.
+PRUNABLE_DISTANCES = frozenset({"sqeuclidean", "abs", "cosine"})
+_COS_EPS = 1e-8          # must match spec.cell_cost's cosine epsilon
 
 
 def prune_admissible(spec: DPSpec) -> bool:
@@ -57,10 +66,29 @@ def prune_admissible(spec: DPSpec) -> bool:
 
 def _gap_cost(gap: jnp.ndarray, spec: DPSpec) -> jnp.ndarray:
     """Envelope gap -> cost under the spec's distance (coarse analogue
-    of ``spec.cell_cost``)."""
+    of ``spec.cell_cost``; gap-monotone distances only)."""
     if spec.distance == "abs":
         return gap
     return gap * gap
+
+
+def envelope_cost_cosine(qlo, qhi, rlo, rhi):
+    """Admissible cosine cost bound between value intervals.
+
+    min over a in [qlo, qhi], b in [rlo, rhi] of
+    ``1 - ab/(|a||b| + eps)``: whenever the intervals can agree in sign
+    (both reach > 0, both reach < 0, or either touches 0) the true cost
+    can fall arbitrarily close to 0 (and equals exactly 1 at a zero
+    value), so the bound is 0; for strictly opposite-signed intervals
+    the cost is ``1 + |ab|/(|ab| + eps)``, minimized at the endpoints
+    closest to zero — ``x/(x+eps)`` is increasing, so plugging the
+    minimal |ab| lower-bounds every pair in the blocks.
+    """
+    opp_pn = (qlo > 0) & (rhi < 0)          # q strictly +, r strictly -
+    opp_np = (qhi < 0) & (rlo > 0)          # q strictly -, r strictly +
+    p = jnp.where(opp_pn, qlo * (-rhi),
+                  jnp.where(opp_np, (-qhi) * rlo, 0.0))
+    return jnp.where(opp_pn | opp_np, 1.0 + p / (p + _COS_EPS), 0.0)
 
 
 def paa_envelopes(x: jnp.ndarray, chunk: int):
@@ -82,9 +110,12 @@ def paa_envelopes(x: jnp.ndarray, chunk: int):
 
 
 def envelope_gap_cost(qlo, qhi, rlo, rhi, spec: DPSpec = DEFAULT_SPEC):
-    """Gap between intervals [qlo, qhi] and [rlo, rhi] (0 if they
-    overlap), mapped through the spec's distance — the coarse analogue
-    of ``spec.cell_cost``."""
+    """Interval-vs-interval cost lower bound under the spec's distance —
+    the coarse analogue of ``spec.cell_cost``: the interval gap mapped
+    through gap-monotone distances, the angular (sign-aware) bound for
+    cosine."""
+    if spec.distance == "cosine":
+        return envelope_cost_cosine(qlo, qhi, rlo, rhi)
     gap = jnp.maximum(jnp.maximum(rlo - qhi, qlo - rhi), 0.0)
     return _gap_cost(gap, spec)
 
@@ -180,8 +211,8 @@ def lb_keogh_sdtw(queries: jnp.ndarray, rlo: jnp.ndarray,
         start = Nc - 1 - t + (M - 1)
         lo = lax.dynamic_slice(lo_ext, (start,), (M,))
         hi = lax.dynamic_slice(hi_ext, (start,), (M,))
-        gap = jnp.maximum(jnp.maximum(lo - q, q - hi), 0.0)
-        cost = _gap_cost(gap, spec)
+        # the query side is exact: a degenerate [q, q] interval
+        cost = envelope_gap_cost(q, q, lo, hi, spec)
         up = jnp.roll(d1, 1, axis=-1)
         upleft = jnp.roll(d2, 1, axis=-1)
         prev = jnp.minimum(jnp.minimum(d1, up), upleft)

@@ -28,9 +28,16 @@ the index's default): top-k search runs banded and under any distance /
 reduction the chosen backend supports.  The pruning cascade only
 engages for specs whose bounds are admissible
 (:func:`repro.search.prune.prune_admissible` — hard-min with a
-gap-monotone distance); for soft-min or cosine specs the service
-transparently falls back to full sweeps, still exact for the spec'd
-recurrence.
+gap-monotone distance, or cosine via the angular envelope bound); for
+soft-min specs the service transparently falls back to full sweeps,
+still exact for the spec'd recurrence.
+
+``SearchConfig.windows`` returns the matched (start, end) window with
+every hit — the start pointers ride the sweeps' existing carries
+(``repro.align``), so windowed search costs one extra int lane, not a
+second pass.  ``SearchConfig.options`` forwards backend extras into
+every dispatch; ``{"mesh": Mesh(...)}`` fans the full sweeps across a
+device mesh through the distributed backend.
 """
 
 from __future__ import annotations
@@ -61,6 +68,17 @@ class SearchConfig:
     segment_width: int = 8           # kernel backend only
     interpret: bool | None = None    # kernel backend only (None = auto)
     normalize: bool = True           # must match the index's setting
+    windows: bool = False            # return matched (start, end) windows
+    #                                  with every hit (window-capable
+    #                                  backends + hard-min specs only;
+    #                                  validated at construction)
+    options: dict | None = None      # backend extras forwarded into every
+    #                                  ExecutionPlan — {"mesh": Mesh(...)}
+    #                                  routes sweeps through the
+    #                                  distributed backend's shard_map
+    #                                  pipeline (plus optional
+    #                                  "row_block", "batch_axes",
+    #                                  "ref_axis")
     prune: bool = True
     stages: tuple = (4, 2)           # ref_chunk per cascade stage, coarse
     #                                  to fine; stage 0 runs batched over
@@ -83,6 +101,14 @@ class Match:
     reference: str
     cost: float
     end: int
+    start: int | None = None         # matched-window start column — only
+    #                                  populated when SearchConfig.windows
+
+    @property
+    def window(self) -> tuple[int, int] | None:
+        """Inclusive (start, end) reference window, None without
+        ``SearchConfig.windows``."""
+        return None if self.start is None else (self.start, self.end)
 
 
 @dataclasses.dataclass
@@ -117,14 +143,18 @@ class SearchService:
         self.index = index
         self.config = config
         # resolve the recurrence + backend ONCE: alias expansion and
-        # capability validation fail fast here, not mid-search
+        # capability validation (windows included) fail fast here, not
+        # mid-search
         spec = config.spec if config.spec is not None else index.spec
-        self.backend, self.spec = registry.resolve(config.backend, spec)
-        if self.backend.name == "distributed":
+        self.backend, self.spec = registry.resolve(
+            config.backend, spec,
+            alignment="window" if config.windows else None)
+        if self.backend.name == "distributed" and \
+                (config.options or {}).get("mesh") is None:
             raise ValueError(
-                "SearchService does not support the distributed backend "
-                "yet: no mesh plumbing through ExecutionPlan.options "
-                "(see ROADMAP open items)")
+                "the distributed backend needs a mesh: pass "
+                "SearchConfig(options={'mesh': Mesh(...)}) (plus "
+                "optional 'row_block', 'batch_axes', 'ref_axis')")
         # the cascade's bounds are lower bounds of the EXACT spec'd
         # sweep, and only for hard-min, gap-monotone specs; approximate
         # backends (quantized) or other specs fall back to full sweeps
@@ -231,8 +261,9 @@ class SearchService:
 
         out = []
         for i in range(B):
-            out.append([Match(reference=name, cost=cost, end=end)
-                        for cost, _, end, name in found[i][:k]])
+            out.append([Match(reference=name, cost=cost, end=end,
+                              start=(start if cfg.windows else None))
+                        for cost, _, end, name, start in found[i][:k]])
         return out
 
     # ---------------------------------------------------------- cascade
@@ -275,14 +306,11 @@ class SearchService:
         for batch in batcher.pack([qlist[i] for i in qids], ids=qids):
             qk = _ops.prepare_queries_jit(batch.queries.astype(jnp.float32))
             rk = self.index.layout(entry.name, cfg.segment_width)
-            costs, ends = _ops.sdtw_wavefront_prepped(
+            out = _ops.sdtw_wavefront_prepped(
                 qk, rk, batch=batch.n_real, m=batch.length, n=entry.length,
                 segment_width=cfg.segment_width, interpret=cfg.interpret,
-                spec=self.spec)
-            costs, ends = np.asarray(costs), np.asarray(ends)
-            for row, i in enumerate(batch.ids):
-                bisect.insort(found[i], (float(costs[row]), order,
-                                         int(ends[row]), entry.name))
+                spec=self.spec, return_window=cfg.windows)
+            self._record(out, batch.ids, order, entry.name, found)
             self.stats.dp_pairs += batch.n_real
             self.stats.dp_calls += 1
 
@@ -297,12 +325,10 @@ class SearchService:
         for batch in batcher.pack([qlist[i] for i in qids], ids=qids):
             plan = registry.ExecutionPlan(
                 queries=batch.queries, reference=entry.series,
-                segment_width=cfg.segment_width, interpret=cfg.interpret)
-            costs, ends = self.backend.execute(self.spec, plan)
-            costs, ends = np.asarray(costs), np.asarray(ends)
-            for row, i in enumerate(batch.ids):
-                bisect.insort(found[i], (float(costs[row]), order,
-                                         int(ends[row]), entry.name))
+                segment_width=cfg.segment_width, interpret=cfg.interpret,
+                windows=cfg.windows, options=cfg.options)
+            out = self.backend.execute(self.spec, plan)
+            self._record(out, batch.ids, order, entry.name, found)
             self.stats.dp_pairs += batch.n_real
             self.stats.dp_calls += 1
 
@@ -328,14 +354,37 @@ class SearchService:
                 [rg, jnp.broadcast_to(rg[:1], (g - p, n))]) if g > p else rg
             plan = registry.ExecutionPlan(
                 queries=qg, reference=rg,
-                segment_width=cfg.segment_width, interpret=cfg.interpret)
-            costs, ends = self.backend.execute(self.spec, plan)
-            costs, ends = np.asarray(costs)[:p], np.asarray(ends)[:p]
-            for row, (i, j) in enumerate(pairs):
-                bisect.insort(found[i], (float(costs[row]), j,
-                                         int(ends[row]), refs[j].name))
+                segment_width=cfg.segment_width, interpret=cfg.interpret,
+                windows=cfg.windows, options=cfg.options)
+            out = self.backend.execute(self.spec, plan)
+            self._record(out, [i for i, _ in pairs],
+                         [j for _, j in pairs],
+                         [refs[j].name for _, j in pairs], found)
             self.stats.dp_pairs += p
             self.stats.dp_calls += 1
+
+    def _record(self, out, qids, order, name, found):
+        """Fold one dispatch's results into the per-query top-k lists.
+
+        ``out`` is the backend's (costs, ends) pair — or the
+        (costs, starts, ends) windows triple when
+        ``SearchConfig.windows`` — with any batch-padding rows beyond
+        ``len(qids)`` ignored.  ``order``/``name`` are scalars for
+        shared-reference sweeps or per-row sequences for pair sweeps.
+        The sort key stays (cost, order, end, name): the start column
+        rides behind and never changes the ranking."""
+        if self.config.windows:
+            costs, starts, ends = (np.asarray(x) for x in out)
+        else:
+            (costs, ends), starts = (np.asarray(x) for x in out), None
+        scalar = not isinstance(order, (list, tuple))
+        for row, i in enumerate(qids):
+            bisect.insort(found[i], (
+                float(costs[row]),
+                order if scalar else order[row],
+                int(ends[row]),
+                name if scalar else name[row],
+                int(starts[row]) if starts is not None else -1))
 
     # ------------------------------------------------------------ misc
     def _as_query_list(self, queries) -> list[jnp.ndarray]:
@@ -352,12 +401,16 @@ class SearchService:
 def brute_force_topk(index: ReferenceIndex, queries, k: int = 1, *,
                      backend: str = "engine", spec: DPSpec | None = None,
                      segment_width: int = 8,
-                     interpret: bool | None = None) -> list[list[Match]]:
+                     interpret: bool | None = None,
+                     windows: bool = False,
+                     options: dict | None = None) -> list[list[Match]]:
     """Reference implementation: full DP of every query against every
-    registered reference — what SearchService.topk must reproduce."""
+    registered reference — what SearchService.topk must reproduce
+    (windows included when ``windows=True``)."""
     svc = SearchService(index, SearchConfig(
         backend=backend, spec=spec, normalize=index.normalize, prune=False,
-        segment_width=segment_width, interpret=interpret))
+        segment_width=segment_width, interpret=interpret,
+        windows=windows, options=options))
     qs = svc._as_query_list(queries)
     groups: dict[int, list[int]] = {}
     for i, q in enumerate(qs):
@@ -366,13 +419,20 @@ def brute_force_topk(index: ReferenceIndex, queries, k: int = 1, *,
     for length, qids in groups.items():
         qg = jnp.stack([qs[i] for i in qids])
         for order, e in enumerate(index.references()):
-            costs, ends = sdtw_batch(qg, e.series, normalize=False,
-                                     backend=backend, spec=svc.spec,
-                                     segment_width=segment_width,
-                                     interpret=interpret)
-            costs, ends = np.asarray(costs), np.asarray(ends)
+            out = sdtw_batch(qg, e.series, normalize=False,
+                             backend=backend, spec=svc.spec,
+                             segment_width=segment_width,
+                             interpret=interpret, return_window=windows,
+                             options=options)
+            if windows:
+                costs, starts, ends = (np.asarray(x) for x in out)
+            else:
+                (costs, ends), starts = (np.asarray(x) for x in out), None
             for row, i in enumerate(qids):
-                found[i].append((float(costs[row]), order,
-                                 int(ends[row]), e.name))
-    return [[Match(reference=name, cost=cost, end=end)
-             for cost, _, end, name in sorted(f)[:k]] for f in found]
+                found[i].append((
+                    float(costs[row]), order, int(ends[row]), e.name,
+                    int(starts[row]) if starts is not None else -1))
+    return [[Match(reference=name, cost=cost, end=end,
+                   start=(start if windows else None))
+             for cost, _, end, name, start in sorted(f)[:k]]
+            for f in found]

@@ -1,0 +1,296 @@
+"""repro.align — the alignment layer's acceptance contract.
+
+Matched windows from every window-capable backend (backend × distance ×
+band) must equal the full-matrix numpy backtrack oracle EXACTLY (shared
+``start3`` tie-break); Hirschberg warping paths must equal the oracle's
+path cell for cell and satisfy the structural path invariants; soft
+expected alignments must be proper row distributions converging to the
+hard path as gamma -> 0; and windows must ride through the search
+service unchanged.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.align.traceback as traceback_mod
+from repro.align import (expected_alignment, oracle_path, oracle_window,
+                         row_position_distribution, sdtw_window,
+                         warping_path, warping_paths)
+from repro.backends import registry
+from repro.core.normalize import normalize_batch
+from repro.core.spec import DPSpec
+from repro.data.cbf import make_cylinder_bell_funnel
+
+B, M, N = 3, 16, 120
+
+WINDOW_SPECS = [
+    DPSpec(),
+    DPSpec(distance="abs"),
+    DPSpec(band=24),
+    DPSpec(distance="abs", band=40),
+    DPSpec(band=N + M),                      # band wider than the matrix
+]
+BACKENDS = ("ref", "engine", "kernel")
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(21)
+    q = rng.normal(size=(B, M)).astype(np.float32)
+    r = rng.normal(size=(N,)).astype(np.float32)
+    return q, r
+
+
+@pytest.fixture(scope="module")
+def cbf():
+    """Normalized CBF queries/reference with one planted exact match —
+    the acceptance-criteria workload."""
+    rng = np.random.default_rng(4)
+    q = np.asarray(normalize_batch(jnp.asarray(
+        make_cylinder_bell_funnel(rng, 4, 32))))
+    r = np.array(normalize_batch(jnp.asarray(
+        make_cylinder_bell_funnel(rng, 1, 512)[0])))
+    r[100:132] = q[1]
+    return q, r
+
+
+# ------------------------------------------------------------- windows
+@pytest.mark.parametrize("spec", WINDOW_SPECS, ids=lambda s: s.describe())
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_windows_match_oracle(data, backend, spec):
+    """Start-pointer propagation == full-matrix backtrack, exactly, on
+    every window-capable backend under every supported spec."""
+    if backend == "kernel" and spec.distance == "cosine":
+        pytest.skip("kernel declines cosine")
+    q, r = data
+    costs, starts, ends = sdtw_window(q, r, normalize=False,
+                                      backend=backend, spec=spec,
+                                      segment_width=2)
+    for b in range(B):
+        c0, s0, e0 = oracle_window(q[b], r, spec)
+        np.testing.assert_allclose(float(costs[b]), c0, rtol=2e-3,
+                                   atol=2e-3)
+        assert (int(starts[b]), int(ends[b])) == (s0, e0), \
+            (backend, spec.describe(), b)
+
+
+def test_windows_on_cbf_all_backends(cbf):
+    """The acceptance criterion: on CBF data, windows from ref, engine
+    and kernel all equal the oracle exactly — and the planted query's
+    window is the planted location."""
+    q, r = cbf
+    want = [oracle_window(q[b], r) for b in range(len(q))]
+    for backend in BACKENDS:
+        costs, starts, ends = sdtw_window(q, r, normalize=False,
+                                          backend=backend,
+                                          segment_width=2)
+        got = [(int(starts[b]), int(ends[b])) for b in range(len(q))]
+        assert got == [(s0, e0) for _, s0, e0 in want], backend
+    assert got[1] == (100, 131)              # the planted match
+
+
+def test_window_batch_against_batched_reference(data):
+    """Per-query (B, N) references go through the engine's window path
+    too — the search service's pair sweeps call the backend directly
+    (the public ``sdtw_batch``/``sdtw_window`` contract stays 1-D)."""
+    from repro.core.engine import sdtw_engine
+    q, r = data
+    rng = np.random.default_rng(3)
+    rb = np.stack([r] + [rng.normal(size=(N,)).astype(np.float32)
+                         for _ in range(B - 1)])
+    costs, starts, ends = sdtw_engine(jnp.asarray(q), jnp.asarray(rb),
+                                      return_window=True)
+    for b in range(B):
+        c0, s0, e0 = oracle_window(q[b], rb[b])
+        assert (int(starts[b]), int(ends[b])) == (s0, e0)
+
+
+def test_blocked_band_reports_no_window(rng):
+    """M > N + band: no alignment exists — engine and ref must report
+    the oracle's -1 'no window' start (and +inf cost), and the soft
+    cost-matrix sweep must report +inf like the engine does."""
+    from repro.align.soft import cost_matrix, sdtw_soft_from_costs
+    from repro.core.engine import sdtw_engine
+    from repro.core.ref import sdtw_ref
+    q = rng_q = np.asarray(rng.normal(size=(2, 4)), np.float32)
+    r = np.asarray(rng.normal(size=(2,)), np.float32)
+    spec = DPSpec(band=0)
+    for fn in (sdtw_engine, sdtw_ref):
+        c, s, e = fn(jnp.asarray(q), jnp.asarray(r), spec=spec,
+                     return_window=True)
+        assert np.isinf(np.asarray(c)).all()
+        assert (np.asarray(s) == -1).all()
+    for b in range(2):
+        c0, s0, _ = oracle_window(q[b], r, spec)
+        assert not np.isfinite(c0) and s0 == -1
+    soft_spec = DPSpec(reduction="softmin", band=0)
+    C = cost_matrix(jnp.asarray(q), jnp.asarray(r), soft_spec)
+    assert np.isinf(np.asarray(
+        sdtw_soft_from_costs(C.astype(jnp.float32), spec=soft_spec))).all()
+
+
+def test_window_rejects_softmin(data):
+    q, r = data
+    with pytest.raises(ValueError, match="hard-min"):
+        sdtw_window(q, r, spec=DPSpec(reduction="softmin"))
+
+
+def test_window_capability_axis(data):
+    """The registry's alignment axis: quantized/distributed cannot emit
+    windows (loud error), backend=None auto-falls back to a capable
+    one."""
+    q, r = data
+    from repro.core.api import sdtw_batch
+    with pytest.raises(ValueError, match="alignment"):
+        sdtw_batch(q, r, backend="quantized", return_window=True)
+    assert registry.capable(DPSpec(), alignment="window") == \
+        ["engine", "kernel", "ref"]
+    assert registry.select(DPSpec(), alignment="window")[0].name == \
+        "engine"
+    rows = {row["backend"]: row["alignment"]
+            for row in registry.capability_rows()}
+    assert rows["engine"] == rows["kernel"] == rows["ref"] == "window"
+    assert rows["quantized"] == rows["distributed"] == "-"
+
+
+# --------------------------------------------------------------- paths
+@pytest.mark.parametrize("spec", [DPSpec(), DPSpec(distance="abs"),
+                                  DPSpec(band=30)],
+                         ids=lambda s: s.describe())
+def test_paths_match_oracle(data, spec):
+    """Hirschberg divide-and-conquer == full-matrix backtrack, cell for
+    cell (the base-case threshold is shrunk so the recursion actually
+    recurses)."""
+    q, r = data
+    old = traceback_mod._BASE_CELLS
+    traceback_mod._BASE_CELLS = 16
+    try:
+        paths = warping_paths(q, r, spec=spec, normalize=False)
+    finally:
+        traceback_mod._BASE_CELLS = old
+    for b in range(B):
+        want = oracle_path(q[b], r, spec)
+        assert paths[b].shape == want.shape
+        assert (paths[b] == want).all(), (spec.describe(), b)
+
+
+def test_path_structure(cbf):
+    """Structural invariants: starts at (0, start), ends at (M-1, end),
+    unit monotone steps, inside the band, and the path's summed cell
+    costs equal the reported sDTW cost."""
+    q, r = cbf
+    spec = DPSpec(band=400)
+    costs, starts, ends = sdtw_window(q, r, normalize=False, spec=spec)
+    for b in range(len(q)):
+        path = warping_path(q[b], r, spec=spec, normalize=False,
+                            window=(int(starts[b]), int(ends[b])))
+        assert tuple(path[0]) == (0, int(starts[b]))
+        assert tuple(path[-1]) == (len(q[b]) - 1, int(ends[b]))
+        steps = set(map(tuple, np.diff(path, axis=0)))
+        assert steps <= {(0, 1), (1, 0), (1, 1)}          # monotone, unit
+        assert (np.abs(path[:, 0] - path[:, 1]) <= spec.band).all()
+        path_cost = sum((q[b][i] - r[j]) ** 2 for i, j in path)
+        np.testing.assert_allclose(path_cost, float(costs[b]), rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_path_from_search_hit_window(cbf):
+    """A window handed over from SearchService.topk reproduces the same
+    path as recomputing from scratch (the serving handoff)."""
+    q, r = cbf
+    from repro.search import ReferenceIndex, SearchConfig, SearchService
+    index = ReferenceIndex(normalize=False)
+    index.add("track", r)
+    svc = SearchService(index, SearchConfig(backend="engine",
+                                            windows=True,
+                                            normalize=False))
+    [[hit]] = svc.topk(q[1][None, :], k=1)
+    assert hit.window == (100, 131)
+    via_hit = warping_path(q[1], r, normalize=False, window=hit.window)
+    direct = warping_path(q[1], r, normalize=False)
+    assert (via_hit == direct).all()
+
+
+def test_path_rejects_bad_window(cbf):
+    q, r = cbf
+    with pytest.raises(ValueError, match="bad window"):
+        warping_path(q[0], r, normalize=False, window=(40, 20))
+
+
+# ---------------------------------------------------------------- soft
+def test_soft_expected_alignment_rows(data):
+    """E is nonnegative, every query row carries mass >= 1 (each path
+    visits each row), and the row-normalized matrix is a distribution."""
+    q, r = data
+    spec = DPSpec(reduction="softmin", gamma=0.5)
+    E = np.asarray(expected_alignment(q, r, spec=spec, normalize=False))
+    assert E.shape == (B, M, N)
+    assert (E >= -1e-6).all()
+    assert (E.sum(axis=-1) >= 1 - 1e-3).all()
+    R = np.asarray(row_position_distribution(jnp.asarray(E)))
+    np.testing.assert_allclose(R.sum(axis=-1), 1.0, atol=1e-5)
+
+
+def test_soft_alignment_converges_to_hard_path(data):
+    """gamma -> 0: the expected alignment concentrates on the hard
+    optimal path — every path cell's visit probability -> 1 and each
+    row's mass concentrates on that row's path cells.  The bottom row
+    is excluded from the row-mass check: a free-end extension whose
+    extra cell cost is ~gamma keeps finite Gibbs weight at any fixed
+    temperature (the convergence there is in the end INDEX, already
+    covered by the engine's argmin readout)."""
+    q, r = data
+    spec = DPSpec(reduction="softmin", gamma=1e-3)
+    E = np.asarray(expected_alignment(q, r, spec=spec, normalize=False))
+    R = np.asarray(row_position_distribution(jnp.asarray(E)))
+    for b in range(B):
+        path = oracle_path(q[b], r)
+        assert (E[b][path[:, 0], path[:, 1]] > 0.9).all()
+        onpath_rowmass = np.zeros(M)
+        for i, j in path:
+            onpath_rowmass[i] += R[b, i, j]
+        assert (onpath_rowmass[:M - 1] > 0.9).all(), onpath_rowmass
+
+
+def test_soft_alignment_rejects_hardmin(data):
+    q, r = data
+    with pytest.raises(ValueError, match="softmin"):
+        expected_alignment(q, r, spec=DPSpec())
+
+
+# ------------------------------------------------------ search windows
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_search_service_windows_equal_brute_force(backend):
+    """SearchService.topk with windows on: identical to the brute-force
+    loop, windows included, pruning on."""
+    from repro.data.cbf import make_search_dataset
+    from repro.search import (ReferenceIndex, SearchConfig, SearchService,
+                              brute_force_topk)
+    refs, queries, _ = make_search_dataset(
+        seed=3, n_refs=3, motifs_per_ref=6, n_queries=5, query_motifs=2)
+    index = ReferenceIndex()
+    for name, series in refs.items():
+        index.add(name, series)
+    svc = SearchService(index, SearchConfig(backend=backend, windows=True))
+    got = svc.topk(queries[:4], k=2)
+    want = brute_force_topk(index, queries[:4], k=2, backend=backend,
+                            windows=True)
+    assert got == want
+    for ms in got:
+        for m in ms:
+            assert m.start is not None and 0 <= m.start <= m.end
+            assert m.window == (m.start, m.end)
+
+
+def test_search_service_windows_reject_incapable():
+    from repro.search import ReferenceIndex, SearchConfig, SearchService
+    rng = np.random.default_rng(0)
+    index = ReferenceIndex()
+    index.add("a", rng.normal(size=(256,)).astype(np.float32))
+    with pytest.raises(ValueError, match="alignment"):
+        SearchService(index, SearchConfig(backend="quantized",
+                                          windows=True))
+    with pytest.raises(ValueError, match="alignment"):
+        SearchService(index, SearchConfig(
+            backend="engine", windows=True,
+            spec=DPSpec(reduction="softmin")))

@@ -55,6 +55,42 @@ def test_lower_bounds_are_admissible(rng, chunks):
                                    rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("chunks", [(1, 1), (1, 4), (2, 8)])
+def test_cosine_lower_bound_is_admissible(rng, chunks):
+    """The angular envelope bound: every cosine bound <= the true
+    cosine sDTW cost (sign-aware, not gap-based)."""
+    cq, cr = chunks
+    spec = DPSpec(distance="cosine")
+    q = normalize_batch(jnp.asarray(
+        rng.normal(size=(6, 33)).astype(np.float32)))
+    r = normalize_batch(jnp.asarray(
+        rng.normal(size=(217,)).astype(np.float32)))
+    true, _ = sdtw_ref(q, r, spec=spec)
+    lb = lb_paa_sdtw(q, r, query_chunk=cq, ref_chunk=cr, spec=spec)
+    assert (np.asarray(lb) <= np.asarray(true) + 1e-4).all()
+    if cq == 1:
+        rlo, rhi = paa_envelopes(r, cr)
+        lb_fast = lb_keogh_sdtw(q, rlo, rhi, spec=spec)
+        assert (np.asarray(lb_fast) <= np.asarray(true) + 1e-4).all()
+    assert prune_admissible(spec)
+
+
+def test_cosine_lower_bound_bites_on_sign_separated_series(rng):
+    """Where the angular bound has teeth: a strictly negative query
+    against a strictly positive reference costs ~2 per cell, and the
+    envelope bound must see (most of) it — while staying admissible."""
+    spec = DPSpec(distance="cosine")
+    q = jnp.asarray(-(np.abs(rng.normal(size=(2, 16))) + 0.1)
+                    .astype(np.float32))
+    r = jnp.asarray((np.abs(rng.normal(size=(64,))) + 0.1)
+                    .astype(np.float32))
+    true, _ = sdtw_ref(q, r, spec=spec)
+    rlo, rhi = paa_envelopes(r, 4)
+    lb = np.asarray(lb_keogh_sdtw(q, rlo, rhi, spec=spec))
+    assert (lb <= np.asarray(true) + 1e-4).all()
+    assert (lb >= 16).all()          # ~1+ per query row, M = 16 rows
+
+
 def test_lower_bound_exact_at_chunk_one(rng):
     """ref_chunk=1 envelopes degenerate to the series itself: the bound
     must equal the true sweep."""
@@ -188,8 +224,10 @@ def test_service_prunes_search_workload(workload):
     ("engine", DPSpec(distance="abs")),            # new distance, pruned
     ("kernel", DPSpec(distance="abs")),            # ... through the kernel
     ("engine", DPSpec(band=900)),                  # banded hard-min, pruned
+    ("engine", DPSpec(distance="cosine")),         # angular-bound pruned
     ("engine", DPSpec(reduction="softmin", gamma=1.0, band=900)),
-], ids=["abs-engine", "abs-kernel", "banded-engine", "soft-banded-engine"])
+], ids=["abs-engine", "abs-kernel", "banded-engine", "cosine-engine",
+        "soft-banded-engine"])
 def test_service_spec_combinations_equal_brute_force(workload, backend,
                                                      spec):
     """The spec layer's end-to-end contract: top-k search stays exact
@@ -243,6 +281,55 @@ def test_service_quantized_backend_equals_brute_force(workload):
     got = svc.topk(queries[:3], k=2)
     want = brute_force_topk(index, queries[:3], k=2, backend="quantized")
     assert got == want
+
+
+_DIST_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.search import (ReferenceIndex, SearchConfig, SearchService,
+                          brute_force_topk)
+
+rng = np.random.default_rng(7)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+index = ReferenceIndex()
+for i in range(5):                 # N=512 divides the 4 model shards
+    index.add(f"t{i}", rng.normal(size=(512,)).astype(np.float32))
+queries = rng.normal(size=(8, 64)).astype(np.float32)
+
+with mesh:
+    svc = SearchService(index, SearchConfig(
+        backend="distributed", options={"mesh": mesh, "row_block": 8}))
+    got = svc.topk(queries, k=2)
+want = brute_force_topk(index, queries, k=2, backend="engine")
+assert got == want, (got[0], want[0])
+assert svc.stats.dp_pairs + svc.stats.skipped == svc.stats.pairs
+print("DIST-SEARCH-OK")
+"""
+
+
+def test_service_distributed_backend_via_mesh_options():
+    """The ROADMAP item: SearchConfig(options={'mesh': ...}) routes the
+    service's full sweeps through the distributed shard_map pipeline —
+    results identical to the single-device engine brute force.  Runs in
+    a subprocess (device count must be fixed before jax init)."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _DIST_SCRIPT], env=env,
+                         capture_output=True, text=True,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DIST-SEARCH-OK" in out.stdout
+
+
+def test_service_distributed_without_mesh_errors(workload):
+    index, _, _ = workload
+    with pytest.raises(ValueError, match="mesh"):
+        SearchService(index, SearchConfig(backend="distributed"))
 
 
 def test_service_validation(workload, rng):
