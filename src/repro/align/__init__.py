@@ -13,7 +13,8 @@ aligner.  Three artifacts, all backend-aware through the registry's
     window, O(M + N) memory;
   * **soft alignments** (``expected_alignment``) — the smoothed
     alignment matrix of softmin specs via ``jax.grad`` through a
-    cost-matrix engine sweep.
+    cost-matrix engine sweep; ``soft_costs`` is the registry-routed
+    forward path (the Pallas kernel's soft-min channel on TPU).
 
 ``repro.align.oracle`` holds the full-matrix numpy backtrack ground
 truth the fast paths are tested against (shared tie-break contract).
@@ -22,7 +23,7 @@ truth the fast paths are tested against (shared tie-break contract).
 from repro.align.oracle import oracle_path, oracle_window, sdtw_matrix
 from repro.align.soft import (cost_matrix, expected_alignment,
                               row_position_distribution,
-                              sdtw_soft_from_costs)
+                              sdtw_soft_from_costs, soft_costs)
 from repro.align.traceback import warping_path, warping_paths
 from repro.align.window import sdtw_window, window_arrays
 
@@ -30,6 +31,6 @@ __all__ = [
     "sdtw_window", "window_arrays",
     "warping_path", "warping_paths",
     "expected_alignment", "row_position_distribution",
-    "cost_matrix", "sdtw_soft_from_costs",
+    "cost_matrix", "sdtw_soft_from_costs", "soft_costs",
     "oracle_window", "oracle_path", "sdtw_matrix",
 ]

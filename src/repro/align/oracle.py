@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.spec import DEFAULT_SPEC, DPSpec
+from repro.core.spec import DEFAULT_SPEC, NO_WINDOW, DPSpec
 from repro.core.ref import _np_cost
 
 
@@ -92,6 +92,6 @@ def oracle_window(q: np.ndarray, r: np.ndarray,
     end = int(np.argmin(D[m - 1]))
     cost = float(D[m - 1, end])
     if not np.isfinite(cost):        # no in-band alignment at all
-        return cost, -1, end
+        return cost, NO_WINDOW, end
     path = oracle_path(q, r, spec, end=end)
     return cost, int(path[0, 1]), end

@@ -15,6 +15,13 @@ path visits every row at least once; left-moves add mass), and as
 ``gamma -> 0`` it converges to the indicator of the hard optimal path.
 ``row_position_distribution`` renormalizes each row into a proper
 where-is-row-i distribution over reference columns.
+
+:func:`soft_costs` is the batch FORWARD path: soft-min costs + end
+indices through the backend registry, so TPU-capable configs
+auto-select the Pallas wavefront kernel's soft-min carry channel
+(``repro.kernels.wavefront.SoftMinFold``) and soft alignment scoring
+runs at kernel speed.  ``expected_alignment`` stays on the
+``jax.grad``-through-the-engine path — the kernel is forward-only.
 """
 
 from __future__ import annotations
@@ -26,7 +33,32 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.normalize import normalize_batch
-from repro.core.spec import DEFAULT_SPEC, DPSpec
+from repro.core.spec import DEFAULT_SPEC, DPSpec, resolve_spec
+
+
+def soft_costs(queries, reference, *, spec: DPSpec | None = None,
+               gamma: float | None = None, backend: str | None = None,
+               normalize: bool = True, band: int | None = None,
+               segment_width: int = 8, interpret: bool | None = None):
+    """Batched soft-min sDTW costs (and soft end indices).
+
+    queries: (B, M); reference: (N,).  Returns (costs (B,), ends (B,)).
+
+    The registry-routed sibling of :func:`expected_alignment`:
+    ``backend=None`` auto-selects the fastest backend capable of the
+    soft spec — the Pallas wavefront kernel on TPU (its soft-min carry
+    channel keeps a running ``-γ·logsumexp(-x/γ)`` fold), the XLA
+    engine elsewhere.  ``gamma`` (or an explicit softmin ``spec``)
+    sets the temperature; a plain hard-min spec is promoted to softmin
+    with its current gamma.
+    """
+    from repro.core.api import sdtw_batch   # local: api imports align-free
+    resolved = resolve_spec(spec, gamma=gamma, band=band)
+    if not resolved.soft:
+        resolved = resolve_spec(resolved, reduction="softmin")
+    return sdtw_batch(queries, reference, normalize=normalize,
+                      backend=backend, spec=resolved,
+                      segment_width=segment_width, interpret=interpret)
 
 
 def cost_matrix(queries, reference, spec: DPSpec = DEFAULT_SPEC):

@@ -69,14 +69,16 @@ register(Backend(
     name="kernel",
     capabilities=Capabilities(
         # no cosine: PAD_VALUE reference padding only dominates costs
-        # that grow with |q - r| (see the sentinel notes in core.spec);
-        # no soft-min: the streaming (min, argmin) fold and the strip
-        # handoff are hard-min shaped.
-        distances=frozenset({"sqeuclidean", "abs"}), reductions=_HARD,
+        # that grow with |q - r| (see the sentinel notes in core.spec).
+        # soft-min runs the carry-channel executor's running-logsumexp
+        # fold (repro.kernels.wavefront.SoftMinFold) — forward only,
+        # so the backend still is not differentiable.
+        distances=frozenset({"sqeuclidean", "abs"}), reductions=_BOTH,
         banding=True, differentiable=False, per_query_reference=False,
         exact=True, alignment=_WINDOW,
         device="tpu (interpret=True elsewhere)",
-        notes="Pallas wavefront kernel; shared 1-D reference only"),
+        notes="Pallas wavefront kernel (hard+soft, band-skip grids); "
+              "shared 1-D reference only"),
     execute=_exec_kernel,
 ))
 

@@ -104,6 +104,26 @@ _ALIASES: dict[str, tuple[str, dict]] = {}
 _PRIORITY = ("engine", "kernel", "ref", "quantized", "distributed")
 
 
+def _device_default() -> str:
+    """The platform auto-selection keys off (overridable in tests)."""
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:       # jax missing/misconfigured: stay generic
+        return "cpu"
+
+
+def _priority() -> tuple:
+    """Preference order for auto-selection, device-aware: on TPU the
+    Pallas wavefront kernel outruns the XLA engine for every spec it
+    supports (hard- and soft-min since the carry-channel executor), so
+    it is tried first there; everywhere else the kernel would run
+    interpreted and the engine stays the default."""
+    if _device_default() == "tpu":
+        return ("kernel",) + tuple(n for n in _PRIORITY if n != "kernel")
+    return _PRIORITY
+
+
 def register(backend: Backend, *, overwrite: bool = False) -> Backend:
     if not overwrite and backend.name in _REGISTRY:
         raise ValueError(f"backend {backend.name!r} already registered")
@@ -162,17 +182,26 @@ def supports(name: str, spec: DPSpec, *,
 
 
 def capable(spec: DPSpec, *, exact_only: bool = False,
-            alignment: str | None = None) -> list[str]:
+            alignment: str | None = None,
+            differentiable: bool = False) -> list[str]:
     """Backend names able to execute ``spec`` (and produce the
-    ``alignment`` artifact, when asked), in preference order."""
+    ``alignment`` artifact, when asked), in preference order (device-
+    aware: the kernel leads on TPU, the engine elsewhere).
+
+    ``differentiable=True`` keeps only backends declaring NaN-free
+    gradients — gradient callers need this on TPU, where plain
+    auto-selection prefers the (forward-only) Pallas kernel for
+    soft-min specs.
+    """
     _ensure_builtins()
-    ordered = [n for n in _PRIORITY if n in _REGISTRY]
+    ordered = [n for n in _priority() if n in _REGISTRY]
     ordered += [n for n in sorted(_REGISTRY) if n not in ordered]
     out = []
     for n in ordered:
         caps = _REGISTRY[n].capabilities
         if caps.unsupported_reason(spec, alignment=alignment) is None \
-                and (caps.exact or not exact_only):
+                and (caps.exact or not exact_only) \
+                and (caps.differentiable or not differentiable):
             out.append(n)
     return out
 
@@ -208,22 +237,28 @@ def resolve(name: str, spec: DPSpec, *,
 
 
 def select(spec: DPSpec, *, preferred: str | None = None,
-           alignment: str | None = None) -> tuple[Backend, DPSpec]:
+           alignment: str | None = None,
+           differentiable: bool = False) -> tuple[Backend, DPSpec]:
     """Pick a backend for the spec: the preferred one when capable,
     else the first capable backend in preference order (the auto-
     fallback path: ``preferred=None, alignment="window"`` lands on the
-    fastest window-capable backend).
+    fastest window-capable backend).  ``differentiable=True`` restricts
+    auto-selection to gradient-safe backends (see :func:`capable`) —
+    a named ``preferred`` backend is taken at the caller's word.
 
     Returns ``(backend, spec)`` with alias overrides applied — execute
     with the RETURNED spec, never the one you passed in.
     """
     if preferred is not None:
         return resolve(preferred, spec, alignment=alignment)
-    choices = capable(spec, alignment=alignment)
+    choices = capable(spec, alignment=alignment,
+                      differentiable=differentiable)
     if not choices:
         what = f"spec {spec.describe()}"
         if alignment is not None:
             what += f" with alignment={alignment!r}"
+        if differentiable:
+            what += " differentiably"
         raise ValueError(f"no registered backend supports {what}")
     return _REGISTRY[choices[0]], spec
 

@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.spec import DEFAULT_SPEC, DPSpec, INF, SOFT_BIG  # noqa: F401
+from repro.core.spec import (DEFAULT_SPEC, DPSpec, INF,  # noqa: F401
+                             NO_WINDOW, SOFT_BIG)
 # INF re-exported for backward compatibility (engine.INF predates spec.py)
 
 
@@ -133,7 +134,7 @@ def sdtw_engine(queries: jnp.ndarray,
                               jnp.roll(s1, 1, axis=-1),
                               jnp.roll(s2, 1, axis=-1))
             s0_ = jnp.where(ii == 0, j.astype(jnp.int32), s0_)
-            s0_ = jnp.where(valid, s0_, -1)
+            s0_ = jnp.where(valid, s0_, NO_WINDOW)
         # streaming bottom-row reduction (paper's folded __hmin2): the
         # running (min, argmin) pair doubles as the soft path's end index
         bottom = d0[..., M - 1]
@@ -172,11 +173,11 @@ def sdtw_engine(queries: jnp.ndarray,
         blocked = best >= jnp.asarray(SOFT_BIG / 2, dt)
         cost_out = jnp.where(blocked, jnp.asarray(INF, dt), cost_out)
     elif return_window:
-        s_init = jnp.full((B, M), -1, jnp.int32)
-        # -1 = "no window": survives when no bottom cell is ever
+        s_init = jnp.full((B, M), NO_WINDOW, jnp.int32)
+        # NO_WINDOW: survives when no bottom cell is ever
         # reachable (e.g. a band blocking the whole bottom row), matching
         # ref and the backtrack oracle
-        bs0 = jnp.full((B,), -1, jnp.int32)
+        bs0 = jnp.full((B,), NO_WINDOW, jnp.int32)
         carry, _ = lax.scan(step,
                             (d_init, d_init, s_init, s_init, best0, bj0,
                              bs0),

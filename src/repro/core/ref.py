@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.spec import DEFAULT_SPEC, DPSpec, INF  # noqa: F401
+from repro.core.spec import (DEFAULT_SPEC, DPSpec, INF,  # noqa: F401
+                             NO_WINDOW)
 # INF re-exported for backward compatibility (ref.INF predates spec.py)
 
 
@@ -136,7 +137,7 @@ def _sdtw_rowscan_single(q: jnp.ndarray, r: jnp.ndarray,
     if banded:
         ok0 = spec.band_valid(0, jj)
         row0 = jnp.where(ok0, row0, big)
-        starts0 = jnp.where(ok0, starts0, -1)
+        starts0 = jnp.where(ok0, starts0, NO_WINDOW)
 
     def row_step(carry, xs):
         prev_row, prev_starts = carry
@@ -163,12 +164,12 @@ def _sdtw_rowscan_single(q: jnp.ndarray, r: jnp.ndarray,
                 # out-of-band cells must read as blocked to their
                 # neighbours, exactly like the engine's masked diagonals
                 val = jnp.where(ok, val, big)
-                start = jnp.where(ok, start, -1)
+                start = jnp.where(ok, start, NO_WINDOW)
             return (val, up, start, s_up), (val, start)
 
         cxs = ((cost, prev_row, prev_starts, valid) if banded
                else (cost, prev_row, prev_starts))
-        neg = jnp.asarray(-1, jnp.int32)
+        neg = jnp.asarray(NO_WINDOW, jnp.int32)
         _, (row, starts) = lax.scan(col_step, (big, big, neg, neg), cxs)
         return (row, starts), None
 

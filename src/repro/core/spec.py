@@ -45,7 +45,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
 DISTANCES = ("sqeuclidean", "abs", "cosine")
@@ -86,6 +85,16 @@ PAD_VALUE = 1.0e6
 #   the same for the ``abs`` distance.  NOT safe for ``cosine`` — the
 #   cosine cost of a huge pad value is still O(1) — which is one reason
 #   the kernel backend declines cosine (see repro.backends.builtin).
+#
+NO_WINDOW = -1
+#   The int32 argmin / start-pointer sentinel: "no window found".  A
+#   start (or end) index of -1 means no in-band alignment ever reached
+#   the bottom row — it survives the streaming argmin folds untouched
+#   because every real reference column is >= 0.  Shared by the engine
+#   and ref start lanes, the Pallas kernel's int32 carry channel
+#   (``repro.kernels.wavefront``), the backtrack oracle
+#   (``repro.align.oracle``) and the search service, so "no window"
+#   compares equal across every layer.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,13 +161,26 @@ class DPSpec:
 
     def reduce3(self, left, up, upleft):
         """The 3-way predecessor reduction. Hard-min keeps the operand
-        order min(min(left, up), upleft) every pre-spec backend used;
-        soft-min keeps softdtw's [left, up, upleft] stack order — both
-        so the default paths stay bit-identical."""
+        order min(min(left, up), upleft) every pre-spec backend used.
+
+        Soft-min is the logsumexp fold ``-γ·logsumexp(-x/γ)`` written
+        in min-shifted form: shifting by the hard min makes every
+        exponent <= 0 *by construction*, so no intermediate can
+        overflow and no ``isfinite`` guard is needed — unlike
+        ``jax.nn.logsumexp``, whose internal max-guard ``where`` can
+        manufacture NaNs under XLA fusion inside Pallas kernel bodies
+        (observed on the interpret path; the de-optimized graph was
+        clean).  Mathematically identical to the stacked logsumexp, and
+        the shift contributes zero gradient (∂f/∂shift ≡ 0), so the
+        fold stays NaN-free under ``jax.grad`` as well.
+        """
         if not self.soft:
             return jnp.minimum(jnp.minimum(left, up), upleft)
-        stacked = jnp.stack([left, up, upleft], axis=0)
-        return -self.gamma * jax.nn.logsumexp(-stacked / self.gamma, axis=0)
+        mn = jnp.minimum(jnp.minimum(left, up), upleft)
+        s = (jnp.exp(-(left - mn) / self.gamma)
+             + jnp.exp(-(up - mn) / self.gamma)
+             + jnp.exp(-(upleft - mn) / self.gamma))
+        return mn - self.gamma * jnp.log(s)
 
     def cell_update(self, cost, left, up, upleft, *, free_start=None):
         """One DP cell: ``cost + reduce3(...)``.

@@ -21,12 +21,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.spec import DEFAULT_SPEC, PAD_VALUE, DPSpec  # noqa: F401
+from repro.core.spec import (DEFAULT_SPEC, NO_WINDOW,  # noqa: F401
+                             PAD_VALUE, DPSpec)
 # PAD_VALUE re-exported: cost >= (q - 1e6)^2 never wins — the dtype
 # rationale (and why it rules out cosine) lives with the other
 # sentinels in core/spec.py.
 from repro.kernels.sdtw_wavefront import (LANES, SUBLANES,
                                           sdtw_wavefront_pallas)
+from repro.kernels.wavefront import KernelPlan, build_plan
 from repro.kernels.normalizer import normalizer_pallas
 
 
@@ -73,6 +75,54 @@ def prepare_queries(q: jnp.ndarray) -> jnp.ndarray:
 prepare_queries_jit = jax.jit(prepare_queries)
 
 
+def validate_prepped(q_prepped, r_layout, *, m: int, n: int,
+                     segment_width: int) -> None:
+    """Shaped errors for mis-packed kernel operands.
+
+    A reference layout swizzled for one ``segment_width`` but
+    dispatched with another used to fail deep inside the pallas_call
+    with an opaque shape assert; these checks name the mismatch and the
+    fix instead.
+    """
+    if getattr(r_layout, "ndim", None) != 3 or \
+            r_layout.shape[1:] != (segment_width, LANES):
+        raise ValueError(
+            f"reference layout {tuple(getattr(r_layout, 'shape', ()))} "
+            f"does not match segment_width={segment_width}: expected "
+            f"(R, {segment_width}, {LANES}) from "
+            f"swizzle_reference(reference, segment_width="
+            f"{segment_width}) — the layout must be swizzled with the "
+            f"same segment_width it is dispatched with")
+    n_padded = r_layout.shape[0] * segment_width * LANES
+    if n > n_padded:
+        raise ValueError(
+            f"reference length n={n} exceeds the padded layout "
+            f"capacity {n_padded} (= {r_layout.shape[0]} blocks x "
+            f"{segment_width} x {LANES}); segment_width must divide "
+            f"the layout the reference was padded for — re-swizzle "
+            f"with swizzle_reference(reference, {segment_width})")
+    if getattr(q_prepped, "ndim", None) != 3 or \
+            q_prepped.shape[1] != SUBLANES or \
+            q_prepped.shape[2] != m + 2 * (LANES - 1):
+        raise ValueError(
+            f"query pack {tuple(getattr(q_prepped, 'shape', ()))} does "
+            f"not match m={m}: expected (G, {SUBLANES}, "
+            f"{m + 2 * (LANES - 1)}) from prepare_queries")
+
+
+def kernel_plan(spec: DPSpec | None = None, *, m: int, n: int,
+                segment_width: int = 8, compute_dtype=jnp.float32,
+                with_window: bool = False) -> KernelPlan:
+    """The :class:`~repro.kernels.wavefront.KernelPlan` a dispatch of
+    these (unpadded) shapes executes — band-skip geometry included, so
+    callers (search stats, benchmarks) can read ``plan.grid_blocks``
+    vs ``plan.num_ref_blocks`` without running the kernel."""
+    blocks = ceil_to(n, LANES * segment_width) // (LANES * segment_width)
+    return build_plan(DEFAULT_SPEC if spec is None else spec, m=m,
+                      segment_width=segment_width, num_ref_blocks=blocks,
+                      compute_dtype=compute_dtype, with_window=with_window)
+
+
 @functools.partial(jax.jit, static_argnames=("segment_width", "compute_dtype"))
 def _prep(queries, reference, *, segment_width, compute_dtype):
     return (prepare_queries(queries.astype(compute_dtype)),
@@ -111,11 +161,15 @@ def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
     return_window: also return matched-window start columns — the start
                pointers ride the same wavefront carries (ONE
                pallas_call either way, see kernels.sdtw_wavefront).
-               When a band blocks every real alignment the kernel
-               reports a pad-dominated finite cost rather than the
-               engine/ref +inf (its long-standing blocked-band
-               semantics), so its start is a clamped index, not the -1
-               no-window sentinel those backends return.
+               A band blocking every REAL bottom-row cell
+               (``m - 1 - band > n - 1``) is detected statically here
+               and short-circuits to the engine/ref answer — +inf
+               costs, end 0, NO_WINDOW starts — instead of letting
+               paths through PAD_VALUE padding columns report a
+               pad-dominated finite cost (the kernel's former
+               blocked-band semantics, which diverged from every other
+               backend and would have leaked through device-aware
+               auto-selection on TPU).
     Returns (costs (batch,) f32, end_indices (batch,) i32) — or
     (costs, starts, ends) when ``return_window`` — with indices clamped
     to ``n - 1`` so padded reference columns can never leak out as
@@ -126,18 +180,34 @@ def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
     operand shapes alone, so a serving batcher emitting the same shape
     grid with varying real-row counts (or references whose lengths
     differ but pad to the same layout) reuses one executable.
+
+    Soft-min specs run the soft carry channel (running logsumexp fold,
+    see ``repro.kernels.wavefront``); Sakoe–Chiba specs automatically
+    execute the band-skip plan — fewer grid steps, identical outputs
+    (``kernel_plan(...)`` exposes the geometry).
     """
+    validate_prepped(q_prepped, r_layout, m=m, n=n,
+                     segment_width=segment_width)
+    sp = DEFAULT_SPEC if spec is None else spec
+    if sp.band is not None and m - 1 - sp.band > n - 1:
+        # the band excludes every real bottom-row cell: no alignment
+        # exists.  Static in (m, n, band), so answer without touching
+        # the kernel — engine parity (+inf, end 0, NO_WINDOW start)
+        costs = jnp.full((batch,), jnp.inf, jnp.float32)
+        ends = jnp.zeros((batch,), jnp.int32)
+        if return_window:
+            return costs, jnp.full((batch,), NO_WINDOW, jnp.int32), ends
+        return costs, ends
     out = _dispatch(q_prepped, r_layout, m=m,
                     segment_width=segment_width,
                     compute_dtype=compute_dtype,
                     interpret=_resolve_interpret(interpret),
-                    spec=DEFAULT_SPEC if spec is None else spec,
-                    with_window=return_window)
+                    spec=sp, with_window=return_window)
     if return_window:
         costs, starts, ends = out
-        # clamp padded-column starts like the ends, but keep the -1
-        # "no window" sentinel (blocked alignments) intact
-        return (costs[:batch], jnp.clip(starts[:batch], -1, n - 1),
+        # clamp padded-column starts like the ends, but keep the
+        # NO_WINDOW "no window" sentinel (blocked alignments) intact
+        return (costs[:batch], jnp.clip(starts[:batch], NO_WINDOW, n - 1),
                 jnp.minimum(ends[:batch], n - 1))
     costs, ends = out
     return costs[:batch], jnp.minimum(ends[:batch], n - 1)

@@ -1,235 +1,29 @@
-"""Pallas TPU wavefront sDTW kernel — the paper's kernel (§5.2), TPU-native.
+"""Compatibility shim over the carry-channel wavefront executor.
 
-Mapping of the paper's AMD/HIP mechanisms (DESIGN.md §2):
+The monolithic per-variant kernel that used to live here (one hand-
+written ``fori_loop`` body with a ``with_window`` if-forest duplicating
+every carry) is gone: ``repro.kernels.wavefront`` now expresses the
+wavefront ONCE as typed :class:`~repro.kernels.wavefront.CarryChannel`s
+plus a stream fold (``MinArgminFold`` / ``SoftMinFold``), and every
+variant (distance-only, +start-pointer window lanes, soft-min) is a
+:class:`~repro.kernels.wavefront.KernelPlan` executed by
+:func:`~repro.kernels.wavefront.wavefront_call`.
 
-  * wavefront thread  -> VPU **lane** (128 per step); each lane owns a
-    contiguous ``segment_width`` (w) slice of the reference, exactly the
-    paper's thread-coarsening knob (Fig. 3).
-  * pipeline skew     -> lane l computes query row ``i = t - l`` at step t.
-  * ``__shfl_up``     -> a +1 lane roll of the per-lane last-cell vector;
-    one boundary value crosses lanes per step, nothing else.
-  * per-thread double buffer -> the rotating ``prev_row`` VREG array
-    carried through ``lax.fori_loop``.
-  * inter-wavefront shared-memory strip -> a VMEM scratch column carried
-    across the (sequential) reference-block grid axis.  Because grid
-    steps are sequential on TPU, the read pointer (t+1) always leads the
-    write pointer (t-127) by 128 rows, so ONE buffer suffices where the
-    paper needed two (concurrent wavefronts).
-  * ``__hmin2`` streaming min -> a running (min, argmin) VREG pair folded
-    as bottom-row cells are produced; reduced across lanes once, at the
-    last reference block.
-  * batch of queries  -> grid axis 0, 8 queries per step packed in the
-    sublane dimension (the paper's block-per-query batching).
-
-The DP cell recurrence and the subsequence boundary conditions
-(``D[-1, j] = 0``, ``D[i, -1] = +inf``) are identical to
-``repro.core.ref``.
+This module keeps the historical entry point and constants so
+``repro.kernels.ops`` callers and prepped layouts are unchanged.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax import lax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.spec import DEFAULT_SPEC, KERNEL_BIG, DPSpec
+from repro.core.spec import DEFAULT_SPEC, KERNEL_BIG, NO_WINDOW, DPSpec
+from repro.kernels.wavefront import (LANES, SUBLANES,  # noqa: F401
+                                     KernelPlan, band_grid_blocks,
+                                     build_plan, wavefront_call)
 
-LANES = 128          # TPU VPU lane count (the paper's wavefront width = 64)
-SUBLANES = 8         # queries processed per grid step (sublane packing)
-NEG = -1           # sentinel for argmin init
-BIG = KERNEL_BIG   # python float: avoids capturing a traced constant
-#                    (value + dtype rationale live in core/spec.py)
-
-
-def _kernel(q_ref, r_ref, *refs,
-            m: int, w: int, num_ref_blocks: int, compute_dtype,
-            spec: DPSpec, with_window: bool):
-    """One (batch-group, reference-block) grid cell.
-
-    q_ref:    (1, SUBLANES, Mp)  reversed+padded queries (see ops.py)
-    r_ref:    (1, w, LANES)      reference block, [k, l] = r[blk*LANES*w + l*w + k]
-    cost_ref: (1, SUBLANES)      per-query min cost  (written at last block)
-    end_ref:  (1, SUBLANES)      per-query argmin end index
-    boundary: (SUBLANES, m)      VMEM strip: right column of this block,
-                                 becomes the left column of the next block
-    minval:   (SUBLANES, LANES)  running min   (persists across ref blocks)
-    minidx:   (SUBLANES, LANES)  running argmin
-
-    ``with_window`` adds a start-pointer carry lane to the SAME wavefront
-    (no second pallas_call): int32 start columns ride alongside every f32
-    DP lane — the per-segment left/up/upleft carries, the ``__shfl_up``
-    roll, the inter-block boundary strip, and the streaming argmin fold
-    each gain an int32 twin — plus one extra output:
-
-    start_ref:      (1, SUBLANES)  start column of the winning window
-    boundary_start: (SUBLANES, m)  int32 twin of the boundary strip
-    minstart:       (SUBLANES, LANES)  start column of each lane's best
-    """
-    if with_window:
-        (cost_ref, end_ref, start_ref,
-         boundary, boundary_start, minval, minidx, minstart) = refs
-    else:
-        cost_ref, end_ref, boundary, minval, minidx = refs
-    rblk = pl.program_id(1)
-    cdt = compute_dtype
-    big = jnp.asarray(BIG, cdt)
-
-    lane = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
-
-    @pl.when(rblk == 0)
-    def _init():
-        minval[...] = jnp.full((SUBLANES, LANES), BIG, jnp.float32)
-        minidx[...] = jnp.full((SUBLANES, LANES), NEG, jnp.int32)
-        if with_window:
-            minstart[...] = jnp.full((SUBLANES, LANES), NEG, jnp.int32)
-
-    r_blk = r_ref[0]                      # (w, LANES)
-    j_base = (rblk * LANES + lane) * w    # global ref index of lane's k=0
-
-    def step(t, carry):
-        if with_window:
-            (prev_row, left_in, prev_left,
-             prev_row_s, left_s_in, prev_left_s) = carry
-        else:
-            prev_row, left_in, prev_left = carry
-        # lane l is computing query row i = t - l this step
-        i_l = t - lane                                    # (S, L) int32
-        is_row0 = (i_l == 0)
-
-        # q value for (query s, lane l) = q[s, t - l]; q_ref stores the
-        # REVERSED query so this is an ascending slice (no lane flip).
-        qv = pl.load(q_ref, (pl.dslice(0, 1), slice(None),
-                             pl.dslice(m - 1 + LANES - 1 - t,
-                                       LANES)))[0]   # (S, L)
-        qv = qv.astype(cdt)
-
-        zero = jnp.asarray(0.0, cdt)
-        new_row = []
-        new_row_s = []
-        best_v = None
-        best_k = None
-        best_s = None
-        left = left_in
-        left_s = left_s_in if with_window else None
-        for k in range(w):
-            up = prev_row[k]
-            upleft = prev_left if k == 0 else prev_row[k - 1]
-            up = jnp.where(is_row0, zero, up)       # virtual row -1 == 0
-            upleft = jnp.where(is_row0, zero, upleft)
-            rv = r_blk[k].astype(cdt)               # (LANES,) -> bcast (S, L)
-            cost = spec.cell_cost(qv, rv)
-            val = spec.cell_update(cost, left, up, upleft)
-            in_band = None
-            if spec.band is not None:
-                # Sakoe–Chiba mask folded into the lane index math:
-                # lane l, segment slot k owns global column j_base + k
-                # while computing query row i_l — out-of-band cells read
-                # as BIG so no path can cross them.
-                in_band = spec.band_valid(i_l, j_base + k)
-                val = jnp.where(in_band, val, big)
-            if with_window:
-                # start pointer of the predecessor the hard-min picked;
-                # row 0 cells BEGIN a path at their own global column
-                s_up = prev_row_s[k]
-                s_upleft = prev_left_s if k == 0 else prev_row_s[k - 1]
-                start = spec.start3(left, up, upleft,
-                                    left_s, s_up, s_upleft)
-                start = jnp.where(is_row0, j_base + k, start)
-                if in_band is not None:
-                    start = jnp.where(in_band, start, NEG)
-                new_row_s.append(start)
-                left_s = start
-            new_row.append(val)
-            if best_v is None:
-                best_v, best_k = val, jnp.zeros_like(i_l)
-                best_s = new_row_s[0] if with_window else None
-            else:
-                take = val < best_v
-                best_v = jnp.where(take, val, best_v)
-                best_k = jnp.where(take, k, best_k)
-                if with_window:
-                    best_s = jnp.where(take, start, best_s)
-            left = val
-
-        # streaming (min, argmin) fold when a lane finishes its bottom row
-        at_bottom = (i_l == m - 1)
-        cand = best_v.astype(jnp.float32)
-        take = at_bottom & (cand < minval[...])
-        minval[...] = jnp.where(take, cand, minval[...])
-        minidx[...] = jnp.where(take, j_base + best_k, minidx[...])
-        if with_window:
-            minstart[...] = jnp.where(take, best_s, minstart[...])
-
-        last = new_row[w - 1]                             # (S, L)
-        # __shfl_up analogue: neighbour's last cell becomes my left value
-        rolled = pltpu.roll(last, 1, 1)
-        # lane 0: left column comes from the previous block's strip
-        t_next = jnp.minimum(t + 1, m - 1)
-        strip = pl.load(boundary, (slice(None), pl.dslice(t_next, 1)))  # (S,1)
-        strip = strip.astype(cdt)
-        use_strip = (rblk > 0) & ((t + 1) < m)
-        lane0_val = jnp.where(use_strip, strip, big)
-        next_left = jnp.where(lane == 0, lane0_val, rolled)
-        if with_window:
-            last_s = new_row_s[w - 1]
-            rolled_s = pltpu.roll(last_s, 1, 1)
-            strip_s = pl.load(boundary_start,
-                              (slice(None), pl.dslice(t_next, 1)))
-            lane0_s = jnp.where(use_strip, strip_s, NEG)
-            next_left_s = jnp.where(lane == 0, lane0_s, rolled_s)
-
-        # publish my right column for the next block (lane LANES-1, row i127)
-        i127 = t - (LANES - 1)
-
-        @pl.when((i127 >= 0) & (i127 < m))
-        def _store():
-            col = lax.slice(last, (0, LANES - 1), (SUBLANES, LANES))  # (S, 1)
-            pl.store(boundary, (slice(None), pl.dslice(i127, 1)),
-                     col.astype(jnp.float32))
-            if with_window:
-                col_s = lax.slice(last_s, (0, LANES - 1),
-                                  (SUBLANES, LANES))
-                pl.store(boundary_start,
-                         (slice(None), pl.dslice(i127, 1)), col_s)
-
-        if with_window:
-            return (new_row, next_left, left_in,
-                    new_row_s, next_left_s, left_s_in)
-        return (new_row, next_left, left_in)
-
-    prev0 = [jnp.zeros((SUBLANES, LANES), cdt) for _ in range(w)]
-    # t=0: only lane 0 active (row 0); its left is the strip (block>0) / inf
-    strip0 = pl.load(boundary, (slice(None), pl.dslice(0, 1))).astype(cdt)
-    left0 = jnp.where(lane == 0,
-                      jnp.where(rblk > 0, strip0, big), big)
-    prev_left0 = jnp.full((SUBLANES, LANES), big, cdt)
-    if with_window:
-        prev0_s = [jnp.full((SUBLANES, LANES), NEG, jnp.int32)
-                   for _ in range(w)]
-        strip0_s = pl.load(boundary_start, (slice(None), pl.dslice(0, 1)))
-        negs = jnp.full((SUBLANES, LANES), NEG, jnp.int32)
-        left0_s = jnp.where(lane == 0,
-                            jnp.where(rblk > 0, strip0_s, NEG), NEG)
-        carry = (prev0, left0, prev_left0, prev0_s, left0_s, negs)
-    else:
-        carry = (prev0, left0, prev_left0)
-    carry = lax.fori_loop(0, m + LANES - 1, step, carry)
-
-    @pl.when(rblk == num_ref_blocks - 1)
-    def _finalize():
-        mv = minval[...]                                  # (S, L) f32
-        best = jnp.min(mv, axis=1)                        # (S,)
-        arg = jnp.argmin(mv, axis=1)                      # (S,)
-        idx = jnp.take_along_axis(minidx[...], arg[:, None], axis=1)[:, 0]
-        cost_ref[0, :] = best
-        end_ref[0, :] = idx
-        if with_window:
-            start_ref[0, :] = jnp.take_along_axis(
-                minstart[...], arg[:, None], axis=1)[:, 0]
+NEG = NO_WINDOW    # historical alias; the sentinel lives in core.spec
+BIG = KERNEL_BIG   # likewise (value + dtype rationale in core/spec.py)
 
 
 def sdtw_wavefront_pallas(q_rev_pad: jnp.ndarray,
@@ -246,59 +40,18 @@ def sdtw_wavefront_pallas(q_rev_pad: jnp.ndarray,
     returns (costs (G, SUBLANES) f32, ends (G, SUBLANES) i32), plus
     starts (G, SUBLANES) i32 in the middle when ``with_window`` —
     computed by the SAME pallas_call (the start pointers ride the
-    wavefront carries; see ``_kernel``), never a second sweep.
+    wavefront carries as an int32 channel), never a second sweep.
 
     Capability floor (``repro.backends`` enforces this for API callers;
-    direct callers get the same error here): hard-min reductions and
-    padding-safe distances only — the streaming (min, argmin) fold and
-    the PAD_VALUE reference padding are hard-min / growing-cost shaped.
+    direct callers get the same error from the plan): hard- and
+    soft-min reductions with padding-safe distances — cosine is out
+    because the PAD_VALUE reference padding would not lose the argmin.
+    Sakoe–Chiba specs automatically run the band-skip plan (trailing
+    fully-out-of-band reference blocks are dropped from the grid;
+    outputs identical to the masked full grid).
     """
-    if spec.soft:
-        raise ValueError("kernel backend does not support soft-min: "
-                         "use engine")
-    if spec.distance == "cosine":
-        raise ValueError("kernel backend does not support cosine "
-                         "(PAD_VALUE padding columns would not lose the "
-                         "argmin): use engine or ref")
-    G, S, Mp = q_rev_pad.shape
-    R, w, L = r_layout.shape
-    assert S == SUBLANES and L == LANES and w == segment_width
-    assert Mp == m + 2 * (LANES - 1), (Mp, m)
-
-    kernel = functools.partial(_kernel, m=m, w=w, num_ref_blocks=R,
-                               compute_dtype=compute_dtype, spec=spec,
-                               with_window=with_window)
-    grid = (G, R)
-    out_shape = [jax.ShapeDtypeStruct((G, SUBLANES), jnp.float32),
-                 jax.ShapeDtypeStruct((G, SUBLANES), jnp.int32)]
-    in_specs = [
-        pl.BlockSpec((1, SUBLANES, Mp), lambda b, r: (b, 0, 0)),
-        pl.BlockSpec((1, w, LANES), lambda b, r: (r, 0, 0)),
-    ]
-    out_specs = [pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)),
-                 pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0))]
-    scratch = [
-        pltpu.VMEM((SUBLANES, m), jnp.float32),    # boundary strip
-        pltpu.VMEM((SUBLANES, LANES), jnp.float32),  # running min
-        pltpu.VMEM((SUBLANES, LANES), jnp.int32),    # running argmin
-    ]
-    if with_window:
-        # one extra output + the int32 twins of the strip / argmin
-        # scratch — same grid, same pallas_call
-        out_shape.append(jax.ShapeDtypeStruct((G, SUBLANES), jnp.int32))
-        out_specs.append(pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)))
-        scratch.insert(1, pltpu.VMEM((SUBLANES, m), jnp.int32))
-        scratch.append(pltpu.VMEM((SUBLANES, LANES), jnp.int32))
-    kwargs = {}
-    if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"))
-    out = pl.pallas_call(
-        kernel, grid=grid, in_specs=in_specs, out_specs=tuple(out_specs),
-        out_shape=tuple(out_shape), scratch_shapes=scratch,
-        interpret=interpret, **kwargs,
-    )(q_rev_pad, r_layout)
-    if with_window:
-        costs, ends, starts = out
-        return costs, starts, ends
-    return out
+    plan = build_plan(spec, m=m, segment_width=segment_width,
+                      num_ref_blocks=r_layout.shape[0],
+                      compute_dtype=compute_dtype,
+                      with_window=with_window)
+    return wavefront_call(plan, q_rev_pad, r_layout, interpret=interpret)

@@ -1,0 +1,574 @@
+"""Carry-channel wavefront executor — ONE generic Pallas kernel body for
+every sDTW wavefront variant.
+
+The paper's kernel (§5.2) is a single hard-min recurrence, but the repo
+needs three variants of the same wavefront: distance-only, distance +
+start-pointer window lanes, and the soft-min (logsumexp) reduction.
+Each variant differs only in WHAT rides the wavefront, never in HOW the
+wavefront moves — so this module splits the two concerns:
+
+  * a :class:`CarryChannel` describes one typed value that rides the
+    wavefront (dtype, init sentinels, boundary-strip dtype).  The
+    executor gives every channel the same mechanical treatment — the
+    per-segment left/up/upleft registers, the ``__shfl_up`` lane roll,
+    the inter-block VMEM boundary strip — so adding a channel never
+    duplicates a carry path;
+  * a stream fold turns bottom-row cells into the kernel's outputs
+    as they are produced (the paper's folded ``__hmin2``):
+    :class:`MinArgminFold` keeps the streaming (min, argmin[, argstart])
+    triple, :class:`SoftMinFold` keeps a running
+    ``-gamma * logsumexp(-x/gamma)`` accumulator pair next to the hard
+    argmin twin (end index + blocked detection);
+  * a :class:`KernelPlan` binds a ``DPSpec`` to concrete channels, a
+    fold, the grid geometry and the band-skip decision;
+    :func:`wavefront_call` assembles the ``fori_loop`` body, the VMEM
+    scratch and the ``pallas_call`` outputs from the plan.
+
+DESIGN — mapping channels back to the paper's AMD/HIP mechanisms:
+
+  * wavefront thread  -> VPU **lane** (128 per step); each lane owns a
+    contiguous ``segment_width`` (w) slice of the reference, the
+    paper's thread-coarsening knob (Fig. 3); pipeline skew puts lane l
+    on query row ``i = t - l`` at step t.
+  * per-thread double buffer -> each channel's rotating ``prev_row``
+    VREG array carried through ``lax.fori_loop`` — one per channel, so
+    the int32 start lanes and the f32 cost lanes advance in lockstep.
+  * ``__shfl_up``     -> :meth:`CarryChannel.roll_carry`: a +1 lane
+    roll of the channel's last-cell vector; one boundary value crosses
+    lanes per step per channel, nothing else.
+  * inter-wavefront shared-memory strip -> one VMEM scratch column PER
+    CHANNEL carried across the (sequential) reference-block grid axis.
+    Grid steps are sequential on TPU, so the read pointer (t+1) always
+    leads the write pointer (t-127) by LANES rows and ONE buffer per
+    channel suffices where the paper needed two (concurrent
+    wavefronts).
+  * ``__hmin2`` streaming min -> the stream folds: bottom-row
+    cells fold into per-lane VMEM accumulators as they are produced and
+    reduce across lanes once, at the LAST EXECUTED reference block.
+    The soft-min fold is the logsumexp analogue: per-lane running
+    (max, scaled-sum) pairs merged into one global
+    ``-gamma * logsumexp`` at finalize.
+  * batch of queries  -> grid axis 0, SUBLANES queries per step packed
+    in the sublane dimension (the paper's block-per-query batching).
+
+Band-skip: with a Sakoe–Chiba band every cell (i, j) with
+``j > (m - 1) + band`` is out of band for EVERY query row, so trailing
+reference blocks whose columns all satisfy that are never visited —
+:attr:`KernelPlan.grid_blocks` trims the pallas grid itself (fewer grid
+steps, not just dead lanes), ~O(N / band) fewer steps for tight bands.
+Outputs are bit-for-bit identical to the masked full-grid kernel: a
+skipped block's cells are all masked to the big sentinel, which can
+never win a fold, and no later block reads its boundary strip.
+
+The DP cell recurrence and the subsequence boundary conditions
+(``D[-1, j] = 0``, ``D[i, -1] = +inf``) are identical to
+``repro.core.ref``; the cell semantics (cost, reduction, band mask,
+start-pointer tie-break) all come from ``repro.core.spec.DPSpec`` —
+this module owns only the wavefront mechanics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.spec import (KERNEL_BIG, NO_WINDOW, SOFT_BIG, DPSpec)
+
+LANES = 128          # TPU VPU lane count (the paper's wavefront width = 64)
+SUBLANES = 8         # queries processed per grid step (sublane packing)
+
+
+# ------------------------------------------------------------- channels
+@dataclasses.dataclass(frozen=True)
+class CarryChannel:
+    """One typed value riding the wavefront.
+
+    The executor mechanically instantiates, for every channel: the
+    rotating ``prev_row`` registers (the paper's per-thread double
+    buffer), the lane roll (``__shfl_up``), and a VMEM boundary strip
+    of ``strip_dtype`` carried across reference blocks.  Only the cell
+    update (what value each DP cell writes into the channel) is
+    plan-specific — see :meth:`KernelPlan.cell`.
+
+    ``prev_init`` seeds the rotating registers (read only by junk lanes
+    whose row index is out of [0, m): any finite value works; 0 keeps
+    the pre-refactor f32 graph).  ``edge_init`` is the "no value
+    crossed the boundary" sentinel: lane 0's left column at block 0,
+    and strip reads beyond the query length.
+    """
+
+    name: str
+    prev_init: float | int
+    edge_init: float | int
+    strip_dtype_name: str = "float32"
+    use_compute_dtype: bool = True   # registers in the plan's compute
+    #                                  dtype (False: the strip dtype)
+
+    @property
+    def strip_dtype(self):
+        return jnp.dtype(self.strip_dtype_name)
+
+    def reg_dtype(self, compute_dtype):
+        return jnp.dtype(compute_dtype) if self.use_compute_dtype \
+            else self.strip_dtype
+
+    # ------------------------------------------------------------ hooks
+    def init_carry(self, strip_ref, *, lane, rblk, w, compute_dtype):
+        """(prev_row registers, left column, prev-left) at t = 0."""
+        dt = self.reg_dtype(compute_dtype)
+        edge = jnp.asarray(self.edge_init, dt)
+        prev0 = tuple(jnp.full((SUBLANES, LANES), self.prev_init, dt)
+                      for _ in range(w))
+        # t=0: only lane 0 is active (row 0); its left column is the
+        # previous block's strip (block > 0) or the edge sentinel
+        strip0 = pl.load(strip_ref,
+                         (slice(None), pl.dslice(0, 1))).astype(dt)
+        left0 = jnp.where(lane == 0,
+                          jnp.where(rblk > 0, strip0, edge), edge)
+        prev_left0 = jnp.full((SUBLANES, LANES), self.edge_init, dt)
+        return (prev0, left0, prev_left0)
+
+    def roll_carry(self, last, *, lane, strip_val, use_strip,
+                   compute_dtype):
+        """``__shfl_up`` analogue: the neighbour lane's last cell
+        becomes my left value; lane 0 reads the previous block's
+        boundary strip (or the edge sentinel past the query)."""
+        dt = self.reg_dtype(compute_dtype)
+        rolled = pltpu.roll(last, 1, 1)
+        lane0 = jnp.where(use_strip, strip_val,
+                          jnp.asarray(self.edge_init, dt))
+        return jnp.where(lane == 0, lane0, rolled)
+
+    def read_strip(self, strip_ref, t, *, compute_dtype):
+        return pl.load(strip_ref, (slice(None), pl.dslice(t, 1))) \
+            .astype(self.reg_dtype(compute_dtype))
+
+    def write_strip(self, strip_ref, i, last):
+        """Publish the channel's right column (lane LANES-1) for the
+        next reference block."""
+        col = lax.slice(last, (0, LANES - 1), (SUBLANES, LANES))
+        pl.store(strip_ref, (slice(None), pl.dslice(i, 1)),
+                 col.astype(self.strip_dtype))
+
+    def strip_shape(self, m: int):
+        return pltpu.VMEM((SUBLANES, m), self.strip_dtype)
+
+
+# ---------------------------------------------------------------- folds
+@dataclasses.dataclass(frozen=True)
+class MinArgminFold:
+    """Streaming (min, argmin[, argstart]) over bottom-row cells — the
+    paper's folded ``__hmin2``, plus the int32 argmin/argstart twins."""
+
+    with_window: bool = False
+
+    def scratch_shapes(self):
+        shapes = [pltpu.VMEM((SUBLANES, LANES), jnp.float32),   # min
+                  pltpu.VMEM((SUBLANES, LANES), jnp.int32)]     # argmin
+        if self.with_window:
+            shapes.append(pltpu.VMEM((SUBLANES, LANES), jnp.int32))
+        return shapes
+
+    def init(self, scr):
+        scr[0][...] = jnp.full((SUBLANES, LANES), KERNEL_BIG, jnp.float32)
+        scr[1][...] = jnp.full((SUBLANES, LANES), NO_WINDOW, jnp.int32)
+        if self.with_window:
+            scr[2][...] = jnp.full((SUBLANES, LANES), NO_WINDOW,
+                                   jnp.int32)
+
+    def _segment_best(self, rows, j_base, w):
+        """(value, global column[, start]) of the best cell in each
+        lane's w-wide segment, with the shared strict-< tie-break
+        (earliest column wins)."""
+        best_v, best_k = rows["cost"][0], jnp.zeros_like(j_base)
+        best_s = rows["start"][0] if self.with_window else None
+        for k in range(1, w):
+            val = rows["cost"][k]
+            take = val < best_v
+            best_v = jnp.where(take, val, best_v)
+            best_k = jnp.where(take, k, best_k)
+            if self.with_window:
+                best_s = jnp.where(take, rows["start"][k], best_s)
+        return best_v, j_base + best_k, best_s
+
+    def update(self, scr, *, at_bottom, rows, j_base, plan):
+        best_v, best_j, best_s = self._segment_best(
+            rows, j_base, plan.segment_width)
+        cand = best_v.astype(jnp.float32)
+        take = at_bottom & (cand < scr[0][...])
+        scr[0][...] = jnp.where(take, cand, scr[0][...])
+        scr[1][...] = jnp.where(take, best_j, scr[1][...])
+        if self.with_window:
+            scr[2][...] = jnp.where(take, best_s, scr[2][...])
+
+    def _cross_lane(self, scr):
+        mv = scr[0][...]                                  # (S, L) f32
+        best = jnp.min(mv, axis=1)                        # (S,)
+        arg = jnp.argmin(mv, axis=1)                      # (S,)
+        idx = jnp.take_along_axis(scr[1][...], arg[:, None], axis=1)[:, 0]
+        return best, arg, idx
+
+    def finalize(self, scr, outs, plan):
+        best, arg, idx = self._cross_lane(scr)
+        outs[0][0, :] = best
+        outs[1][0, :] = idx
+        if self.with_window:
+            outs[2][0, :] = jnp.take_along_axis(
+                scr[2][...], arg[:, None], axis=1)[:, 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftMinFold:
+    """Streaming soft-min over bottom-row cells.
+
+    Per lane, a running-max logsumexp pair ``(m, s)`` accumulates
+    ``x = -D[M-1, j] / gamma`` over the w bottom cells the lane
+    produces per reference block (the soft analogue of the folded
+    ``__hmin2``); finalize merges the per-lane pairs into one global
+    ``-gamma * logsumexp(-x/gamma)``.  A hard (min, argmin) twin rides
+    along for the end index (the engine's bottom-row hard argmin, which
+    converges to the hard end as gamma -> 0) and for blocked-band
+    detection (all bottom cells masked -> +inf, engine parity).
+    """
+
+    def scratch_shapes(self):
+        return MinArgminFold().scratch_shapes() + [
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),   # running max m
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32)]   # scaled sum s
+
+    def init(self, scr):
+        MinArgminFold().init(scr[:2])
+        scr[2][...] = jnp.full((SUBLANES, LANES), -SOFT_BIG, jnp.float32)
+        scr[3][...] = jnp.zeros((SUBLANES, LANES), jnp.float32)
+
+    def update(self, scr, *, at_bottom, rows, j_base, plan):
+        MinArgminFold().update(scr[:2], at_bottom=at_bottom, rows=rows,
+                               j_base=j_base, plan=plan)
+        gamma = plan.spec.gamma
+        xs = [-(rows["cost"][k].astype(jnp.float32)) / gamma
+              for k in range(plan.segment_width)]
+        mx = xs[0]
+        for x in xs[1:]:
+            mx = jnp.maximum(mx, x)
+        m_run, s_run = scr[2][...], scr[3][...]
+        # m_safe >= every exponent, so no exp below can overflow; the
+        # at_bottom gate means each lane folds its w bottom cells
+        # exactly once per reference block
+        m_safe = jnp.maximum(m_run, mx)
+        add = xs[0] * 0.0
+        for x in xs:
+            add = add + jnp.exp(x - m_safe)
+        s_new = s_run * jnp.exp(m_run - m_safe) + add
+        scr[2][...] = jnp.where(at_bottom, m_safe, m_run)
+        scr[3][...] = jnp.where(at_bottom, s_new, s_run)
+
+    def finalize(self, scr, outs, plan):
+        best, _, idx = MinArgminFold()._cross_lane(scr[:2])
+        m_l, s_l = scr[2][...], scr[3][...]               # (S, L)
+        m_g = jnp.max(m_l, axis=1)                        # (S,)
+        s_g = jnp.sum(s_l * jnp.exp(m_l - m_g[:, None]), axis=1)
+        cost = -plan.spec.gamma * (m_g + jnp.log(s_g))
+        # blocked band: every bottom cell was masked to ~SOFT_BIG — the
+        # logsumexp is a finite ~SOFT_BIG value; report +inf like the
+        # engine and the numpy oracle.  (Pad-dominated paths stay
+        # finite ~1e12 << SOFT_BIG/2: the kernel's long-standing
+        # blocked-band-with-reachable-padding semantics, see ops.py.)
+        blocked = best >= jnp.asarray(SOFT_BIG / 2, jnp.float32)
+        outs[0][0, :] = jnp.where(blocked,
+                                  jnp.asarray(jnp.inf, jnp.float32), cost)
+        outs[1][0, :] = idx
+
+
+# ----------------------------------------------------------------- plan
+def band_grid_blocks(m: int, band: int | None, num_ref_blocks: int,
+                     segment_width: int) -> int:
+    """Reference blocks a banded wavefront must actually visit: block b
+    owns columns [b*LANES*w, (b+1)*LANES*w), and every cell with
+    ``j > (m-1) + band`` is out of band for every query row."""
+    if band is None:
+        return num_ref_blocks
+    block_cols = LANES * segment_width
+    return max(1, min(num_ref_blocks,
+                      (m - 1 + band) // block_cols + 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """A ``DPSpec`` bound to concrete wavefront machinery: channels,
+    fold, grid geometry and the band-skip decision.  Frozen and
+    hashable — safe as a jit static argument."""
+
+    spec: DPSpec
+    m: int                       # query length
+    segment_width: int           # reference cells per lane (paper's w)
+    num_ref_blocks: int          # total blocks in the swizzled layout
+    compute_dtype_name: str = "float32"
+    with_window: bool = False    # int32 start-pointer channel + output
+    band_skip: bool = True       # trim the grid for Sakoe–Chiba specs
+
+    def __post_init__(self):
+        if self.spec.distance == "cosine":
+            raise ValueError(
+                "kernel backend does not support cosine (PAD_VALUE "
+                "padding columns would not lose the argmin): use "
+                "engine or ref")
+        if self.spec.soft and self.with_window:
+            raise ValueError(
+                "with_window needs a hard-min spec: soft-min has no "
+                "argmin path (use repro.align.soft)")
+        if self.spec.soft and self.compute_dtype_name != "float32":
+            raise ValueError(
+                "the soft-min channel accumulates logsumexp pairs in "
+                f"float32; got compute_dtype={self.compute_dtype_name}")
+
+    # -------------------------------------------------------- geometry
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.compute_dtype_name)
+
+    @property
+    def big(self) -> float:
+        """The masked-cell / edge sentinel.  Hard-min uses KERNEL_BIG
+        (bf16-survivable); soft-min uses SOFT_BIG so ``-big / gamma``
+        stays finite in f32 inside the logsumexp (see core.spec)."""
+        return SOFT_BIG if self.spec.soft else KERNEL_BIG
+
+    @property
+    def channels(self) -> tuple[CarryChannel, ...]:
+        cost = CarryChannel(name="cost", prev_init=0.0,
+                            edge_init=self.big,
+                            strip_dtype_name="float32",
+                            use_compute_dtype=True)
+        if not self.with_window:
+            return (cost,)
+        start = CarryChannel(name="start", prev_init=NO_WINDOW,
+                             edge_init=NO_WINDOW,
+                             strip_dtype_name="int32",
+                             use_compute_dtype=False)
+        return (cost, start)
+
+    @property
+    def fold(self):
+        if self.spec.soft:
+            return SoftMinFold()
+        return MinArgminFold(with_window=self.with_window)
+
+    @property
+    def num_outputs(self) -> int:
+        return 3 if self.with_window else 2
+
+    @property
+    def grid_blocks(self) -> int:
+        """Grid steps actually executed along the reference axis."""
+        if not self.band_skip:
+            return self.num_ref_blocks
+        return band_grid_blocks(self.m, self.spec.band,
+                                self.num_ref_blocks, self.segment_width)
+
+    @property
+    def skipped_blocks(self) -> int:
+        return self.num_ref_blocks - self.grid_blocks
+
+    # ------------------------------------------------------------ cell
+    def cell(self, qv, rv, *, is_row0, i_l, j_col, vals3):
+        """One DP cell across every channel.
+
+        ``vals3`` maps channel name -> (left, up, upleft) carries; the
+        return maps channel name -> the cell's new value.  Semantics
+        come entirely from the spec: ``cell_cost`` + ``cell_update``
+        (with the free-start row-0 boundary) for the cost channel,
+        ``start3`` (the shared strict-< tie-break) for the start
+        channel, ``band_valid`` masking both.
+        """
+        spec = self.spec
+        big = jnp.asarray(self.big, self.compute_dtype)
+        left, up, upleft = vals3["cost"]
+        cost = spec.cell_cost(qv, rv)
+        val = spec.cell_update(cost, left, up, upleft, free_start=is_row0)
+        in_band = spec.band_valid(i_l, j_col)
+        if in_band is not None:
+            # Sakoe–Chiba mask folded into the lane index math: lane l,
+            # segment slot k owns global column j_col while computing
+            # query row i_l — out-of-band cells read as big so no path
+            # can cross them.
+            val = jnp.where(in_band, val, big)
+        out = {"cost": val}
+        if self.with_window:
+            # start pointer of the predecessor the hard-min picked;
+            # row-0 cells BEGIN a path at their own global column
+            s_left, s_up, s_upleft = vals3["start"]
+            start = spec.start3(left, up, upleft, s_left, s_up, s_upleft)
+            start = jnp.where(is_row0, j_col, start)
+            if in_band is not None:
+                start = jnp.where(in_band, start, NO_WINDOW)
+            out["start"] = start
+        return out
+
+
+def build_plan(spec: DPSpec, *, m: int, segment_width: int,
+               num_ref_blocks: int, compute_dtype=jnp.float32,
+               with_window: bool = False,
+               band_skip: bool = True) -> KernelPlan:
+    """Convenience constructor accepting a jnp dtype object."""
+    return KernelPlan(spec=spec, m=m, segment_width=segment_width,
+                      num_ref_blocks=num_ref_blocks,
+                      compute_dtype_name=jnp.dtype(compute_dtype).name,
+                      with_window=with_window, band_skip=band_skip)
+
+
+# ------------------------------------------------------------- executor
+def _generic_kernel(q_ref, r_ref, *refs, plan: KernelPlan):
+    """One (batch-group, reference-block) grid cell, assembled from the
+    plan's channels and fold.
+
+    q_ref:  (1, SUBLANES, Mp)  reversed+padded queries (see ops.py)
+    r_ref:  (1, w, LANES)      reference block,
+                               [k, l] = r[blk*LANES*w + l*w + k]
+    refs:   plan.num_outputs output refs, one boundary strip per
+            channel, then the fold's scratch accumulators.
+    """
+    channels = plan.channels
+    fold = plan.fold
+    n_out, n_ch = plan.num_outputs, len(channels)
+    out_refs = refs[:n_out]
+    strip_refs = refs[n_out:n_out + n_ch]
+    scr = refs[n_out + n_ch:]
+
+    rblk = pl.program_id(1)
+    m, w = plan.m, plan.segment_width
+    cdt = plan.compute_dtype
+    lane = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
+
+    @pl.when(rblk == 0)
+    def _init():
+        fold.init(scr)
+
+    r_blk = r_ref[0]                      # (w, LANES)
+    j_base = (rblk * LANES + lane) * w    # global ref index of lane's k=0
+
+    def step(t, carry):
+        # lane l is computing query row i = t - l this step
+        i_l = t - lane                                    # (S, L) int32
+        is_row0 = (i_l == 0)
+
+        # q value for (query s, lane l) = q[s, t - l]; q_ref stores the
+        # REVERSED query so this is an ascending slice (no lane flip).
+        qv = pl.load(q_ref, (pl.dslice(0, 1), slice(None),
+                             pl.dslice(m - 1 + LANES - 1 - t,
+                                       LANES)))[0]   # (S, L)
+        qv = qv.astype(cdt)
+
+        rows = {ch.name: [] for ch in channels}
+        lefts = {ch.name: c[1] for ch, c in zip(channels, carry)}
+        for k in range(w):
+            vals3 = {}
+            for ch, (prev_row, _, prev_left) in zip(channels, carry):
+                up = prev_row[k]
+                upleft = prev_left if k == 0 else prev_row[k - 1]
+                vals3[ch.name] = (lefts[ch.name], up, upleft)
+            new = plan.cell(qv, r_blk[k].astype(cdt), is_row0=is_row0,
+                            i_l=i_l, j_col=j_base + k, vals3=vals3)
+            for ch in channels:
+                rows[ch.name].append(new[ch.name])
+                lefts[ch.name] = new[ch.name]
+
+        # streaming fold when a lane finishes its bottom row
+        fold.update(scr, at_bottom=(i_l == m - 1), rows=rows,
+                    j_base=j_base, plan=plan)
+
+        # lane roll + boundary-strip read, mechanically per channel
+        t_next = jnp.minimum(t + 1, m - 1)
+        use_strip = (rblk > 0) & ((t + 1) < m)
+        new_carry = []
+        for ch, strip_ref, (_, left_in, _) in zip(channels, strip_refs,
+                                                  carry):
+            last = rows[ch.name][w - 1]                   # (S, L)
+            strip_val = ch.read_strip(strip_ref, t_next,
+                                      compute_dtype=cdt)
+            next_left = ch.roll_carry(last, lane=lane,
+                                      strip_val=strip_val,
+                                      use_strip=use_strip,
+                                      compute_dtype=cdt)
+            new_carry.append((tuple(rows[ch.name]), next_left, left_in))
+
+        # publish right columns for the next block (lane LANES-1's row)
+        i127 = t - (LANES - 1)
+
+        @pl.when((i127 >= 0) & (i127 < m))
+        def _store():
+            for ch, strip_ref in zip(channels, strip_refs):
+                ch.write_strip(strip_ref, i127, rows[ch.name][w - 1])
+
+        return tuple(new_carry)
+
+    carry0 = tuple(ch.init_carry(strip_ref, lane=lane, rblk=rblk, w=w,
+                                 compute_dtype=cdt)
+                   for ch, strip_ref in zip(channels, strip_refs))
+    lax.fori_loop(0, m + LANES - 1, step, carry0)
+
+    @pl.when(rblk == plan.grid_blocks - 1)
+    def _finalize():
+        fold.finalize(scr, out_refs, plan)
+
+
+def wavefront_call(plan: KernelPlan, q_rev_pad: jnp.ndarray,
+                   r_layout: jnp.ndarray, *, interpret: bool = True):
+    """Execute a :class:`KernelPlan` as one ``pallas_call``.
+
+    q_rev_pad: (G, SUBLANES, Mp) reversed queries from
+               ``ops.prepare_queries``, Mp = m + 2*(LANES-1)
+    r_layout:  (R, w, LANES) pre-swizzled reference blocks
+    returns    (costs (G, SUBLANES) f32, ends (G, SUBLANES) i32), plus
+               starts in the middle for window plans — every channel
+               rides the SAME pallas_call, never a second sweep.
+    """
+    G, S, Mp = q_rev_pad.shape
+    R, w, L = r_layout.shape
+    if S != SUBLANES or L != LANES:
+        raise ValueError(
+            f"operand layout mismatch: queries packed {S} per group "
+            f"(want {SUBLANES}), reference {L} lanes (want {LANES})")
+    if w != plan.segment_width or R != plan.num_ref_blocks:
+        raise ValueError(
+            f"reference layout {tuple(r_layout.shape)} does not match "
+            f"the plan (segment_width={plan.segment_width}, "
+            f"num_ref_blocks={plan.num_ref_blocks})")
+    if Mp != plan.m + 2 * (LANES - 1):
+        raise ValueError(
+            f"query pack length {Mp} != m + 2*(LANES-1) = "
+            f"{plan.m + 2 * (LANES - 1)} (m={plan.m})")
+
+    kernel = functools.partial(_generic_kernel, plan=plan)
+    grid = (G, plan.grid_blocks)
+    out_shape = [jax.ShapeDtypeStruct((G, SUBLANES), jnp.float32),
+                 jax.ShapeDtypeStruct((G, SUBLANES), jnp.int32)]
+    out_specs = [pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)),
+                 pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0))]
+    if plan.with_window:
+        out_shape.append(jax.ShapeDtypeStruct((G, SUBLANES), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)))
+    in_specs = [
+        pl.BlockSpec((1, SUBLANES, Mp), lambda b, r: (b, 0, 0)),
+        pl.BlockSpec((1, w, LANES), lambda b, r: (r, 0, 0)),
+    ]
+    scratch = [ch.strip_shape(plan.m) for ch in plan.channels]
+    scratch += plan.fold.scratch_shapes()
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"))
+    out = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape), scratch_shapes=scratch,
+        interpret=interpret, **kwargs,
+    )(q_rev_pad, r_layout)
+    if plan.with_window:
+        costs, ends, starts = out
+        return costs, starts, ends
+    return out

@@ -51,7 +51,7 @@ import numpy as np
 from repro.backends import registry
 from repro.core.api import sdtw_batch
 from repro.core.normalize import normalize_batch
-from repro.core.spec import DPSpec, validate_query_list
+from repro.core.spec import NO_WINDOW, DPSpec, validate_query_list
 from repro.kernels import ops as _ops
 from repro.kernels.ops import ceil_to
 from repro.kernels.sdtw_wavefront import SUBLANES
@@ -120,6 +120,11 @@ class SearchStats:
     pruned_stage0: int = 0           # discarded on the coarse batched bound
     pruned_later: int = 0            # discarded on a tighter lazy stage
     dp_calls: int = 0                # backend dispatches (batched)
+    kernel_blocks_run: int = 0       # kernel grid steps actually executed
+    kernel_blocks_total: int = 0     # grid steps a full (unskipped) grid
+    #                                  would have executed — banded specs
+    #                                  pick the band-skip KernelPlan, so
+    #                                  run < total for tight bands
 
     @property
     def skipped(self) -> int:
@@ -128,6 +133,10 @@ class SearchStats:
     @property
     def skip_fraction(self) -> float:
         return self.skipped / self.pairs if self.pairs else 0.0
+
+    @property
+    def kernel_blocks_skipped(self) -> int:
+        return self.kernel_blocks_total - self.kernel_blocks_run
 
 
 class SearchService:
@@ -300,7 +309,10 @@ class SearchService:
                       found):
         """Full kernel sweep of the nominated queries against one
         reference, packed into fixed shapes by the QueryBatcher and fed
-        the index's cached swizzled layout."""
+        the index's cached swizzled layout.  Banded specs automatically
+        execute the band-skip KernelPlan — trailing fully-out-of-band
+        reference blocks are dropped from the pallas grid itself
+        (``stats.kernel_blocks_run`` vs ``kernel_blocks_total``)."""
         cfg = self.config
         batcher = QueryBatcher(max_slots=cfg.max_slots)
         for batch in batcher.pack([qlist[i] for i in qids], ids=qids):
@@ -310,6 +322,19 @@ class SearchService:
                 qk, rk, batch=batch.n_real, m=batch.length, n=entry.length,
                 segment_width=cfg.segment_width, interpret=cfg.interpret,
                 spec=self.spec, return_window=cfg.windows)
+            blocked = self.spec.band is not None and \
+                batch.length - 1 - self.spec.band > entry.length - 1
+            if not blocked:   # blocked bands short-circuit in ops:
+                #               no pallas grid ran, so no steps to count
+                plan = _ops.kernel_plan(self.spec, m=batch.length,
+                                        n=entry.length,
+                                        segment_width=cfg.segment_width,
+                                        with_window=cfg.windows)
+                grid_groups = qk.shape[0]
+                self.stats.kernel_blocks_run += \
+                    grid_groups * plan.grid_blocks
+                self.stats.kernel_blocks_total += \
+                    grid_groups * plan.num_ref_blocks
             self._record(out, batch.ids, order, entry.name, found)
             self.stats.dp_pairs += batch.n_real
             self.stats.dp_calls += 1
@@ -384,7 +409,7 @@ class SearchService:
                 order if scalar else order[row],
                 int(ends[row]),
                 name if scalar else name[row],
-                int(starts[row]) if starts is not None else -1))
+                int(starts[row]) if starts is not None else NO_WINDOW))
 
     # ------------------------------------------------------------ misc
     def _as_query_list(self, queries) -> list[jnp.ndarray]:
@@ -431,7 +456,7 @@ def brute_force_topk(index: ReferenceIndex, queries, k: int = 1, *,
             for row, i in enumerate(qids):
                 found[i].append((
                     float(costs[row]), order, int(ends[row]), e.name,
-                    int(starts[row]) if starts is not None else -1))
+                    int(starts[row]) if starts is not None else NO_WINDOW))
     return [[Match(reference=name, cost=cost, end=end,
                    start=(start if windows else None))
              for cost, _, end, name, start in sorted(f)[:k]]

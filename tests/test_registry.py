@@ -21,12 +21,18 @@ def test_unknown_backend():
         registry.get("gpu")
 
 
-def test_kernel_rejects_softmin_with_suggestion():
-    spec = DPSpec(reduction="softmin")
-    with pytest.raises(ValueError, match="does not support soft-min"):
-        registry.validate("kernel", spec)
-    with pytest.raises(ValueError, match="engine"):
-        registry.validate("kernel", spec)
+def test_kernel_accepts_softmin():
+    """The carry-channel executor's soft-min fold flipped the
+    (kernel x softmin) capability cell on."""
+    assert registry.supports("kernel", DPSpec(reduction="softmin"))
+    assert "kernel" in registry.capable(DPSpec(reduction="softmin"))
+
+
+def test_kernel_rejects_softmin_windows():
+    """Soft-min has no argmin path, so soft WINDOWS stay rejected."""
+    with pytest.raises(ValueError, match="soft-min"):
+        registry.resolve("kernel", DPSpec(reduction="softmin"),
+                         alignment="window")
 
 
 def test_kernel_rejects_cosine():
@@ -65,7 +71,24 @@ def test_select_prefers_engine_and_respects_capability():
     backend, spec = registry.select(DEFAULT_SPEC, preferred="kernel")
     assert backend.name == "kernel" and spec == DEFAULT_SPEC
     with pytest.raises(ValueError, match="does not support"):
-        registry.select(DPSpec(reduction="softmin"), preferred="kernel")
+        registry.select(DPSpec(distance="cosine"), preferred="kernel")
+
+
+def test_select_prefers_kernel_on_tpu(monkeypatch):
+    """Auto-selection is device-aware: on a TPU-capable config the
+    wavefront kernel leads for every spec it supports — soft-min
+    included — while CPU/GPU configs keep the engine first."""
+    monkeypatch.setattr(registry, "_device_default", lambda: "tpu")
+    assert registry.select(DEFAULT_SPEC)[0].name == "kernel"
+    assert registry.select(DPSpec(reduction="softmin"))[0].name == "kernel"
+    # specs the kernel cannot run still fall through to the engine
+    assert registry.select(DPSpec(distance="cosine"))[0].name == "engine"
+    # gradient callers opt out of the forward-only kernel explicitly
+    soft = DPSpec(reduction="softmin")
+    assert registry.select(soft, differentiable=True)[0].name == "engine"
+    assert "kernel" not in registry.capable(soft, differentiable=True)
+    monkeypatch.setattr(registry, "_device_default", lambda: "cpu")
+    assert registry.select(DEFAULT_SPEC)[0].name == "engine"
 
 
 def test_capable_ordering_and_exactness():
@@ -81,7 +104,7 @@ def test_capability_rows_table():
                                             "quantized", "distributed"}
     kernel = next(r for r in rows if r["backend"] == "kernel")
     assert "cosine" not in kernel["distances"]
-    assert kernel["reductions"] == "hardmin"
+    assert kernel["reductions"] == "hardmin,softmin"
 
 
 def test_duplicate_registration_rejected():

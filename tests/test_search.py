@@ -263,9 +263,15 @@ def test_index_spec_is_service_default(workload):
 
 def test_service_rejects_incapable_backend(workload):
     index, _, _ = workload
-    with pytest.raises(ValueError, match="does not support soft-min"):
+    with pytest.raises(ValueError, match="does not support distance"):
         SearchService(index, SearchConfig(
-            backend="kernel", spec=DPSpec(reduction="softmin")))
+            backend="kernel", spec=DPSpec(distance="cosine")))
+    # soft-min runs on the kernel since the carry-channel executor,
+    # but soft WINDOWS stay impossible (no argmin path)
+    with pytest.raises(ValueError, match="soft-min"):
+        SearchService(index, SearchConfig(
+            backend="kernel", spec=DPSpec(reduction="softmin"),
+            windows=True))
     with pytest.raises(ValueError, match="distributed"):
         SearchService(index, SearchConfig(backend="distributed"))
 

@@ -1,0 +1,284 @@
+"""Carry-channel wavefront plans: the soft-min channel vs the engine /
+numpy oracle, the band-skip plan vs the masked full grid (bit-for-bit),
+plan geometry, and the shaped operand-validation errors.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.align.soft import soft_costs
+from repro.core.engine import sdtw_engine
+from repro.core.spec import NO_WINDOW, DPSpec
+from repro.kernels import ops
+from repro.kernels.wavefront import (LANES, band_grid_blocks, build_plan,
+                                     wavefront_call)
+
+GAMMAS = (0.01, 0.1, 1.0)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    q = rng.normal(size=(4, 16)).astype(np.float32)
+    r = rng.normal(size=(300,)).astype(np.float32)
+    return jnp.asarray(q), jnp.asarray(r)
+
+
+# ------------------------------------------------------ soft-min channel
+@pytest.mark.parametrize("gamma", GAMMAS)
+def test_soft_kernel_matches_engine(data, gamma):
+    """The kernel's running -γ·logsumexp(-x/γ) fold must reproduce the
+    engine's soft costs (1e-4, the acceptance bar) and its soft end
+    indices exactly."""
+    q, r = data
+    spec = DPSpec(reduction="softmin", gamma=gamma)
+    ce, ee = sdtw_engine(q, r, spec=spec)
+    ck, ek = ops.sdtw_wavefront(q, r, segment_width=2, interpret=True,
+                                spec=spec)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(ce),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(ee))
+
+
+@pytest.mark.parametrize("gamma", (0.1, 1.0))
+def test_soft_kernel_banded_matches_engine(data, gamma):
+    q, r = data
+    spec = DPSpec(reduction="softmin", gamma=gamma, band=24)
+    ce, ee = sdtw_engine(q, r, spec=spec)
+    ck, ek = ops.sdtw_wavefront(q, r, segment_width=2, interpret=True,
+                                spec=spec)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(ce),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(ee))
+
+
+def test_soft_kernel_gamma_to_zero_recovers_hardmin(data):
+    q, r = data
+    hard, _ = ops.sdtw_wavefront(q, r, segment_width=2, interpret=True)
+    soft, _ = ops.sdtw_wavefront(
+        q, r, segment_width=2, interpret=True,
+        spec=DPSpec(reduction="softmin", gamma=1e-3))
+    np.testing.assert_allclose(np.asarray(soft), np.asarray(hard),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_soft_kernel_multi_block(data):
+    """Soft accumulators must survive the inter-block boundary-strip
+    handoff: a reference spanning several LANES*w blocks."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 24)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(128 * 2 * 3 + 37,)).astype(np.float32))
+    spec = DPSpec(reduction="softmin", gamma=0.1)
+    ce, ee = sdtw_engine(q, r, spec=spec)
+    ck, ek = ops.sdtw_wavefront(q, r, segment_width=2, interpret=True,
+                                spec=spec)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(ce),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(ee))
+
+
+def test_soft_kernel_rejects_windows_and_bf16(data):
+    q, r = data
+    with pytest.raises(ValueError, match="hard-min"):
+        ops.sdtw_wavefront(q, r, interpret=True,
+                           spec=DPSpec(reduction="softmin"),
+                           return_window=True)
+    with pytest.raises(ValueError, match="float32"):
+        ops.sdtw_wavefront(q, r, interpret=True,
+                           spec=DPSpec(reduction="softmin"),
+                           compute_dtype=jnp.bfloat16)
+
+
+def test_soft_costs_routes_through_registry(data):
+    """align.soft_costs == engine softmin on CPU (auto-select), and a
+    bare gamma promotes the spec to softmin."""
+    q, r = data
+    spec = DPSpec(reduction="softmin", gamma=0.5)
+    ce, ee = sdtw_engine(q, r, spec=spec)
+    ca, ea = soft_costs(q, r, gamma=0.5, normalize=False)
+    np.testing.assert_allclose(np.asarray(ca), np.asarray(ce),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ea), np.asarray(ee))
+
+
+# -------------------------------------------------------- band-skip plan
+@pytest.mark.parametrize("band", [4, 32, 300, 10 ** 6])
+@pytest.mark.parametrize("reduction", ["hardmin", "softmin"])
+def test_band_skip_bit_for_bit(band, reduction):
+    """The band-skip plan must be bit-for-bit equal to the masked
+    full-grid kernel: across tight bands (smaller than one reference
+    block), mid bands, and band=∞ (no block skippable)."""
+    rng = np.random.default_rng(5)
+    m, w = 12, 2
+    q = jnp.asarray(rng.normal(size=(3, m)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(128 * 2 * 3 + 50,)).astype(np.float32))
+    spec = DPSpec(reduction=reduction, band=band)
+    qp = ops.prepare_queries(q)
+    rl = ops.swizzle_reference(r, w)
+    outs = {}
+    for skip in (True, False):
+        plan = build_plan(spec, m=m, segment_width=w,
+                          num_ref_blocks=rl.shape[0], band_skip=skip)
+        outs[skip] = wavefront_call(plan, qp, rl, interpret=True)
+        if not skip:
+            assert plan.grid_blocks == plan.num_ref_blocks
+    for a, b in zip(outs[True], outs[False]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # tight bands genuinely drop grid steps; band=∞ drops none
+    plan = build_plan(spec, m=m, segment_width=w,
+                      num_ref_blocks=rl.shape[0])
+    expected = min(rl.shape[0], (m - 1 + band) // (LANES * w) + 1)
+    assert plan.grid_blocks == expected
+    assert plan.skipped_blocks == rl.shape[0] - expected
+    if band <= LANES * w:
+        assert plan.grid_blocks == 1 and plan.skipped_blocks > 0
+    if band >= 10 ** 6:
+        assert plan.skipped_blocks == 0
+
+
+def test_band_skip_windows_bit_for_bit():
+    """Start-pointer lanes ride the skipped grid unchanged."""
+    rng = np.random.default_rng(9)
+    m, w = 10, 2
+    q = jnp.asarray(rng.normal(size=(2, m)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(128 * 2 * 2 + 31,)).astype(np.float32))
+    spec = DPSpec(band=20)
+    qp = ops.prepare_queries(q)
+    rl = ops.swizzle_reference(r, w)
+    outs = {}
+    for skip in (True, False):
+        plan = build_plan(spec, m=m, segment_width=w,
+                          num_ref_blocks=rl.shape[0], with_window=True,
+                          band_skip=skip)
+        outs[skip] = wavefront_call(plan, qp, rl, interpret=True)
+    assert build_plan(spec, m=m, segment_width=w,
+                      num_ref_blocks=rl.shape[0]).skipped_blocks > 0
+    for a, b in zip(outs[True], outs[False]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_band_skip_through_public_api():
+    """The public kernel path (which always skips) equals the engine
+    under a tight band — end to end, not just kernel vs kernel."""
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.normal(size=(2, 16)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(700,)).astype(np.float32))
+    spec = DPSpec(band=40)
+    ce, ee = sdtw_engine(q, r, spec=spec)
+    ck, ek = ops.sdtw_wavefront(q, r, segment_width=2, interpret=True,
+                                spec=spec)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(ce),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(ee))
+    plan = ops.kernel_plan(spec, m=16, n=700, segment_width=2)
+    assert plan.grid_blocks < plan.num_ref_blocks
+
+
+def test_band_grid_blocks_geometry():
+    assert band_grid_blocks(16, None, 7, 2) == 7
+    assert band_grid_blocks(16, 10 ** 9, 7, 2) == 7
+    assert band_grid_blocks(16, 0, 7, 2) == 1       # tightest band
+    # j <= m-1+band = 271 -> blocks 0..1 with 256-column blocks
+    assert band_grid_blocks(16, 256, 7, 2) == 2
+
+
+# --------------------------------------------- search service plumbing
+def test_search_service_soft_kernel_and_band_stats():
+    """End to end: a SearchService on the kernel backend runs soft-min
+    sweeps (full sweeps — soft bounds are inadmissible) and, under a
+    banded spec, picks the band-skip plan (stats show fewer grid
+    blocks executed than a full grid)."""
+    from repro.search import ReferenceIndex, SearchConfig, SearchService
+    from repro.search.service import brute_force_topk
+
+    rng = np.random.default_rng(21)
+    index = ReferenceIndex()
+    for name in ("a", "b", "c"):
+        index.add(name, rng.normal(size=(700,)).astype(np.float32))
+    q = rng.normal(size=(3, 16)).astype(np.float32)
+
+    soft_spec = DPSpec(reduction="softmin", gamma=0.5)
+    svc = SearchService(index, SearchConfig(backend="kernel",
+                                            spec=soft_spec,
+                                            segment_width=2))
+    hits = svc.topk(q, k=2)
+    brute = brute_force_topk(index, q, k=2, backend="kernel",
+                             spec=soft_spec, segment_width=2)
+    for h, b in zip(hits, brute):
+        assert [(m.reference, m.end) for m in h] == \
+            [(m.reference, m.end) for m in b]
+        np.testing.assert_allclose([m.cost for m in h],
+                                   [m.cost for m in b], rtol=1e-6)
+
+    banded = SearchService(index, SearchConfig(backend="kernel",
+                                               spec=DPSpec(band=40),
+                                               segment_width=2))
+    banded.topk(q, k=1)
+    assert banded.stats.kernel_blocks_total > 0
+    assert banded.stats.kernel_blocks_run < \
+        banded.stats.kernel_blocks_total
+
+    # a band blocking every alignment (m - 1 - band > n - 1) short-
+    # circuits in ops without running the pallas grid: the "blocks
+    # actually executed" stat must stay zero
+    long_q = rng.normal(size=(2, 720)).astype(np.float32)
+    blocked = SearchService(index, SearchConfig(backend="kernel",
+                                                spec=DPSpec(band=2),
+                                                segment_width=2))
+    hits = blocked.topk(long_q, k=1)
+    assert blocked.stats.kernel_blocks_run == 0
+    assert all(not np.isfinite(m.cost) for h in hits for m in h)
+
+
+# ------------------------------------------------------- shaped errors
+def test_prepped_segment_width_mismatch_is_shaped_error(data):
+    q, r = data
+    qp = ops.prepare_queries(q)
+    rl = ops.swizzle_reference(r, 4)          # swizzled for w=4 ...
+    with pytest.raises(ValueError, match="segment_width=8"):
+        ops.sdtw_wavefront_prepped(qp, rl, batch=4, m=16, n=300,
+                                   segment_width=8)   # ... dispatched w=8
+    with pytest.raises(ValueError, match="does not match m="):
+        ops.sdtw_wavefront_prepped(qp, rl, batch=4, m=99, n=300,
+                                   segment_width=4)
+    with pytest.raises(ValueError, match="exceeds the padded layout"):
+        ops.sdtw_wavefront_prepped(qp, rl, batch=4, m=16, n=10 ** 6,
+                                   segment_width=4)
+
+
+@pytest.mark.parametrize("reduction", ["hardmin", "softmin"])
+def test_blocked_band_matches_engine(reduction):
+    """m - 1 - band > n - 1: no real bottom-row cell is in band, so no
+    alignment exists — the kernel must report the engine/ref answer
+    (+inf, end 0, NO_WINDOW start), never a pad-dominated finite cost.
+    Matters since device-aware auto-selection can route banded specs to
+    the kernel on TPU."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(2, 32)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    spec = DPSpec(reduction=reduction, band=2)
+    ce, ee = sdtw_engine(q, r, spec=spec)
+    ck, ek = ops.sdtw_wavefront(q, r, segment_width=2, interpret=True,
+                                spec=spec)
+    assert np.isinf(np.asarray(ck)).all() and np.isinf(np.asarray(ce)).all()
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(ee))
+    if reduction == "hardmin":
+        _, sk, _ = ops.sdtw_wavefront(q, r, segment_width=2,
+                                      interpret=True, spec=spec,
+                                      return_window=True)
+        assert (np.asarray(sk) == NO_WINDOW).all()
+
+
+# ------------------------------------------------------ shared sentinel
+def test_no_window_sentinel_is_shared():
+    import importlib
+    from repro.align.oracle import oracle_window
+    shim = importlib.import_module("repro.kernels.sdtw_wavefront")
+    assert shim.NEG == NO_WINDOW
+    # a band blocking every alignment reports NO_WINDOW at every layer
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(32,)).astype(np.float32)
+    r = rng.normal(size=(16,)).astype(np.float32)
+    spec = DPSpec(band=2)                     # M > N + band: unreachable
+    cost, start, end = oracle_window(q, r, spec=spec)
+    assert not np.isfinite(cost) and start == NO_WINDOW
