@@ -1,0 +1,88 @@
+"""Aligner session economics: cold vs warm dispatch.
+
+A serving frontend holds one ``repro.Aligner`` per reference and
+streams query batches through it.  This bench measures, per backend,
+
+  * **cold** — construct the session and run the first (tracing +
+    compiling) call for a batch shape;
+  * **warm** — the steady-state per-call latency at the same shape
+    (cache-hit dispatch only, zero retraces), and warm calls/sec;
+  * the session's trace/compile counters, asserting the contract the
+    tier-1 suite checks: one executable per (shape, outputs) key and
+    NO retraces on warm calls.
+
+  PYTHONPATH=src python -m benchmarks.aligner_session
+  PYTHONPATH=src python -m benchmarks.aligner_session --ci   # tiny, asserts
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+BACKENDS = ("engine", "kernel")
+
+
+def run(*, full: bool = False, ci: bool = False, csv: list | None = None):
+    import jax
+    import jax.numpy as jnp
+    import repro
+
+    if ci:
+        B, M, N, runs = 4, 12, 80, 5
+    elif full:
+        B, M, N, runs = 64, 128, 4096, 20
+    else:
+        B, M, N, runs = 16, 64, 1024, 20
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, M)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(N,)).astype(np.float32))
+    seg = 2 if ci else 4
+
+    print(f"[aligner_session] B={B} M={M} N={N} "
+          f"({'ci' if ci else 'full' if full else 'reduced'})")
+    for backend in BACKENDS:
+        t0 = time.perf_counter()
+        aligner = repro.Aligner(r, backend=backend, segment_width=seg)
+        jax.block_until_ready(aligner(q).cost)
+        cold = time.perf_counter() - t0
+
+        # steady state: same shape, same outputs -> dispatch only
+        jax.block_until_ready(aligner(q).cost)      # one extra warm-up
+        t0 = time.perf_counter()
+        for _ in range(runs):
+            jax.block_until_ready(aligner(q).cost)
+        warm = (time.perf_counter() - t0) / runs
+
+        st = aligner.stats
+        assert st.compiles == 1 and st.traces == 1, st
+        assert st.cache_hits == st.calls - 1, st
+        speedup = cold / warm if warm > 0 else float("inf")
+        print(f"  {backend:7s}: cold {cold * 1e3:9.2f} ms   warm "
+              f"{warm * 1e3:7.3f} ms   ({1.0 / warm:9.1f} calls/s, "
+              f"{speedup:7.1f}x, traces={st.traces} "
+              f"compiles={st.compiles} hits={st.cache_hits})")
+        if csv is not None:
+            csv.append({"bench": "aligner_session", "backend": backend,
+                        "B": B, "M": M, "N": N,
+                        "ms_cold": round(cold * 1e3, 3),
+                        "ms_warm": round(warm * 1e3, 4),
+                        "warm_calls_per_s": round(1.0 / warm, 1),
+                        "cold_over_warm": round(speedup, 1)})
+        if ci:
+            # the whole point of a session: warm dispatch must be far
+            # cheaper than the cold trace+compile path
+            assert warm * 10 < cold, (backend, cold, warm)
+    if ci:
+        print("  warm << cold and zero warm retraces on every backend "
+              "(ci assert)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ci", action="store_true")
+    args = ap.parse_args()
+    run(full=args.full, ci=args.ci)

@@ -24,7 +24,7 @@ def main(argv=None):
     from benchmarks import table1_throughput, fig3_segment_width
     from benchmarks import train_step_bench, sdtw_scaling
     from benchmarks import search_throughput, backend_matrix
-    from benchmarks import align_throughput, band_skip
+    from benchmarks import align_throughput, band_skip, aligner_session
 
     print("=" * 70)
     table1_throughput.run(full=args.full, kernel=args.kernel, csv=rows)
@@ -42,6 +42,8 @@ def main(argv=None):
     align_throughput.run(full=args.full, csv=rows)
     print("=" * 70)
     band_skip.run(full=args.full, csv=rows)
+    print("=" * 70)
+    aligner_session.run(full=args.full, csv=rows)
 
     os.makedirs(args.out, exist_ok=True)
     keys = sorted({k for r in rows for k in r})

@@ -10,8 +10,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro import configs
-from repro.core.api import sdtw_batch
 from repro.core.softdtw import sdtw_soft
 from repro.models.model import Model
 
@@ -39,12 +39,12 @@ tracks = jnp.linalg.norm(h.astype(jnp.float32), axis=-1)      # (B, S)
 
 # 2) align each track against a longer reference track (track 0, tiled)
 reference = jnp.tile(tracks[0], 4)                            # (4S,)
-costs, ends = sdtw_batch(tracks, reference)
+res = repro.sdtw(tracks, reference, outputs=("cost", "start", "end"))
 print("alignment costs vs reference (track 0 should match itself ~0):")
 for i in range(B):
-    print(f"  track {i}: cost={float(costs[i]):8.3f} "
-          f"end={int(ends[i])}")
-assert float(costs[0]) <= float(jnp.min(costs[1:])) + 1e-3
+    print(f"  track {i}: cost={float(res.cost[i]):8.3f} "
+          f"window=[{int(res.start[i])}..{int(res.end[i])}]")
+assert float(res.cost[0]) <= float(jnp.min(res.cost[1:])) + 1e-3
 
 # 3) soft-sDTW as a differentiable alignment loss
 target = tracks[0]

@@ -1,11 +1,12 @@
-"""Quickstart: the paper's end-to-end flow in five lines.
+"""Quickstart: the paper's end-to-end flow through the one front door.
 
 Generates a batch of cylinder-bell-funnel queries and a reference (the
-paper's test dataset, §4), z-normalizes both, and runs batched
-subsequence-DTW — reporting the best-match cost and WHERE in the
-reference each query aligned: the matched window [start..end] comes
-from start pointers propagated through the same sweep (repro.align),
-not a second pass.
+paper's test dataset, §4), then asks ``repro.sdtw`` for costs AND the
+matched windows in one typed request — the (cost, start, end) triple
+falls out of a single fused sweep, returned as an ``SDTWResult``
+pytree.  The second half does what a serving loop would: build a
+``repro.Aligner`` session once (reference normalized once, executable
+compiled once) and stream query batches through it dispatch-only.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,9 +14,8 @@ not a second pass.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.align import sdtw_window
+import repro
 from repro.data.cbf import make_cylinder_bell_funnel
-
 from repro.core.normalize import normalize_batch
 
 rng = np.random.default_rng(0)
@@ -28,13 +28,26 @@ reference = np.array(normalize_batch(jnp.asarray(
 # is an exact subsequence match for it
 reference[300:300 + 128] = queries[3]
 
-costs, starts, ends = sdtw_window(jnp.asarray(queries),
-                                  jnp.asarray(reference), normalize=False)
-for i, (c, s, e) in enumerate(zip(costs, starts, ends)):
+# --- one-shot: request exactly the outputs you want -------------------
+res = repro.sdtw(jnp.asarray(queries), jnp.asarray(reference),
+                 outputs=("cost", "start", "end"), normalize=False)
+for i, (c, s, e) in enumerate(zip(res.cost, res.start, res.end)):
     mark = "  <-- planted at 300..427" if i == 3 else ""
     print(f"query {i}: cost={float(c):8.2f} "
           f"matches ref[{int(s)}..{int(e)}]{mark}")
 
-assert int(np.argmin(np.asarray(costs))) == 3, "planted query must win"
-assert (int(starts[3]), int(ends[3])) == (300, 427), "window must be exact"
-print("OK: planted query wins and its matched window is exact")
+assert res.path is None, "unrequested outputs stay None"
+assert int(np.argmin(np.asarray(res.cost))) == 3, "planted query must win"
+assert (int(res.start[3]), int(res.end[3])) == (300, 427), \
+    "window must be exact"
+
+# --- session: compile once, then dispatch-only ------------------------
+aligner = repro.Aligner(jnp.asarray(reference), normalize=False)
+warm = None
+for _ in range(3):                       # a serving loop in miniature
+    warm = aligner(jnp.asarray(queries), outputs=("cost", "start", "end"))
+assert aligner.stats.traces == 1, "warm calls must not retrace"
+assert np.array_equal(np.asarray(warm.cost), np.asarray(res.cost))
+print(f"OK: planted query wins, its matched window is exact, and the "
+      f"Aligner session served {aligner.stats.calls} calls from "
+      f"{aligner.stats.compiles} compile")

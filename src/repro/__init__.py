@@ -2,6 +2,46 @@
 
 Reproduction + scale-out of "Optimizing sDTW for AMD GPUs" (CS.DC 2024),
 adapted to TPU per DESIGN.md.
+
+One front door::
+
+    import repro
+    res = repro.sdtw(queries, reference,
+                     outputs=("cost", "start", "end"))   # SDTWResult
+    aligner = repro.Aligner(reference, band=128)         # session form
+    res = aligner(queries)                               # warm: dispatch
+
+Exports are lazy so ``import repro`` stays free of JAX/Pallas imports
+until an entry point is actually touched.
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+__all__ = ["sdtw", "sdtw_batch", "sdtw_search", "Aligner", "SDTWResult",
+           "DPSpec", "ALL_OUTPUTS"]
+
+_LAZY = {
+    "sdtw": ("repro.core.api", "sdtw"),
+    "sdtw_batch": ("repro.core.api", "sdtw_batch"),
+    "sdtw_search": ("repro.core.api", "sdtw_search"),
+    "Aligner": ("repro.core.session", "Aligner"),
+    "SDTWResult": ("repro.core.result", "SDTWResult"),
+    "ALL_OUTPUTS": ("repro.core.result", "ALL_OUTPUTS"),
+    "DPSpec": ("repro.core.spec", "DPSpec"),
+}
+
+
+def __getattr__(name):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value          # cache: resolve each name once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,20 +1,24 @@
 """repro.align — matched windows, warping paths and soft alignments.
 
 The layer that turns the repo from a distance calculator into an
-aligner.  Three artifacts, all backend-aware through the registry's
-``Capabilities.alignment`` axis:
+aligner.  Since the request/result front door, every artifact here is
+an ``outputs`` name on ``repro.sdtw`` / ``repro.Aligner`` — validated
+through the registry's ``Capabilities.outputs`` axis — and this module
+holds the machinery (plus the historical tuple entry points):
 
-  * **windows** (``sdtw_window``) — (cost, start, end) triples from
-    start-pointer propagation inside the SAME O(M)-memory sweep every
-    backend already runs (``DPSpec.start3``; int32 lanes riding the
-    Pallas wavefront carries on the kernel path);
-  * **paths** (``warping_path`` / ``warping_paths``) — the full
-    alignment via Hirschberg divide-and-conquer over the matched
-    window, O(M + N) memory;
-  * **soft alignments** (``expected_alignment``) — the smoothed
-    alignment matrix of softmin specs via ``jax.grad`` through a
-    cost-matrix engine sweep; ``soft_costs`` is the registry-routed
-    forward path (the Pallas kernel's soft-min channel on TPU).
+  * **windows** (``outputs=("cost", "start", "end")``; tuple shim
+    ``sdtw_window``) — start-pointer propagation inside the SAME
+    O(M)-memory fused sweep every backend already runs
+    (``DPSpec.start3``; int32 lanes riding the Pallas wavefront
+    carries on the kernel path);
+  * **paths** (``outputs=("path",)``; ``warping_path`` /
+    ``warping_paths``) — the full alignment via Hirschberg
+    divide-and-conquer over the matched window, O(M + N) memory;
+  * **soft alignments** (``outputs=("soft_alignment",)``;
+    ``expected_alignment``) — the smoothed alignment matrix of softmin
+    specs via ``jax.grad`` through a cost-matrix engine sweep;
+    ``soft_costs`` is the registry-routed forward path (the Pallas
+    kernel's soft-min channel on TPU).
 
 ``repro.align.oracle`` holds the full-matrix numpy backtrack ground
 truth the fast paths are tested against (shared tie-break contract).

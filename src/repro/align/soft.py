@@ -52,13 +52,14 @@ def soft_costs(queries, reference, *, spec: DPSpec | None = None,
     sets the temperature; a plain hard-min spec is promoted to softmin
     with its current gamma.
     """
-    from repro.core.api import sdtw_batch   # local: api imports align-free
+    from repro.core.api import sdtw   # local: api imports align lazily
     resolved = resolve_spec(spec, gamma=gamma, band=band)
     if not resolved.soft:
         resolved = resolve_spec(resolved, reduction="softmin")
-    return sdtw_batch(queries, reference, normalize=normalize,
-                      backend=backend, spec=resolved,
-                      segment_width=segment_width, interpret=interpret)
+    res = sdtw(queries, reference, outputs=("cost", "end"),
+               normalize=normalize, backend=backend, spec=resolved,
+               segment_width=segment_width, interpret=interpret)
+    return res.cost, res.end
 
 
 def cost_matrix(queries, reference, spec: DPSpec = DEFAULT_SPEC):

@@ -23,10 +23,10 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.api import sdtw
 from repro.core.normalize import normalize_batch
 from repro.core.spec import DEFAULT_SPEC, DPSpec
 from repro.core.ref import _np_cost
-from repro.align.window import sdtw_window
 
 # sub-problems at most this many cells use the full-matrix base case
 # (bounded, so Hirschberg's O(M + N) memory claim survives)
@@ -177,16 +177,21 @@ def warping_path(query, reference, *, spec: DPSpec | None = None,
     if spec.soft:
         raise ValueError("warping_path needs a hard-min spec "
                          "(see repro.align.soft)")
-    q = np.asarray(query, dtype=np.float64)
-    r = np.asarray(reference, dtype=np.float64)
+    # normalize in the input dtype (f32 accumulation either way), THEN
+    # lift to float64 for the oracle-precision sweeps: asking jax for a
+    # float64 view would warn + truncate under the default x64-disabled
+    # config
+    q, r = np.asarray(query), np.asarray(reference)
     if normalize:
-        q = np.asarray(normalize_batch(q), dtype=np.float64)
-        r = np.asarray(normalize_batch(r), dtype=np.float64)
+        q = np.asarray(normalize_batch(q))
+        r = np.asarray(normalize_batch(r))
+    q = q.astype(np.float64)
+    r = r.astype(np.float64)
     if window is None:
-        _, starts, ends = sdtw_window(
-            q[None, :], r, normalize=False, backend=backend, spec=spec,
-            segment_width=segment_width, interpret=interpret)
-        window = (int(starts[0]), int(ends[0]))
+        res = sdtw(q[None, :], r, outputs=("cost", "start", "end"),
+                   normalize=False, backend=backend, spec=spec,
+                   segment_width=segment_width, interpret=interpret)
+        window = (int(res.start[0]), int(res.end[0]))
     start, end = int(window[0]), int(window[1])
     if not 0 <= start <= end < len(r):
         raise ValueError(f"bad window {window} for reference of "
@@ -205,15 +210,16 @@ def warping_paths(queries, reference, *, spec: DPSpec | None = None,
                   interpret: bool | None = None) -> list[np.ndarray]:
     """Batch convenience: ONE batched window sweep (any window-capable
     backend), then per-query linear-memory tracebacks."""
-    queries = np.asarray(queries, dtype=np.float64)
-    reference = np.asarray(reference, dtype=np.float64)
+    queries = np.asarray(queries)
+    reference = np.asarray(reference)
     if normalize:
-        queries = np.asarray(normalize_batch(queries), dtype=np.float64)
-        reference = np.asarray(normalize_batch(reference),
-                               dtype=np.float64)
-    _, starts, ends = sdtw_window(
-        queries, reference, normalize=False, backend=backend, spec=spec,
-        segment_width=segment_width, interpret=interpret)
+        queries = np.asarray(normalize_batch(queries))
+        reference = np.asarray(normalize_batch(reference))
+    queries = queries.astype(np.float64)
+    reference = reference.astype(np.float64)
+    res = sdtw(queries, reference, outputs=("cost", "start", "end"),
+               normalize=False, backend=backend, spec=spec,
+               segment_width=segment_width, interpret=interpret)
     return [warping_path(q, reference, spec=spec, normalize=False,
                          window=(int(s), int(e)))
-            for q, s, e in zip(queries, starts, ends)]
+            for q, s, e in zip(queries, res.start, res.end)]

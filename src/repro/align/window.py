@@ -1,27 +1,30 @@
 """Matched-window extraction — WHERE a query aligns, not just how well.
 
-``sdtw_window`` is the alignment-aware sibling of
-``repro.core.api.sdtw_batch``: the same resolve-spec → registry →
-execute path, but the execution plan asks for windows
-(``ExecutionPlan.windows``), so every window-capable backend threads a
-start-column pointer through its DP carries (``DPSpec.start3``) and the
-(distance, start, end) triple falls out of the SAME O(M)-memory sweep —
-no second pass, no materialized matrix.  The Pallas kernel path carries
-the pointers as int32 lanes riding the f32 wavefront (one pallas_call
-either way).
+``sdtw_window`` is the DEPRECATED tuple shim for window requests: the
+typed front door is
+
+    res = repro.sdtw(queries, reference,
+                     outputs=("cost", "start", "end"))
+
+which threads a start-column pointer through every window-capable
+backend's DP carries (``DPSpec.start3``) so the (cost, start, end)
+triple falls out of the SAME O(M)-memory fused sweep — no second pass,
+no materialized matrix.  The Pallas kernel path carries the pointers
+as int32 lanes riding the f32 wavefront (one pallas_call either way).
 
 Capability handling: ``backend=None`` auto-falls back to the first
 window-capable backend for the spec; naming an incapable backend (e.g.
 ``quantized``) raises the registry's loud who-can-instead error.
-Soft-min specs have no argmin path — ask :mod:`repro.align.soft` for
-the expected alignment matrix instead.
+Soft-min specs have no argmin path — ask ``outputs=
+("soft_alignment",)`` (:mod:`repro.align.soft`) for the expected
+alignment matrix instead.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.api import sdtw_batch
+from repro.core.api import sdtw
 from repro.core.spec import DPSpec, resolve_spec
 
 
@@ -33,15 +36,16 @@ def sdtw_window(queries, reference, *, normalize: bool = True,
                 segment_width: int = 8,
                 interpret: bool | None = None,
                 options: dict | None = None):
-    """Matched windows for a batch of queries against one reference.
+    """DEPRECATED tuple shim over ``repro.sdtw(outputs=("cost",
+    "start", "end"))``.
 
     queries: (B, M); reference: (N,).
     Returns (costs (B,), starts (B,), ends (B,)): query ``b``'s best
     alignment covers ``reference[starts[b] : ends[b] + 1]`` inclusive.
 
-    ``backend=None`` (the default here, unlike ``sdtw_batch``) picks
-    the first window-capable backend so serving code never has to know
-    which engines carry start pointers.  Hard-min specs only.
+    ``backend=None`` (the default) picks the first window-capable
+    backend so serving code never has to know which engines carry
+    start pointers.  Hard-min specs only.
     """
     resolved = resolve_spec(spec, distance=distance, band=band)
     if resolved.soft:
@@ -50,10 +54,11 @@ def sdtw_window(queries, reference, *, normalize: bool = True,
             "every path, so there is no argmin window — use "
             "repro.align.soft.expected_alignment for the smoothed "
             "alignment matrix")
-    return sdtw_batch(queries, reference, normalize=normalize,
-                      backend=backend, spec=resolved,
-                      segment_width=segment_width, interpret=interpret,
-                      return_window=True, options=options)
+    res = sdtw(queries, reference, outputs=("cost", "start", "end"),
+               normalize=normalize, backend=backend, spec=resolved,
+               segment_width=segment_width, interpret=interpret,
+               options=options)
+    return res.window()
 
 
 def window_arrays(starts, ends):

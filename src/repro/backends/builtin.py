@@ -1,27 +1,44 @@
 """Builtin backend registrations — imported lazily by the registry.
 
 Each entry pairs a Capabilities declaration with an execute(spec, plan)
-adapter onto the underlying implementation.  Heavy imports (Pallas,
-shard_map) stay inside the execute functions so registry queries and
-the XLA-only backends never pay for them.
+adapter onto the underlying implementation.  The raw modules
+(core.ref / core.engine / core.quantized / core.distributed /
+kernels.ops) keep their tuple-level contracts; the adapters here are
+where tuples become typed :class:`~repro.core.result.SDTWResult`
+pytrees — every backend returns the same result type, whatever sweep
+outputs the plan requested (``"start" in plan.outputs`` threads the
+matched-window start pointers through the same fused sweep).
+
+Heavy imports (Pallas, shard_map) stay inside the execute functions so
+registry queries and the XLA-only backends never pay for them.
 """
 
 from __future__ import annotations
 
 from repro.backends.registry import (Backend, Capabilities, register,
                                      register_alias)
+from repro.core.result import from_sweep
 
 _ALL = frozenset({"sqeuclidean", "abs", "cosine"})
 _HARD = frozenset({"hardmin"})
 _BOTH = frozenset({"hardmin", "softmin"})
-_WINDOW = frozenset({"window"})
+
+# outputs tiers: every backend fulfills cost/end requests; window-capable
+# backends add start (+path, whose traceback is pinned by the window);
+# differentiable backends also serve soft_alignment (jax.grad through
+# the cost-matrix engine sweep in repro.align.soft).
+_COST_END = frozenset({"cost", "end"})
+_WINDOWED = _COST_END | {"start", "path"}
+_FULL = _WINDOWED | {"soft_alignment"}
 
 
 # ------------------------------------------------------------------ ref
 def _exec_ref(spec, plan):
     from repro.core import ref
-    return ref.sdtw_ref(plan.queries, plan.reference, spec=spec,
-                        return_window=plan.windows)
+    return from_sweep(
+        ref.sdtw_ref(plan.queries, plan.reference, spec=spec,
+                     return_window="start" in plan.outputs),
+        plan.outputs)
 
 
 register(Backend(
@@ -29,7 +46,7 @@ register(Backend(
     capabilities=Capabilities(
         distances=_ALL, reductions=_BOTH, banding=True,
         differentiable=True, per_query_reference=True, exact=True,
-        alignment=_WINDOW, device="any",
+        outputs=_FULL, device="any",
         notes="trusted row-scan oracle; slow, for validation"),
     execute=_exec_ref,
 ))
@@ -38,8 +55,10 @@ register(Backend(
 # --------------------------------------------------------------- engine
 def _exec_engine(spec, plan):
     from repro.core import engine
-    return engine.sdtw_engine(plan.queries, plan.reference, spec=spec,
-                              return_window=plan.windows)
+    return from_sweep(
+        engine.sdtw_engine(plan.queries, plan.reference, spec=spec,
+                           return_window="start" in plan.outputs),
+        plan.outputs)
 
 
 register(Backend(
@@ -47,7 +66,7 @@ register(Backend(
     capabilities=Capabilities(
         distances=_ALL, reductions=_BOTH, banding=True,
         differentiable=True, per_query_reference=True, exact=True,
-        alignment=_WINDOW, device="any",
+        outputs=_FULL, device="any",
         notes="anti-diagonal XLA wavefront; the default"),
     execute=_exec_engine,
 ))
@@ -60,9 +79,12 @@ register_alias("soft", "engine", reduction="softmin")
 # --------------------------------------------------------------- kernel
 def _exec_kernel(spec, plan):
     from repro.kernels import ops
-    return ops.sdtw_wavefront(
-        plan.queries, plan.reference, segment_width=plan.segment_width,
-        interpret=plan.interpret, spec=spec, return_window=plan.windows)
+    return from_sweep(
+        ops.sdtw_wavefront(
+            plan.queries, plan.reference,
+            segment_width=plan.segment_width, interpret=plan.interpret,
+            spec=spec, return_window="start" in plan.outputs),
+        plan.outputs)
 
 
 register(Backend(
@@ -72,10 +94,11 @@ register(Backend(
         # that grow with |q - r| (see the sentinel notes in core.spec).
         # soft-min runs the carry-channel executor's running-logsumexp
         # fold (repro.kernels.wavefront.SoftMinFold) — forward only,
-        # so the backend still is not differentiable.
+        # so the backend still is not differentiable and cannot serve
+        # soft_alignment requests.
         distances=frozenset({"sqeuclidean", "abs"}), reductions=_BOTH,
         banding=True, differentiable=False, per_query_reference=False,
-        exact=True, alignment=_WINDOW,
+        exact=True, outputs=_WINDOWED,
         device="tpu (interpret=True elsewhere)",
         notes="Pallas wavefront kernel (hard+soft, band-skip grids); "
               "shared 1-D reference only"),
@@ -86,9 +109,11 @@ register(Backend(
 # ------------------------------------------------------------ quantized
 def _exec_quantized(spec, plan):
     from repro.core.quantized import sdtw_quantized
-    return sdtw_quantized(
-        plan.queries, plan.reference, normalize=False, spec=spec,
-        n_levels=plan.option("n_levels", 256))
+    return from_sweep(
+        sdtw_quantized(
+            plan.queries, plan.reference, normalize=False, spec=spec,
+            n_levels=plan.option("n_levels", 256)),
+        plan.outputs)
 
 
 register(Backend(
@@ -97,7 +122,7 @@ register(Backend(
         distances=_ALL, reductions=_BOTH, banding=True,
         differentiable=False, per_query_reference=False,
         exact=False,   # uint8 codebook: ~10% cost error on CBF data
-        device="any",
+        outputs=_COST_END, device="any",
         notes="uint8 codebook encode -> engine on decoded centroids"),
     execute=_exec_quantized,
 ))
@@ -116,7 +141,7 @@ def _exec_distributed(spec, plan):
         raise ValueError(
             "distributed backend needs a mesh: pass "
             "options={'mesh': Mesh(...)} (and optionally 'row_block', "
-            "'batch_axes', 'ref_axis') to sdtw_batch")
+            "'batch_axes', 'ref_axis') to repro.sdtw")
     batch_axes = tuple(plan.option("batch_axes", ("data",)))
     ref_axis = plan.option("ref_axis", "model")
     row_block = plan.option("row_block", 64)
@@ -131,7 +156,7 @@ def _exec_distributed(spec, plan):
         fn = _DISTRIBUTED_CACHE[key] = make_sdtw_distributed(
             mesh, spec=spec, batch_axes=batch_axes, ref_axis=ref_axis,
             row_block=row_block)
-    return fn(plan.queries, plan.reference)
+    return from_sweep(fn(plan.queries, plan.reference), plan.outputs)
 
 
 register(Backend(
@@ -139,7 +164,7 @@ register(Backend(
     capabilities=Capabilities(
         distances=_ALL, reductions=_HARD, banding=True,
         differentiable=False, per_query_reference=False, exact=True,
-        device="multi-device mesh",
+        outputs=_COST_END, device="multi-device mesh",
         notes="shard_map ppermute pipeline; needs options={'mesh': ...}"),
     execute=_exec_distributed,
 ))

@@ -4,16 +4,20 @@ engines.
 Each execution backend registers
 
   * a :class:`Capabilities` declaration — which distances, reductions
-    and banding it supports, whether it is differentiable / exact, and
-    what device it needs — and
+    and banding it supports, which result ``outputs`` it can fulfill
+    (``repro.core.result.ALL_OUTPUTS``), whether it is differentiable /
+    exact, and what device it needs — and
   * an ``execute(spec, plan)`` entry point taking the resolved
     :class:`~repro.core.spec.DPSpec` and an :class:`ExecutionPlan`
-    (queries, reference, dispatch options).
+    (queries, reference, requested sweep outputs, dispatch options)
+    and returning a typed :class:`~repro.core.result.SDTWResult`.
 
-``repro.core.api.sdtw_batch`` then becomes a thin
+``repro.sdtw`` (core.api) then becomes a thin
 resolve-spec → :func:`resolve` → ``backend.execute`` path, and callers
 get capability errors ("backend 'kernel' does not support soft-min
-... use one of ['engine', ...]") instead of silently-wrong numbers.
+... use one of ['engine', ...]") instead of silently-wrong numbers —
+the same loud error covers output requests a backend cannot fulfill
+("backend 'quantized' does not support output(s) ['start'] ...").
 
 The builtin backends (ref / engine / kernel / quantized / distributed,
 plus the ``soft`` alias for engine-with-soft-min) are registered lazily
@@ -26,7 +30,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Mapping
 
+from repro.core.result import DEFAULT_OUTPUTS, normalize_outputs
 from repro.core.spec import DPSpec
+
+_BASE_OUTPUTS = frozenset(DEFAULT_OUTPUTS)          # every backend: cost+end
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,18 +47,21 @@ class Capabilities:
     per_query_reference: bool = True   # accepts a (B, N) reference batch
     exact: bool = True             # reproduces the spec'd recurrence (the
     #                                quantized backend approximates it)
-    alignment: frozenset = frozenset()
-    #   which alignment artifacts the backend can materialize beyond the
-    #   (cost, end) pair: "window" = matched (start, end) windows via
-    #   start-pointer propagation (``ExecutionPlan.windows``, hard-min
-    #   specs only — repro.align builds paths and soft alignments on top)
+    outputs: frozenset = _BASE_OUTPUTS
+    #   which SDTWResult fields a request routed at this backend can be
+    #   fulfilled with (repro.core.result.ALL_OUTPUTS): every backend
+    #   produces "cost"/"end"; "start" means matched-window start
+    #   pointers propagate through the SAME sweep (hard-min specs only);
+    #   "path" rides on "start" (Hirschberg traceback above the sweep);
+    #   "soft_alignment" needs a differentiable engine underneath
+    #   (jax.grad through the cost-matrix sweep, soft-min specs only)
     device: str = "any"            # human-readable requirement
     notes: str = ""
 
     def unsupported_reason(self, spec: DPSpec,
-                           alignment: str | None = None) -> str | None:
-        """None when the spec (and requested ``alignment`` artifact, if
-        any) is executable, else a short reason."""
+                           outputs=None) -> str | None:
+        """None when the spec (and every requested output, if any) is
+        executable, else a short reason."""
         if spec.distance not in self.distances:
             return f"distance {spec.distance!r}"
         if spec.reduction not in self.reductions:
@@ -59,29 +69,43 @@ class Capabilities:
                 f"reduction {spec.reduction!r}"
         if spec.band is not None and not self.banding:
             return "banding"
-        if alignment is not None:
-            if alignment not in self.alignment:
-                return f"alignment={alignment!r}"
-            if alignment == "window" and spec.soft:
-                return ("alignment='window' under soft-min (no argmin "
-                        "path; use repro.align.soft)")
+        if outputs is not None:
+            # normalize_outputs accepts a bare name and raises loudly
+            # on unknown names — a typo must not read as "unsupported"
+            req = normalize_outputs(outputs)
+            missing = req - self.outputs
+            if missing:
+                return f"output(s) {sorted(missing)}"
+            argmin = req & {"start", "path"}
+            if argmin and spec.soft:
+                return (f"output(s) {sorted(argmin)} under soft-min: no "
+                        f"argmin path on a soft-min spec (hard-min only; "
+                        f"ask outputs=('soft_alignment',) for the "
+                        f"smoothed alignment)")
+            if "soft_alignment" in req and not spec.soft:
+                return ("output 'soft_alignment' under hard-min: the "
+                        "expected alignment needs a softmin spec "
+                        "(reduction='softmin'; hard-min paths are "
+                        "outputs=('path',))")
         return None
 
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """Everything an execute() needs besides the spec: the (already
-    normalized) operands and per-dispatch options."""
+    normalized) operands, the requested sweep outputs, and per-dispatch
+    options."""
 
     queries: Any
     reference: Any
     segment_width: int = 8
     interpret: bool | None = None      # None = auto (kernels.ops)
-    windows: bool = False              # also return matched-window starts:
-    #                                    execute yields (costs, starts,
-    #                                    ends) — only valid on backends
-    #                                    whose Capabilities.alignment
-    #                                    includes "window"
+    outputs: frozenset = _BASE_OUTPUTS
+    #   sweep-level outputs the execute() must materialize — a subset of
+    #   repro.core.result.SWEEP_OUTPUTS.  "start" asks for matched-
+    #   window start pointers threaded through the SAME sweep (one
+    #   fused pass, never a separate window pass after a cost pass);
+    #   valid only on backends whose Capabilities.outputs include it.
     options: Mapping | None = None     # backend extras, e.g. {"mesh": ...}
 
     def option(self, key, default=None):
@@ -92,7 +116,7 @@ class ExecutionPlan:
 class Backend:
     name: str
     capabilities: Capabilities
-    execute: Callable[[DPSpec, ExecutionPlan], tuple]
+    execute: Callable[[DPSpec, ExecutionPlan], Any]   # -> SDTWResult
 
     def __call__(self, spec: DPSpec, plan: ExecutionPlan):
         return self.execute(spec, plan)
@@ -174,19 +198,18 @@ def get(name: str) -> Backend:
     return _expand(name, DPSpec())[0]
 
 
-def supports(name: str, spec: DPSpec, *,
-             alignment: str | None = None) -> bool:
+def supports(name: str, spec: DPSpec, *, outputs=None) -> bool:
     backend, spec = _expand(name, spec)
     return backend.capabilities.unsupported_reason(
-        spec, alignment=alignment) is None
+        spec, outputs=outputs) is None
 
 
 def capable(spec: DPSpec, *, exact_only: bool = False,
-            alignment: str | None = None,
+            outputs=None,
             differentiable: bool = False) -> list[str]:
-    """Backend names able to execute ``spec`` (and produce the
-    ``alignment`` artifact, when asked), in preference order (device-
-    aware: the kernel leads on TPU, the engine elsewhere).
+    """Backend names able to execute ``spec`` (and fulfill every
+    requested output, when asked), in preference order (device-aware:
+    the kernel leads on TPU, the engine elsewhere).
 
     ``differentiable=True`` keeps only backends declaring NaN-free
     gradients — gradient callers need this on TPU, where plain
@@ -199,7 +222,7 @@ def capable(spec: DPSpec, *, exact_only: bool = False,
     out = []
     for n in ordered:
         caps = _REGISTRY[n].capabilities
-        if caps.unsupported_reason(spec, alignment=alignment) is None \
+        if caps.unsupported_reason(spec, outputs=outputs) is None \
                 and (caps.exact or not exact_only) \
                 and (caps.differentiable or not differentiable):
             out.append(n)
@@ -214,20 +237,21 @@ def validate(name: str, spec: DPSpec) -> Backend:
 
 
 def resolve(name: str, spec: DPSpec, *,
-            alignment: str | None = None) -> tuple[Backend, DPSpec]:
+            outputs=None) -> tuple[Backend, DPSpec]:
     """Alias expansion + capability validation.
 
     Returns the concrete backend and the (possibly alias-rewritten)
     spec — e.g. ``resolve("soft", spec)`` -> (engine, spec with
-    reduction="softmin").  ``alignment`` additionally requires the
-    backend to produce that artifact (e.g. ``"window"``), failing with
-    the same loud who-can-instead error.
+    reduction="softmin").  ``outputs`` additionally requires the
+    backend to fulfill every requested result field (e.g.
+    ``{"start"}`` for matched windows), failing with the same loud
+    who-can-instead error.
     """
     backend, spec = _expand(name, spec)
     reason = backend.capabilities.unsupported_reason(spec,
-                                                     alignment=alignment)
+                                                     outputs=outputs)
     if reason is not None:
-        alternatives = [n for n in capable(spec, alignment=alignment)
+        alternatives = [n for n in capable(spec, outputs=outputs)
                         if n != backend.name]
         hint = f": use one of {alternatives}" if alternatives else ""
         raise ValueError(
@@ -237,29 +261,35 @@ def resolve(name: str, spec: DPSpec, *,
 
 
 def select(spec: DPSpec, *, preferred: str | None = None,
-           alignment: str | None = None,
+           outputs=None,
            differentiable: bool = False) -> tuple[Backend, DPSpec]:
     """Pick a backend for the spec: the preferred one when capable,
     else the first capable backend in preference order (the auto-
-    fallback path: ``preferred=None, alignment="window"`` lands on the
-    fastest window-capable backend).  ``differentiable=True`` restricts
-    auto-selection to gradient-safe backends (see :func:`capable`) —
-    a named ``preferred`` backend is taken at the caller's word.
+    fallback path: ``preferred=None, outputs={"start", ...}`` lands on
+    the fastest window-capable backend).  ``differentiable=True``
+    restricts auto-selection to gradient-safe backends (see
+    :func:`capable`) — a named ``preferred`` backend is taken at the
+    caller's word.
 
     Returns ``(backend, spec)`` with alias overrides applied — execute
     with the RETURNED spec, never the one you passed in.
     """
     if preferred is not None:
-        return resolve(preferred, spec, alignment=alignment)
-    choices = capable(spec, alignment=alignment,
+        return resolve(preferred, spec, outputs=outputs)
+    choices = capable(spec, outputs=outputs,
                       differentiable=differentiable)
     if not choices:
         what = f"spec {spec.describe()}"
-        if alignment is not None:
-            what += f" with alignment={alignment!r}"
+        if outputs is not None:
+            what += f" with outputs={sorted(normalize_outputs(outputs))}"
         if differentiable:
             what += " differentiably"
-        raise ValueError(f"no registered backend supports {what}")
+        # name WHY the most-capable backend declines, so spec-level
+        # impossibilities (e.g. start under soft-min) explain themselves
+        reason = _REGISTRY["engine"].capabilities.unsupported_reason(
+            spec, outputs=outputs) if "engine" in _REGISTRY else None
+        hint = f" (engine: {reason})" if reason else ""
+        raise ValueError(f"no registered backend supports {what}{hint}")
     return _REGISTRY[choices[0]], spec
 
 
@@ -277,7 +307,7 @@ def capability_rows() -> list[dict]:
             "differentiable": c.differentiable,
             "per_query_reference": c.per_query_reference,
             "exact": c.exact,
-            "alignment": ",".join(sorted(c.alignment)) or "-",
+            "outputs": ",".join(sorted(c.outputs - _BASE_OUTPUTS)) or "-",
             "device": c.device,
         })
     return rows

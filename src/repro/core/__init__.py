@@ -1,17 +1,22 @@
 """repro.core — the paper's contribution: batched subsequence DTW.
 
 One declarative recurrence (``DPSpec``), many engines (see
-``repro.backends.registry``).
+``repro.backends.registry``), one typed front door (``sdtw`` +
+``SDTWResult`` + the ``Aligner`` session — also exported at the
+``repro`` top level).
 """
 
-from repro.core.api import sdtw_batch, sdtw_search
+from repro.core.api import sdtw, sdtw_batch, sdtw_search
 from repro.core.engine import sdtw_engine
 from repro.core.normalize import normalize_batch
 from repro.core.ref import sdtw_ref, sdtw_numpy, dtw_global_numpy
+from repro.core.result import ALL_OUTPUTS, SDTWResult
+from repro.core.session import Aligner
 from repro.core.softdtw import sdtw_soft
 from repro.core.spec import DEFAULT_SPEC, DPSpec, resolve_spec
 
 __all__ = [
+    "sdtw", "SDTWResult", "Aligner", "ALL_OUTPUTS",
     "sdtw_batch", "sdtw_search", "sdtw_engine", "normalize_batch",
     "sdtw_ref", "sdtw_numpy", "dtw_global_numpy", "sdtw_soft",
     "DPSpec", "DEFAULT_SPEC", "resolve_spec",

@@ -1,34 +1,173 @@
-"""Public sDTW API — the paper's end-to-end flow (§5):
+"""Public sDTW API — ONE front door.
+
+The paper's end-to-end flow (§5):
 
     normalize(reference); normalize(batch of queries); runSDTW(batch)
 
-now a thin resolve-spec → registry → execute path: the recurrence is a
-declarative ``DPSpec`` (distance × reduction × band × accum dtype) and
-the execution backend is looked up in ``repro.backends.registry``, which
-validates the spec against the backend's declared Capabilities:
+is a single request/result call here:
+
+    result = repro.sdtw(queries, reference, outputs=("cost", "end"))
+    result.cost, result.end                     # requested fields
+    result.start is None                        # unrequested -> None
+
+``outputs`` may name any of ``cost / end / start / path /
+soft_alignment`` (``repro.core.result.ALL_OUTPUTS``); the return value
+is a typed :class:`~repro.core.result.SDTWResult` pytree.  The
+recurrence is a declarative ``DPSpec`` (distance × reduction × band ×
+accum dtype) and the execution backend is looked up in
+``repro.backends.registry``, which validates the spec AND the requested
+outputs against the backend's declared Capabilities:
 
   * ``"ref"``         — trusted scan oracle (slow, for validation)
   * ``"engine"``      — anti-diagonal XLA engine (default; hard+soft)
   * ``"kernel"``      — Pallas TPU wavefront kernel (auto-interpreted
-                        off-TPU; hard-min, non-cosine)
+                        off-TPU; hard+soft, non-cosine)
   * ``"quantized"``   — uint8 codebook sDTW (approximate; paper §8)
   * ``"distributed"`` — shard_map pipeline (needs options={"mesh": ...})
   * ``"soft"``        — alias: engine with reduction="softmin"
 
-Asking an incapable backend fails loudly ("backend 'kernel' does not
-support soft-min ...: use one of ['engine', ...]") instead of silently
-computing the wrong recurrence; ``backend=None`` lets the registry pick
-the first capable backend.
+Asking an incapable combination fails loudly ("backend 'quantized'
+does not support output(s) ['start'] ...: use one of ['engine', ...]")
+instead of silently computing the wrong thing; ``backend=None`` lets
+the registry pick the first capable backend for the spec + outputs.
+
+The sweep-level outputs (cost, end, start) all come from a SINGLE
+fused sweep — requesting windows never runs a second pass after a cost
+pass.  ``path`` and ``soft_alignment`` are derived above the sweep
+(Hirschberg traceback over the matched window; ``jax.grad`` through
+the cost-matrix engine sweep).
+
+Serving many batches against one reference?  Use
+:class:`repro.Aligner` (``repro.core.session``) — the precompiled
+session form of this call: the reference is normalized once, kernel
+layouts are cached, and jitted executables are memoized per
+(batch shape, outputs) so warm calls are dispatch-only.
+
+``sdtw_batch`` / ``sdtw_search`` (and ``repro.align.sdtw_window``)
+remain as thin deprecation shims over :func:`sdtw` returning the
+historical tuples.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.backends import registry
 from repro.core.normalize import normalize_batch
+from repro.core.result import (ALL_OUTPUTS, DEFAULT_OUTPUTS,  # noqa: F401
+                               SDTWResult, normalize_outputs,
+                               sweep_outputs)
 from repro.core.spec import DPSpec, resolve_spec, validate_batch_inputs
 
+
+def _derive_outputs(res: SDTWResult, req: frozenset, queries, reference,
+                    spec: DPSpec) -> SDTWResult:
+    """Fill the above-the-sweep result fields (``path`` /
+    ``soft_alignment``) from already-normalized operands.
+
+    Shared by the one-shot front door and ``Aligner`` sessions: the
+    sweep-level fields (cost/end/start) must already be present on
+    ``res`` (one fused sweep), paths are recovered per query by the
+    Hirschberg traceback pinned to the matched window, and the expected
+    alignment runs ``jax.grad`` through the cost-matrix engine sweep.
+    """
+    if "path" in req:
+        from repro.align.traceback import warping_path
+        # (np.asarray first: asking jax for a float64 view would warn
+        # and truncate under the default x64-disabled config)
+        q64 = np.asarray(queries).astype(np.float64)
+        r64 = np.asarray(reference).astype(np.float64)
+        paths = [
+            # a NO_WINDOW start means no in-band alignment exists (a
+            # band blocked the whole bottom row): no path either
+            (None if int(s) < 0 else
+             warping_path(q64[b], r64, spec=spec, normalize=False,
+                          window=(int(s), int(e))))
+            for b, (s, e) in enumerate(zip(np.asarray(res.start),
+                                           np.asarray(res.end)))]
+        res = res.replace(path=paths)
+    if "soft_alignment" in req:
+        from repro.align.soft import _expected_alignment_jit, cost_matrix
+        C = cost_matrix(queries, reference, spec).astype(spec.accum)
+        res = res.replace(
+            soft_alignment=_expected_alignment_jit(C, spec=spec))
+    return res
+
+
+def sdtw(queries, reference, *,
+         outputs=DEFAULT_OUTPUTS,
+         normalize: bool = True,
+         backend: str | None = None,
+         spec: DPSpec | None = None,
+         distance: str | None = None,
+         reduction: str | None = None,
+         gamma: float | None = None,
+         band: int | None = None,
+         segment_width: int = 8,
+         interpret: bool | None = None,
+         options: dict | None = None) -> SDTWResult:
+    """Align a batch of queries against one reference.
+
+    queries: (B, M); reference: (N,).  Returns an
+    :class:`~repro.core.result.SDTWResult` carrying exactly the
+    requested ``outputs`` (everything else ``None``):
+
+      * ``cost`` (B,)            — best subsequence alignment costs;
+      * ``end`` (B,) int32       — where each best alignment ends;
+      * ``start`` (B,) int32     — where it starts (hard-min specs on
+                                   window-capable backends; same sweep);
+      * ``path``                 — per-query (P, 2) warping paths
+                                   (hard-min specs);
+      * ``soft_alignment`` (B, M, N) — expected alignments (soft-min
+                                   specs).
+
+    Mirrors the paper's pipeline: optional z-normalization of both
+    inputs (§5.1), then the batched subsequence-DTW sweep (§5.2) under
+    the resolved spec.  ``spec`` carries the recurrence; the
+    ``distance`` / ``reduction`` / ``gamma`` / ``band`` kwargs are
+    per-call overrides of its fields (``gamma`` alone implies
+    ``reduction="softmin"``).  ``backend=None`` (the default) asks the
+    registry for the first backend capable of the spec AND the
+    requested outputs; naming an incapable backend raises the
+    registry's loud who-can-instead error.  ``interpret=None``
+    auto-selects the Pallas mode from ``jax.default_backend()``.
+    ``options`` passes backend extras (e.g. ``{"mesh": ...}`` for
+    ``backend="distributed"``).
+    """
+    queries = jnp.asarray(queries)
+    reference = jnp.asarray(reference)
+    validate_batch_inputs(queries, reference, segment_width=segment_width)
+    resolved = resolve_spec(spec, distance=distance, reduction=reduction,
+                            gamma=gamma, band=band)
+    req = normalize_outputs(outputs)
+    if backend is None:
+        backend_impl, resolved = registry.select(resolved, outputs=req)
+    else:
+        backend_impl, resolved = registry.resolve(backend, resolved,
+                                                  outputs=req)
+    if normalize:
+        queries = normalize_batch(queries)
+        reference = normalize_batch(reference)
+    if req - {"soft_alignment"}:
+        plan = registry.ExecutionPlan(
+            queries=queries, reference=reference,
+            segment_width=segment_width, interpret=interpret,
+            outputs=sweep_outputs(req), options=options)
+        res = backend_impl.execute(resolved, plan)
+    else:
+        # a soft_alignment-only request needs no backend sweep: the
+        # expected alignment is its own (differentiated) forward pass
+        res = SDTWResult()
+    res = _derive_outputs(res, req, queries, reference, resolved)
+    return res.restrict(req)
+
+
+# --------------------------------------------------- deprecation shims
+# The positional-tuple entry points the repo grew up with.  They are
+# thin shims over :func:`sdtw` now — same sweeps, same backends, same
+# numbers — kept so existing callers and tests work unchanged.  New
+# code should call ``repro.sdtw`` (or build a ``repro.Aligner``).
 
 def sdtw_batch(queries, reference, *, normalize: bool = True,
                backend: str | None = "engine",
@@ -41,53 +180,35 @@ def sdtw_batch(queries, reference, *, normalize: bool = True,
                interpret: bool | None = None,
                return_window: bool = False,
                options: dict | None = None):
-    """Align a batch of queries against one reference.
+    """DEPRECATED tuple shim over :func:`sdtw`.
 
-    queries: (B, M); reference: (N,). Returns (costs (B,), end_idx (B,))
-    — or (costs, starts, ends) when ``return_window``.
+    Returns ``(costs (B,), end_idx (B,))`` — or
+    ``(costs, starts, ends)`` when ``return_window`` — exactly as it
+    always did.  Equivalent new call::
 
-    Mirrors the paper's pipeline: optional z-normalization of both inputs
-    (§5.1), then the batched subsequence-DTW sweep (§5.2) under the
-    resolved spec. ``end_idx`` is the reference index where the best
-    alignment ends (for soft-min specs: the bottom row's hard argmin,
-    which converges to the hard end index as gamma -> 0).
-
-    ``spec`` carries the recurrence; the ``distance`` / ``reduction`` /
-    ``gamma`` / ``band`` kwargs are per-call overrides of its fields
-    (``gamma`` alone implies ``reduction="softmin"``). ``backend=None``
-    asks the registry for the first backend capable of the spec.
-    ``interpret=None`` auto-selects the Pallas mode from
-    ``jax.default_backend()`` (compiled on TPU, interpreted elsewhere).
-    ``return_window`` asks for the matched window's start column as
-    well (hard-min specs on window-capable backends — the registry
-    validates and, with ``backend=None``, auto-falls back to the first
-    window-capable backend; ``repro.align`` is the friendlier front
-    end). ``options`` passes backend extras (e.g. ``{"mesh": ...}`` for
-    ``backend="distributed"``).
+        res = repro.sdtw(queries, reference,
+                         outputs=("cost", "start", "end"))   # windows
+        res.cost, res.start, res.end
     """
-    queries = jnp.asarray(queries)
-    reference = jnp.asarray(reference)
-    validate_batch_inputs(queries, reference, segment_width=segment_width)
-    resolved = resolve_spec(spec, distance=distance, reduction=reduction,
-                            gamma=gamma, band=band)
-    alignment = "window" if return_window else None
-    if backend is None:
-        backend_impl, resolved = registry.select(resolved,
-                                                 alignment=alignment)
-    else:
-        backend_impl, resolved = registry.resolve(backend, resolved,
-                                                  alignment=alignment)
-    if normalize:
-        queries = normalize_batch(queries)
-        reference = normalize_batch(reference)
-    plan = registry.ExecutionPlan(
-        queries=queries, reference=reference, segment_width=segment_width,
-        interpret=interpret, windows=return_window, options=options)
-    return backend_impl.execute(resolved, plan)
+    res = sdtw(queries, reference,
+               outputs=(("cost", "start", "end") if return_window
+                        else ("cost", "end")),
+               normalize=normalize, backend=backend, spec=spec,
+               distance=distance, reduction=reduction, gamma=gamma,
+               band=band, segment_width=segment_width,
+               interpret=interpret, options=options)
+    if return_window:
+        return res.cost, res.start, res.end
+    return res.cost, res.end
 
 
 def sdtw_search(query, reference, **kw):
-    """Single-query convenience wrapper around :func:`sdtw_batch`."""
+    """DEPRECATED single-query tuple shim over :func:`sdtw_batch`.
+
+    Returns scalars — ``(cost, end)``, or ``(cost, start, end)`` when
+    ``return_window=True`` (this used to crash on the 3-tuple; it is
+    shape-stable through :class:`SDTWResult` now).
+    """
     q = jnp.asarray(query)[None, :]
-    cost, end = sdtw_batch(q, reference, **kw)
-    return cost[0], end[0]
+    out = sdtw_batch(q, reference, **kw)
+    return tuple(x[0] for x in out)

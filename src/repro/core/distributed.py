@@ -17,6 +17,12 @@ Two composable levels (DESIGN.md §2, §5):
 
 The final subsequence min is a ``pmin`` tree-reduce over the model axis
 (the cross-device analogue of the paper's streaming ``__hmin2`` fold).
+
+Raw tuple-level layer: ``repro.backends.builtin`` caches the built
+shard_map pipeline per (mesh, spec, layout) and adapts its
+``(costs, ends)`` into typed ``SDTWResult`` pytrees; ``repro.Aligner``
+sessions dispatch straight to that cache (no outer jit needed — the
+pipeline is already compiled).
 """
 
 from __future__ import annotations

@@ -23,6 +23,14 @@ For both reductions the end index is the argmin of the bottom row —
 for soft-min that is the position whose smoothed alignment cost is
 lowest, which converges to the hard end index as gamma -> 0.
 
+This module is the RAW tuple-level layer: ``sdtw_engine`` returns
+``(costs, ends)`` / ``(costs, starts, ends)`` for the backend adapter
+in ``repro.backends.builtin`` to wrap into a typed
+``repro.core.result.SDTWResult``.  Public callers go through
+``repro.sdtw`` / ``repro.Aligner``, which also pick the sweep outputs
+(``ExecutionPlan.outputs``) so cost, end and start all come from this
+ONE fused sweep.
+
 Complexity: (M + N - 1) scan steps of O(M) vector work ≈ O(M·N + M²).
 """
 

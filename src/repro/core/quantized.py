@@ -18,6 +18,11 @@ Accuracy is validated in tests/test_quantized.py: on CBF data the
 quantized subsequence costs track fp32 within ~10% (median ~6%) and the
 argmin end-positions agree — matching the paper's expectation that
 coarse value resolution survives DTW's min-accumulation.
+
+Raw tuple-level layer: ``repro.backends.builtin`` adapts it into typed
+``SDTWResult`` pytrees (cost/end outputs only — the codebook argmin
+carries no start pointers, so window/path requests are rejected by the
+registry's ``Capabilities.outputs`` axis).
 """
 
 from __future__ import annotations

@@ -21,6 +21,10 @@ support can be checked cell-by-cell against the same trusted loop:
 soft-min, and a Sakoe–Chiba band leaves out-of-band cells at the
 masked sentinel.  The default spec reproduces the original
 squared-Euclidean hard-min oracle exactly.
+
+Like every backend module this is the raw tuple-level layer —
+``repro.backends.builtin`` wraps it into typed ``SDTWResult`` pytrees
+for the ``repro.sdtw`` / ``repro.Aligner`` front door.
 """
 
 from __future__ import annotations

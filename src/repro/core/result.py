@@ -1,0 +1,163 @@
+"""SDTWResult — ONE typed result for every sDTW request.
+
+The public surface used to speak in positional tuples whose arity
+depended on what was asked for: ``sdtw_batch`` returned ``(cost, end)``
+or ``(cost, start, end)`` depending on ``return_window``, and every
+additional artifact (paths, soft alignments) lived behind its own
+entry point.  :class:`SDTWResult` replaces all of that with a frozen
+dataclass registered as a JAX pytree: a request names the artifacts it
+wants (the ``outputs`` axis) and the result carries exactly those
+fields, with everything unrequested set to ``None``.
+
+Outputs (the canonical names, see :data:`ALL_OUTPUTS`):
+
+  * ``cost``           — (B,) best subsequence alignment costs;
+  * ``end``            — (B,) int32 reference columns where the best
+                         alignment ends (soft-min: the hard argmin of
+                         the smoothed bottom row);
+  * ``start``          — (B,) int32 matched-window start columns
+                         (hard-min specs on window-capable backends;
+                         ``NO_WINDOW`` when a band blocks every path);
+  * ``path``           — per-query (P, 2) int64 warping paths
+                         (Hirschberg over the matched window — hard-min
+                         specs only, computed above the sweep);
+  * ``soft_alignment`` — (B, M, N) expected-alignment tensors
+                         (soft-min specs only: the Gibbs-weighted
+                         probability that the alignment visits a cell).
+
+Being a pytree, an ``SDTWResult`` crosses ``jax.jit`` boundaries, maps
+under ``jax.tree_util.tree_map``, and stacks under ``jax.vmap`` like
+any other container — which is what lets ``repro.Aligner`` memoize one
+jitted executable per (batch shape, outputs) request and return the
+typed result straight from the compiled call.
+
+Backends materialize the *sweep-level* subset (:func:`sweep_outputs`:
+``cost`` / ``end`` / ``start`` — all from one fused sweep, never a
+second window pass); the front door (``repro.sdtw`` / ``Aligner``)
+derives ``path`` and ``soft_alignment`` on top and finally
+:meth:`SDTWResult.restrict`\\ s the result to the requested set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+# Canonical output names, in presentation order.
+ALL_OUTPUTS = ("cost", "end", "start", "path", "soft_alignment")
+
+DEFAULT_OUTPUTS = ("cost", "end")
+
+# The artifacts a backend's execute() can produce inside its DP sweep —
+# everything else is derived above the sweep by the front door.
+SWEEP_OUTPUTS = frozenset({"cost", "end", "start"})
+
+
+def normalize_outputs(outputs) -> frozenset:
+    """Validate a requested-outputs value into a frozenset of names.
+
+    Accepts a single name or any iterable of names; unknown names and
+    empty requests raise ``ValueError`` naming the valid set.
+    """
+    if outputs is None:
+        outputs = DEFAULT_OUTPUTS
+    if isinstance(outputs, str):
+        outputs = (outputs,)
+    req = frozenset(outputs)
+    unknown = req - frozenset(ALL_OUTPUTS)
+    if unknown:
+        raise ValueError(
+            f"unknown output(s) {sorted(unknown)}; valid outputs are "
+            f"{ALL_OUTPUTS}")
+    if not req:
+        raise ValueError(
+            f"outputs must name at least one of {ALL_OUTPUTS}")
+    return req
+
+
+def sweep_outputs(outputs) -> frozenset:
+    """The sweep-level outputs one resolved request needs from its
+    backend: always ``cost``/``end`` (the sweep produces both in the
+    same pass), plus ``start`` when the request wants ``start`` — or
+    ``path``, whose traceback is pinned by the matched window.  All of
+    it comes from a SINGLE fused sweep (``ExecutionPlan.outputs``)."""
+    req = normalize_outputs(outputs)
+    sweep = (req & SWEEP_OUTPUTS) | {"cost", "end"}
+    if "path" in req:
+        sweep |= {"start"}
+    return frozenset(sweep)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SDTWResult:
+    """Typed sDTW result. Unrequested fields are ``None``.
+
+    Registered as a JAX pytree (the five fields are the children, in
+    declaration order) so results flow through ``jit`` / ``tree_map`` /
+    device transfers without unpacking.
+    """
+
+    cost: Any = None
+    end: Any = None
+    start: Any = None
+    path: Any = None
+    soft_alignment: Any = None
+
+    # -------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return ((self.cost, self.end, self.start, self.path,
+                 self.soft_alignment), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux_data, children):
+        del aux_data
+        return cls(*children)
+
+    # ------------------------------------------------------- helpers
+    @property
+    def present(self) -> frozenset:
+        """Names of the fields this result actually carries."""
+        return frozenset(name for name in ALL_OUTPUTS
+                         if getattr(self, name) is not None)
+
+    def replace(self, **updates) -> "SDTWResult":
+        return dataclasses.replace(self, **updates)
+
+    def restrict(self, outputs) -> "SDTWResult":
+        """Drop (set to ``None``) every field not in ``outputs`` — the
+        front door's final masking step, so callers see exactly what
+        they asked for."""
+        req = normalize_outputs(outputs)
+        return SDTWResult(**{name: (getattr(self, name)
+                                    if name in req else None)
+                             for name in ALL_OUTPUTS})
+
+    def window(self):
+        """The legacy windows triple ``(cost, start, end)``."""
+        return self.cost, self.start, self.end
+
+    def __repr__(self):  # compact: name the present fields only
+        parts = []
+        for name in ALL_OUTPUTS:
+            v = getattr(self, name)
+            if v is None:
+                continue
+            shape = getattr(v, "shape", None)
+            parts.append(f"{name}={f'<{tuple(shape)}>' if shape is not None else f'[{len(v)}]'}")
+        return f"SDTWResult({', '.join(parts)})"
+
+
+def from_sweep(out, outputs) -> SDTWResult:
+    """Wrap a backend sweep's raw tuple into an :class:`SDTWResult`.
+
+    ``out`` is ``(cost, end)`` — or ``(cost, start, end)`` when the
+    sweep carried start pointers (``"start" in outputs``), matching the
+    historical return_window tuple order."""
+    if "start" in outputs:
+        cost, start, end = out
+        return SDTWResult(cost=cost, end=end, start=start)
+    cost, end = out
+    return SDTWResult(cost=cost, end=end)

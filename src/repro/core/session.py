@@ -1,0 +1,296 @@
+"""Aligner — a precompiled sDTW session for one reference.
+
+``repro.sdtw`` re-normalizes the reference, re-swizzles the kernel
+layout, and re-enters jit dispatch machinery on every call.  That is
+the right shape for one-shot use; a serving path that aligns every
+incoming query batch against the same reference (the ROADMAP's
+millions-of-users regime, and exactly the paper's §5 session: normalize
+the reference once, then stream query batches) should pay those costs
+once:
+
+    aligner = repro.Aligner(reference, band=128)        # cold: prep
+    res = aligner(queries)                              # compile once
+    res = aligner(queries2)                             # warm: dispatch
+    res = aligner(queries, outputs=("cost", "start", "end"))
+
+An ``Aligner`` is constructed once per (reference, spec, backend) and
+
+  * z-normalizes the reference ONCE at construction (queries are still
+    normalized per call, inside the compiled executable);
+  * caches the swizzled ``(R, w, LANES)`` kernel layout from
+    ``kernels/ops.py`` prep, so the kernel backend's offline reference
+    layout optimization (paper §3) is actually offline;
+  * memoizes one jitted executable per (batch shape, dtype, outputs)
+    request — warm calls are cache-lookup + dispatch, zero retraces
+    (``Aligner.stats`` counts traces/compiles/hits; the tier-1 suite
+    asserts the zero).
+
+Results are typed :class:`~repro.core.result.SDTWResult` pytrees, same
+as ``repro.sdtw``; capability validation (spec × backend × outputs)
+uses the same registry errors, raised at executable-build time.
+
+The distributed backend is the one exception to the outer jit: its
+shard_map pipeline is already built and cached per (mesh, spec,
+layout) by the backend adapter, so the session just pins the
+pre-normalized reference and dispatches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends import registry
+from repro.core.normalize import normalize_batch
+from repro.core.api import _derive_outputs
+from repro.core.result import (DEFAULT_OUTPUTS, SDTWResult,
+                               normalize_outputs, sweep_outputs)
+from repro.core.spec import DPSpec, resolve_spec, validate_batch_inputs
+
+
+@dataclasses.dataclass
+class AlignerStats:
+    """Session accounting — the cache-behavior contract, testable.
+
+    ``traces`` counts executions of a traced function body (a Python
+    side effect inside the jitted closure, so it only ticks while JAX
+    is tracing); a warm call leaves it unchanged.  ``compiles`` counts
+    distinct executables built — exactly one per new (batch shape,
+    dtype, outputs) key.  ``calls``/``cache_hits`` count dispatches.
+    """
+    calls: int = 0
+    cache_hits: int = 0
+    compiles: int = 0
+    traces: int = 0
+
+
+class Aligner:
+    """A session: one reference, one spec, one backend, many batches.
+
+    Parameters mirror :func:`repro.sdtw`: ``spec`` (or the
+    ``distance`` / ``reduction`` / ``gamma`` / ``band`` field
+    overrides), ``backend`` (None auto-selects for the spec; per-call
+    output requests re-validate against its capabilities), ``outputs``
+    (an optional hint naming the outputs this session will serve, so
+    auto-selection lands on a backend that can fulfill them),
+    ``normalize`` (applied to the reference here, ONCE, and to each
+    query batch inside the compiled call), ``segment_width`` /
+    ``interpret`` (kernel backend), ``options`` (backend extras, e.g.
+    ``{"mesh": ...}``).
+
+    ``layout_cache`` shares a pre-existing swizzled-layout dict (keyed
+    ``(segment_width, dtype_name)`` like ``ReferenceIndex`` entries),
+    so index-backed sessions reuse the index's offline prep instead of
+    re-swizzling.
+    """
+
+    def __init__(self, reference, *, spec: DPSpec | None = None,
+                 backend: str | None = None,
+                 normalize: bool = True,
+                 distance: str | None = None,
+                 reduction: str | None = None,
+                 gamma: float | None = None,
+                 band: int | None = None,
+                 outputs=None,
+                 segment_width: int = 8,
+                 interpret: bool | None = None,
+                 options: dict | None = None,
+                 layout_cache: dict | None = None):
+        reference = jnp.asarray(reference)
+        if reference.ndim != 1:
+            raise ValueError(
+                f"reference must be 1-D (length,), got {reference.shape}")
+        if reference.shape[0] == 0:
+            raise ValueError("empty reference (reference.shape[0] == 0)")
+        resolved = resolve_spec(spec, distance=distance,
+                                reduction=reduction, gamma=gamma,
+                                band=band)
+        # ``outputs`` is a selection HINT: with backend=None it steers
+        # auto-selection toward a backend that can fulfill the outputs
+        # this session will be asked for (matching repro.sdtw's
+        # auto-fallback — e.g. soft_alignment requests skip the
+        # forward-only kernel on TPU).  Per-call requests still
+        # re-validate in _build.
+        hint = None if outputs is None else normalize_outputs(outputs)
+        if backend is None:
+            self.backend, self.spec = registry.select(resolved,
+                                                      outputs=hint)
+        else:
+            self.backend, self.spec = registry.resolve(backend, resolved,
+                                                       outputs=hint)
+        self.normalize = normalize
+        self.reference = (normalize_batch(reference) if normalize
+                          else reference)
+        self.length = int(reference.shape[0])
+        self.segment_width = segment_width
+        self.interpret = interpret
+        self.options = options
+        self._layouts: dict = {} if layout_cache is None else layout_cache
+        self._layouts_verified: set = set()
+        self._fns: dict = {}
+        self.stats = AlignerStats()
+
+    # ----------------------------------------------------------- prep
+    def layout(self, compute_dtype=jnp.float32):
+        """The cached swizzled kernel layout of this session's
+        (already normalized) reference — computed at most once per
+        (segment_width, dtype).
+
+        A pre-populated ``layout_cache`` entry is verified (once per
+        key) to actually unswizzle back to THIS reference: the cache
+        dict is per-reference (a ``ReferenceIndex`` entry's), and a
+        dict accidentally shared across references must fail loudly
+        instead of sweeping against the wrong series.
+        """
+        from repro.kernels import ops as _ops
+        key = (self.segment_width, jnp.dtype(compute_dtype).name)
+        cached = self._layouts.get(key)
+        if cached is None:
+            self._layouts[key] = _ops.swizzle_reference(
+                self.reference.astype(compute_dtype), self.segment_width)
+            self._layouts_verified.add(key)
+        elif key not in self._layouts_verified:
+            want = np.asarray(self.reference.astype(compute_dtype))
+            got = np.asarray(_ops.unswizzle_reference(cached))
+            if got.shape[0] < self.length or \
+                    not np.array_equal(got[:self.length], want):
+                raise ValueError(
+                    f"layout_cache entry {key} does not unswizzle to "
+                    f"this session's reference (n={self.length}): "
+                    f"layout_cache dicts are per-reference — do not "
+                    f"share one across Aligners over different "
+                    f"references")
+            self._layouts_verified.add(key)
+        return self._layouts[key]
+
+    # ------------------------------------------------------ executable
+    def _build(self, batch_shape, dtype, req: frozenset):
+        """One executable for one (batch shape, dtype, outputs) key.
+
+        Capability validation happens here (loud registry errors);
+        the returned ``(callable, jitted)`` pair runs normalize-queries
+        + the fused sweep as ONE traced computation, returning the
+        sweep-level ``SDTWResult``.  ``jitted=False`` marks the
+        eager strategies (distributed), whose dispatches must not tick
+        the trace/compile counters — nothing is traced or built.
+        """
+        # re-validate with the requested outputs: an Aligner built for
+        # a capable (spec, backend) pair can still be asked for an
+        # output the backend cannot fulfill
+        registry.resolve(self.backend.name, self.spec, outputs=req)
+        sweep = sweep_outputs(req)
+        stats = self.stats
+        # derived requests (path / soft_alignment) get their queries
+        # normalized ONCE, eagerly, in align() — both the sweep and the
+        # derivation consume the same batch, so the closure must not
+        # normalize again
+        pre_normalized = bool(req & {"path", "soft_alignment"})
+
+        if self.backend.name == "kernel":
+            # the session's whole point on the kernel path: the layout
+            # prep (pad + swizzle, paper §3) is closed over as a
+            # constant, never recomputed per call
+            from repro.kernels import ops as _ops
+            from repro.core.result import from_sweep
+            B, m = batch_shape
+            r_layout = self.layout(jnp.float32)
+            n, w = self.length, self.segment_width
+            interp, spec = self.interpret, self.spec
+            norm = self.normalize and not pre_normalized
+
+            def run(q):
+                stats.traces += 1
+                if norm:
+                    q = normalize_batch(q)
+                qk = _ops.prepare_queries(q.astype(jnp.float32))
+                out = _ops.sdtw_wavefront_prepped(
+                    qk, r_layout, batch=B, m=m, n=n, segment_width=w,
+                    interpret=interp, spec=spec,
+                    return_window="start" in sweep)
+                return from_sweep(out, sweep)
+
+            return jax.jit(run), True
+
+        backend, spec = self.backend, self.spec
+        norm = self.normalize and not pre_normalized
+        reference, opts = self.reference, self.options
+        seg, interp = self.segment_width, self.interpret
+
+        if backend.name == "distributed":
+            # shard_map pipelines carry their own jit + per-mesh cache
+            # (backends.builtin); wrapping them again buys nothing and
+            # this session builds no executable of its own
+            def run_eager(q):
+                if norm:
+                    q = normalize_batch(q)
+                plan = registry.ExecutionPlan(
+                    queries=q, reference=reference, segment_width=seg,
+                    interpret=interp, outputs=sweep, options=opts)
+                return backend.execute(spec, plan)
+
+            return run_eager, False
+
+        def run(q):
+            stats.traces += 1
+            if norm:
+                q = normalize_batch(q)
+            plan = registry.ExecutionPlan(
+                queries=q, reference=reference, segment_width=seg,
+                interpret=interp, outputs=sweep, options=opts)
+            return backend.execute(spec, plan)
+
+        return jax.jit(run), True
+
+    # -------------------------------------------------------- serving
+    def align(self, queries, *, outputs=DEFAULT_OUTPUTS) -> SDTWResult:
+        """Align one query batch. queries: (B, M).
+
+        Returns an :class:`SDTWResult` restricted to ``outputs``.  The
+        first call for a given (batch shape, dtype, outputs) traces and
+        compiles; every later call with the same key is dispatch-only.
+        """
+        queries = jnp.asarray(queries)
+        validate_batch_inputs(queries, self.reference,
+                              segment_width=self.segment_width)
+        req = normalize_outputs(outputs)
+        self.stats.calls += 1
+        derived = bool(req & {"path", "soft_alignment"})
+        if derived and self.normalize:
+            # normalize ONCE for both the sweep and the derivation
+            # (the executable for a derived request skips its fused
+            # normalize — see _build's pre_normalized)
+            queries = normalize_batch(queries)
+        if req - {"soft_alignment"}:
+            key = (queries.shape, jnp.dtype(queries.dtype).name, req)
+            entry = self._fns.get(key)
+            if entry is None:
+                entry = self._fns[key] = self._build(queries.shape,
+                                                     queries.dtype, req)
+                if entry[1]:                  # eager strategies build no
+                    self.stats.compiles += 1  # executable: no compile
+            else:
+                self.stats.cache_hits += 1
+            res = entry[0](queries)
+        else:
+            # soft_alignment-only: no sweep to run — validate the
+            # request against the backend, then derive directly
+            registry.resolve(self.backend.name, self.spec, outputs=req)
+            res = SDTWResult()
+        if derived:
+            res = _derive_outputs(res, req, queries, self.reference,
+                                  self.spec)
+        return res.restrict(req)
+
+    __call__ = align
+
+    def executables(self) -> int:
+        """How many distinct jitted executables this session holds."""
+        return sum(1 for _, jitted in self._fns.values() if jitted)
+
+    def __repr__(self):
+        return (f"Aligner(n={self.length}, backend={self.backend.name!r}, "
+                f"spec={self.spec.describe()}, "
+                f"executables={self.executables()})")

@@ -8,10 +8,13 @@ optimization (paper §3): element ``r[(b*LANES + l)*w + k]`` lands at
 
 Preparation (padding + swizzle) is split from dispatch so callers that
 align many query batches against the same reference — notably
-``repro.search.ReferenceIndex`` — can pay the layout cost once and feed
-the cached ``(R, w, LANES)`` blocks straight into
-:func:`sdtw_wavefront_prepped`. The one-shot :func:`sdtw_wavefront`
-wrapper goes through the exact same prep + dispatch code path.
+``repro.Aligner`` sessions and ``repro.search.ReferenceIndex`` — can
+pay the layout cost once and feed the cached ``(R, w, LANES)`` blocks
+straight into :func:`sdtw_wavefront_prepped`. The one-shot
+:func:`sdtw_wavefront` wrapper goes through the exact same prep +
+dispatch code path; an ``Aligner`` additionally closes the cached
+layout over a jitted prepare+dispatch closure, so its warm calls are
+dispatch-only.
 """
 
 from __future__ import annotations
@@ -70,9 +73,6 @@ def prepare_queries(q: jnp.ndarray) -> jnp.ndarray:
     qrev = jnp.flip(q, axis=1)
     qrev = jnp.pad(qrev, ((0, 0), (LANES - 1, LANES - 1)))
     return qrev.reshape(-1, SUBLANES, M + 2 * (LANES - 1))
-
-
-prepare_queries_jit = jax.jit(prepare_queries)
 
 
 def validate_prepped(q_prepped, r_layout, *, m: int, n: int,

@@ -60,7 +60,8 @@ def main(argv=None):
     # quantized backend) fall back to distance-only hits
     from repro.backends import registry
     windows = (not args.no_windows and
-               registry.supports(args.backend, spec, alignment="window"))
+               registry.supports(args.backend, spec,
+                                 outputs=("cost", "start", "end")))
     refs, queries, labels = make_search_dataset(
         seed=args.seed, n_refs=args.refs,
         motifs_per_ref=args.motifs_per_ref, n_queries=args.queries,

@@ -8,7 +8,11 @@ stores, per named reference:
   * the (optionally z-normalized) series itself — the array every DP
     backend and every lower bound runs against,
   * lazily-cached ``(R, w, LANES)`` swizzled layouts per
-    (segment_width, dtype), fed to ``ops.sdtw_wavefront_prepped``,
+    (segment_width, dtype), fed to ``ops.sdtw_wavefront_prepped`` —
+    the SAME dict a ``repro.Aligner`` session accepts as its
+    ``layout_cache``, which is how ``SearchService`` shares one offline
+    reference prep between direct kernel dispatches and its
+    per-reference sessions,
   * lazily-cached PAA [lo, hi] envelopes per chunk size, fed to the
     pruning cascade (repro.search.prune).
 

@@ -38,6 +38,16 @@ every hit — the start pointers ride the sweeps' existing carries
 second pass.  ``SearchConfig.options`` forwards backend extras into
 every dispatch; ``{"mesh": Mesh(...)}`` fans the full sweeps across a
 device mesh through the distributed backend.
+
+Since the request/result front door, the service is a consumer of the
+typed API: every shared-reference sweep goes through a precompiled
+:class:`repro.Aligner` session (one per registered reference — the
+reference stays pre-normalized, kernel layouts come from the index's
+cache, and each (batch shape, outputs) pair compiles exactly once
+across all topk() calls), every dispatch yields an
+:class:`~repro.core.result.SDTWResult`, and ``brute_force_topk``
+mirrors the same sessions so "identical to brute force" stays
+bit-for-bit by construction.
 """
 
 from __future__ import annotations
@@ -49,8 +59,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.backends import registry
-from repro.core.api import sdtw_batch
+from repro.core.api import sdtw
 from repro.core.normalize import normalize_batch
+from repro.core.result import SDTWResult, sweep_outputs
+from repro.core.session import Aligner
 from repro.core.spec import NO_WINDOW, DPSpec, validate_query_list
 from repro.kernels import ops as _ops
 from repro.kernels.ops import ceil_to
@@ -155,9 +167,17 @@ class SearchService:
         # capability validation (windows included) fail fast here, not
         # mid-search
         spec = config.spec if config.spec is not None else index.spec
+        self._outputs = sweep_outputs(
+            ("cost", "start", "end") if config.windows
+            else ("cost", "end"))
         self.backend, self.spec = registry.resolve(
-            config.backend, spec,
-            alignment="window" if config.windows else None)
+            config.backend, spec, outputs=self._outputs)
+        # one precompiled Aligner session per reference for the
+        # shared-reference sweeps (kernel / quantized / distributed):
+        # pre-normalized series, index-cached kernel layouts, and
+        # per-(batch shape, outputs) executables that persist across
+        # topk() calls
+        self._aligners: dict[str, Aligner] = {}
         if self.backend.name == "distributed" and \
                 (config.options or {}).get("mesh") is None:
             raise ValueError(
@@ -253,18 +273,14 @@ class SearchService:
             if self.prune_active:
                 nominations = self._later_stages(nominations, refs, qlist,
                                                  threshold)
-            if self.backend.name == "kernel":
-                # per-reference batches: the kernel wants one shared,
-                # pre-swizzled reference per dispatch
-                for j, qids in sorted(nominations.items()):
-                    self._sweep_kernel(refs[j], j, qids, qlist, found)
-            elif not self.backend.capabilities.per_query_reference:
+            if not self.backend.capabilities.per_query_reference:
                 # backends whose semantics need ONE reference per
-                # dispatch (e.g. quantized: the codebook is built from
-                # the reference) — stacking different references would
-                # silently change the recurrence
+                # dispatch (kernel: one shared pre-swizzled layout;
+                # quantized: the codebook is built from the reference;
+                # distributed: the reference is sharded over the mesh)
+                # — each runs through its reference's Aligner session
                 for j, qids in sorted(nominations.items()):
-                    self._sweep_shared(refs[j], j, qids, qlist, found)
+                    self._sweep_session(refs[j], j, qids, qlist, found)
             else:
                 self._sweep_pairs(nominations, refs, qlist, found)
 
@@ -305,55 +321,56 @@ class SearchService:
         return nominations
 
     # ----------------------------------------------------------- sweeps
-    def _sweep_kernel(self, entry, order: int, qids: list[int], qlist,
-                      found):
-        """Full kernel sweep of the nominated queries against one
-        reference, packed into fixed shapes by the QueryBatcher and fed
-        the index's cached swizzled layout.  Banded specs automatically
-        execute the band-skip KernelPlan — trailing fully-out-of-band
-        reference blocks are dropped from the pallas grid itself
+    def _aligner(self, entry) -> Aligner:
+        """The reference's precompiled session (built on first sweep).
+
+        ``normalize=False``: the index already normalized the series
+        and ``_as_query_list`` normalizes queries, so the session's
+        executables contain exactly the sweep — results stay
+        bit-identical to the eager dispatch path.  ``layout_cache``
+        shares the index entry's swizzled-layout dict, so the kernel's
+        offline reference prep is paid once per (reference, width),
+        wherever it happens first.
+        """
+        a = self._aligners.get(entry.name)
+        if a is None:
+            cfg = self.config
+            a = self._aligners[entry.name] = Aligner(
+                entry.series, spec=self.spec, backend=self.backend.name,
+                normalize=False, segment_width=cfg.segment_width,
+                interpret=cfg.interpret, options=cfg.options,
+                layout_cache=entry.layouts)
+        return a
+
+    def _sweep_session(self, entry, order: int, qids: list[int], qlist,
+                       found):
+        """Full sweep of the nominated queries against ONE shared
+        reference through its Aligner session, packed into fixed shapes
+        by the QueryBatcher.  Banded kernel specs automatically execute
+        the band-skip KernelPlan — trailing fully-out-of-band reference
+        blocks are dropped from the pallas grid itself
         (``stats.kernel_blocks_run`` vs ``kernel_blocks_total``)."""
         cfg = self.config
+        aligner = self._aligner(entry)
         batcher = QueryBatcher(max_slots=cfg.max_slots)
         for batch in batcher.pack([qlist[i] for i in qids], ids=qids):
-            qk = _ops.prepare_queries_jit(batch.queries.astype(jnp.float32))
-            rk = self.index.layout(entry.name, cfg.segment_width)
-            out = _ops.sdtw_wavefront_prepped(
-                qk, rk, batch=batch.n_real, m=batch.length, n=entry.length,
-                segment_width=cfg.segment_width, interpret=cfg.interpret,
-                spec=self.spec, return_window=cfg.windows)
-            blocked = self.spec.band is not None and \
-                batch.length - 1 - self.spec.band > entry.length - 1
-            if not blocked:   # blocked bands short-circuit in ops:
-                #               no pallas grid ran, so no steps to count
-                plan = _ops.kernel_plan(self.spec, m=batch.length,
-                                        n=entry.length,
-                                        segment_width=cfg.segment_width,
-                                        with_window=cfg.windows)
-                grid_groups = qk.shape[0]
-                self.stats.kernel_blocks_run += \
-                    grid_groups * plan.grid_blocks
-                self.stats.kernel_blocks_total += \
-                    grid_groups * plan.num_ref_blocks
-            self._record(out, batch.ids, order, entry.name, found)
-            self.stats.dp_pairs += batch.n_real
-            self.stats.dp_calls += 1
-
-    def _sweep_shared(self, entry, order: int, qids: list[int], qlist,
-                      found):
-        """Full sweep of the nominated queries against ONE shared
-        reference through the registry backend — for backends without
-        per-query reference batching (their semantics are defined per
-        reference, e.g. the quantized codebook)."""
-        cfg = self.config
-        batcher = QueryBatcher(max_slots=cfg.max_slots)
-        for batch in batcher.pack([qlist[i] for i in qids], ids=qids):
-            plan = registry.ExecutionPlan(
-                queries=batch.queries, reference=entry.series,
-                segment_width=cfg.segment_width, interpret=cfg.interpret,
-                windows=cfg.windows, options=cfg.options)
-            out = self.backend.execute(self.spec, plan)
-            self._record(out, batch.ids, order, entry.name, found)
+            res = aligner.align(batch.queries, outputs=self._outputs)
+            if self.backend.name == "kernel":
+                blocked = self.spec.band is not None and \
+                    batch.length - 1 - self.spec.band > entry.length - 1
+                if not blocked:   # blocked bands short-circuit in ops:
+                    #             no pallas grid ran, no steps to count
+                    plan = _ops.kernel_plan(self.spec, m=batch.length,
+                                            n=entry.length,
+                                            segment_width=cfg.segment_width,
+                                            with_window=cfg.windows)
+                    grid_groups = ceil_to(batch.queries.shape[0],
+                                          SUBLANES) // SUBLANES
+                    self.stats.kernel_blocks_run += \
+                        grid_groups * plan.grid_blocks
+                    self.stats.kernel_blocks_total += \
+                        grid_groups * plan.num_ref_blocks
+            self._record(res, batch.ids, order, entry.name, found)
             self.stats.dp_pairs += batch.n_real
             self.stats.dp_calls += 1
 
@@ -380,28 +397,27 @@ class SearchService:
             plan = registry.ExecutionPlan(
                 queries=qg, reference=rg,
                 segment_width=cfg.segment_width, interpret=cfg.interpret,
-                windows=cfg.windows, options=cfg.options)
-            out = self.backend.execute(self.spec, plan)
-            self._record(out, [i for i, _ in pairs],
+                outputs=self._outputs, options=cfg.options)
+            res = self.backend.execute(self.spec, plan)
+            self._record(res, [i for i, _ in pairs],
                          [j for _, j in pairs],
                          [refs[j].name for _, j in pairs], found)
             self.stats.dp_pairs += p
             self.stats.dp_calls += 1
 
-    def _record(self, out, qids, order, name, found):
-        """Fold one dispatch's results into the per-query top-k lists.
+    def _record(self, res: SDTWResult, qids, order, name, found):
+        """Fold one dispatch's :class:`SDTWResult` into the per-query
+        top-k lists.
 
-        ``out`` is the backend's (costs, ends) pair — or the
-        (costs, starts, ends) windows triple when
-        ``SearchConfig.windows`` — with any batch-padding rows beyond
-        ``len(qids)`` ignored.  ``order``/``name`` are scalars for
-        shared-reference sweeps or per-row sequences for pair sweeps.
-        The sort key stays (cost, order, end, name): the start column
-        rides behind and never changes the ranking."""
-        if self.config.windows:
-            costs, starts, ends = (np.asarray(x) for x in out)
-        else:
-            (costs, ends), starts = (np.asarray(x) for x in out), None
+        ``res.start`` is populated exactly when ``SearchConfig.windows``
+        asked for it; any batch-padding rows beyond ``len(qids)`` are
+        ignored.  ``order``/``name`` are scalars for shared-reference
+        sweeps or per-row sequences for pair sweeps.  The sort key
+        stays (cost, order, end, name): the start column rides behind
+        and never changes the ranking."""
+        costs = np.asarray(res.cost)
+        ends = np.asarray(res.end)
+        starts = np.asarray(res.start) if res.start is not None else None
         scalar = not isinstance(order, (list, tuple))
         for row, i in enumerate(qids):
             bisect.insort(found[i], (
@@ -431,7 +447,11 @@ def brute_force_topk(index: ReferenceIndex, queries, k: int = 1, *,
                      options: dict | None = None) -> list[list[Match]]:
     """Reference implementation: full DP of every query against every
     registered reference — what SearchService.topk must reproduce
-    (windows included when ``windows=True``)."""
+    (windows included when ``windows=True``).
+
+    Shared-reference backends (kernel / quantized / distributed) run
+    through the same per-reference Aligner sessions the service uses,
+    so the two paths execute literally the same compiled sweeps."""
     svc = SearchService(index, SearchConfig(
         backend=backend, spec=spec, normalize=index.normalize, prune=False,
         segment_width=segment_width, interpret=interpret,
@@ -441,18 +461,20 @@ def brute_force_topk(index: ReferenceIndex, queries, k: int = 1, *,
     for i, q in enumerate(qs):
         groups.setdefault(int(q.shape[0]), []).append(i)
     found: list[list[tuple]] = [[] for _ in qs]
+    shared_ref = not svc.backend.capabilities.per_query_reference
     for length, qids in groups.items():
         qg = jnp.stack([qs[i] for i in qids])
         for order, e in enumerate(index.references()):
-            out = sdtw_batch(qg, e.series, normalize=False,
-                             backend=backend, spec=svc.spec,
-                             segment_width=segment_width,
-                             interpret=interpret, return_window=windows,
-                             options=options)
-            if windows:
-                costs, starts, ends = (np.asarray(x) for x in out)
+            if shared_ref:
+                res = svc._aligner(e).align(qg, outputs=svc._outputs)
             else:
-                (costs, ends), starts = (np.asarray(x) for x in out), None
+                res = sdtw(qg, e.series, outputs=svc._outputs,
+                           normalize=False, backend=svc.backend.name,
+                           spec=svc.spec, segment_width=segment_width,
+                           interpret=interpret, options=options)
+            costs, ends = np.asarray(res.cost), np.asarray(res.end)
+            starts = (np.asarray(res.start) if res.start is not None
+                      else None)
             for row, i in enumerate(qids):
                 found[i].append((
                     float(costs[row]), order, int(ends[row]), e.name,

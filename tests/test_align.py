@@ -136,20 +136,22 @@ def test_window_rejects_softmin(data):
 
 
 def test_window_capability_axis(data):
-    """The registry's alignment axis: quantized/distributed cannot emit
-    windows (loud error), backend=None auto-falls back to a capable
-    one."""
+    """The registry's outputs axis: quantized/distributed cannot emit
+    window starts (loud error), backend=None auto-falls back to a
+    capable one."""
     q, r = data
     from repro.core.api import sdtw_batch
-    with pytest.raises(ValueError, match="alignment"):
+    with pytest.raises(ValueError, match=r"output\(s\) \['start'\]"):
         sdtw_batch(q, r, backend="quantized", return_window=True)
-    assert registry.capable(DPSpec(), alignment="window") == \
+    win = ("cost", "start", "end")
+    assert registry.capable(DPSpec(), outputs=win) == \
         ["engine", "kernel", "ref"]
-    assert registry.select(DPSpec(), alignment="window")[0].name == \
+    assert registry.select(DPSpec(), outputs=win)[0].name == \
         "engine"
-    rows = {row["backend"]: row["alignment"]
+    rows = {row["backend"]: row["outputs"]
             for row in registry.capability_rows()}
-    assert rows["engine"] == rows["kernel"] == rows["ref"] == "window"
+    assert rows["engine"] == rows["ref"] == "path,soft_alignment,start"
+    assert rows["kernel"] == "path,start"
     assert rows["quantized"] == rows["distributed"] == "-"
 
 
@@ -287,10 +289,10 @@ def test_search_service_windows_reject_incapable():
     rng = np.random.default_rng(0)
     index = ReferenceIndex()
     index.add("a", rng.normal(size=(256,)).astype(np.float32))
-    with pytest.raises(ValueError, match="alignment"):
+    with pytest.raises(ValueError, match=r"output\(s\) \['start'\]"):
         SearchService(index, SearchConfig(backend="quantized",
                                           windows=True))
-    with pytest.raises(ValueError, match="alignment"):
+    with pytest.raises(ValueError, match="soft-min"):
         SearchService(index, SearchConfig(
             backend="engine", windows=True,
             spec=DPSpec(reduction="softmin")))

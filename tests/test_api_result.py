@@ -1,0 +1,193 @@
+"""The request/result front door: ``repro.sdtw`` + ``SDTWResult``.
+
+The outputs matrix (backend × requested outputs) must return exactly
+the requested fields (everything else ``None``), round-trip as a JAX
+pytree, raise the registry's loud capability errors for incapable
+combinations, and — bit-for-bit — agree with the deprecated tuple
+shims (``sdtw_batch`` / ``sdtw_search`` / ``sdtw_window``) on CBF data.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.align import expected_alignment, sdtw_window, warping_paths
+from repro.core.api import sdtw, sdtw_batch, sdtw_search
+from repro.core.result import (ALL_OUTPUTS, SDTWResult, normalize_outputs,
+                               sweep_outputs)
+from repro.core.spec import DPSpec
+from repro.data.cbf import make_cylinder_bell_funnel
+
+B, M, N = 3, 16, 120
+WINDOW_BACKENDS = ("ref", "engine", "kernel")
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(make_cylinder_bell_funnel(rng, B, M))
+    r = jnp.asarray(make_cylinder_bell_funnel(rng, 1, N)[0])
+    return q, r
+
+
+# ------------------------------------------------------ outputs helpers
+def test_normalize_outputs_validation():
+    assert normalize_outputs("cost") == frozenset({"cost"})
+    assert normalize_outputs(("end", "cost")) == frozenset({"cost", "end"})
+    assert normalize_outputs(None) == frozenset({"cost", "end"})
+    with pytest.raises(ValueError, match="unknown output"):
+        normalize_outputs(("cost", "windows"))
+    with pytest.raises(ValueError, match="at least one"):
+        normalize_outputs(())
+
+
+def test_sweep_outputs_fused():
+    """path implies start; the sweep always carries cost+end (one fused
+    pass produces all three — no separate window pass)."""
+    assert sweep_outputs(("cost",)) == frozenset({"cost", "end"})
+    assert sweep_outputs(("path",)) == frozenset({"cost", "end", "start"})
+    assert sweep_outputs(("soft_alignment",)) == \
+        frozenset({"cost", "end"})
+
+
+# ------------------------------------------------------- outputs matrix
+@pytest.mark.parametrize("backend", WINDOW_BACKENDS + ("quantized",))
+@pytest.mark.parametrize("outputs", [
+    ("cost",), ("cost", "end"), ("cost", "start", "end"), ("end",),
+], ids=lambda o: "+".join(o))
+def test_outputs_matrix(data, backend, outputs):
+    q, r = data
+    if "start" in outputs and backend == "quantized":
+        with pytest.raises(ValueError, match=r"output\(s\) \['start'\]"):
+            sdtw(q, r, backend=backend, outputs=outputs, segment_width=2)
+        return
+    res = sdtw(q, r, backend=backend, outputs=outputs, segment_width=2)
+    assert isinstance(res, SDTWResult)
+    assert res.present == frozenset(outputs)
+    for name in ALL_OUTPUTS:
+        if name not in outputs:
+            assert getattr(res, name) is None
+    if "cost" in outputs:
+        assert res.cost.shape == (B,)
+    if "end" in outputs:
+        assert res.end.shape == (B,) and res.end.dtype == jnp.int32
+
+
+def test_pytree_roundtrip(data):
+    q, r = data
+    res = sdtw(q, r, outputs=("cost", "start", "end"))
+    leaves, treedef = jax.tree_util.tree_flatten(res)
+    assert len(leaves) == 3          # None fields flatten to nothing
+    res2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(res2, SDTWResult)
+    for name in ("cost", "start", "end"):
+        np.testing.assert_array_equal(np.asarray(getattr(res, name)),
+                                      np.asarray(getattr(res2, name)))
+    assert res2.path is None and res2.soft_alignment is None
+    # tree_map keeps the container type
+    doubled = jax.tree_util.tree_map(lambda x: x * 2, res)
+    np.testing.assert_allclose(np.asarray(doubled.cost),
+                               2 * np.asarray(res.cost))
+    # and an SDTWResult crosses a jit boundary intact
+    bumped = jax.jit(lambda t: jax.tree_util.tree_map(lambda x: x + 1, t))(
+        res)
+    np.testing.assert_allclose(np.asarray(bumped.cost),
+                               np.asarray(res.cost) + 1, rtol=1e-6)
+
+
+def test_capability_errors(data):
+    q, r = data
+    # soft-min has no argmin path: start/path requests fail loudly
+    with pytest.raises(ValueError, match="soft-min"):
+        sdtw(q, r, backend="engine", reduction="softmin",
+             outputs=("cost", "start"))
+    with pytest.raises(ValueError, match="no registered backend"):
+        sdtw(q, r, reduction="softmin", outputs=("path",))
+    # soft_alignment needs a softmin spec ...
+    with pytest.raises(ValueError, match="softmin"):
+        sdtw(q, r, backend="engine", outputs=("soft_alignment",))
+    # ... and a differentiable backend
+    with pytest.raises(ValueError, match="soft_alignment"):
+        sdtw(q, r, backend="kernel", reduction="softmin",
+             outputs=("soft_alignment",))
+    with pytest.raises(ValueError, match="unknown output"):
+        sdtw(q, r, outputs=("cost", "bogus"))
+
+
+# ------------------------------------------------- shim <-> new equality
+@pytest.mark.parametrize("backend", WINDOW_BACKENDS)
+def test_shims_equal_new_api(data, backend):
+    """Acceptance: sdtw(outputs=("cost","start","end")) == the
+    sdtw_window shim bit-for-bit on every window-capable backend, and
+    sdtw_batch == sdtw(outputs=("cost","end"))."""
+    q, r = data
+    res = sdtw(q, r, backend=backend, outputs=("cost", "start", "end"),
+               segment_width=2)
+    c, s, e = sdtw_window(q, r, backend=backend, segment_width=2)
+    np.testing.assert_array_equal(np.asarray(res.cost), np.asarray(c))
+    np.testing.assert_array_equal(np.asarray(res.start), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(res.end), np.asarray(e))
+    c2, e2 = sdtw_batch(q, r, backend=backend, segment_width=2)
+    res2 = sdtw(q, r, backend=backend, outputs=("cost", "end"),
+                segment_width=2)
+    np.testing.assert_array_equal(np.asarray(res2.cost), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(res2.end), np.asarray(e2))
+
+
+def test_sdtw_search_both_shapes(data):
+    """The satellite fix: sdtw_search used to unpack a 2-tuple
+    unconditionally, so return_window=True crashed."""
+    q, r = data
+    cost, end = sdtw_search(q[0], r)
+    assert np.ndim(cost) == 0 and np.ndim(end) == 0
+    cost3, start3, end3 = sdtw_search(q[0], r, return_window=True)
+    assert float(cost3) == float(cost)
+    assert int(end3) == int(end)
+    assert 0 <= int(start3) <= int(end3)
+
+
+def test_top_level_exports():
+    assert repro.sdtw is sdtw
+    assert repro.SDTWResult is SDTWResult
+    assert repro.DPSpec is DPSpec
+    assert callable(repro.Aligner)
+
+
+# -------------------------------------------------- derived outputs
+def test_path_output_equals_warping_paths(data):
+    q, r = data
+    res = sdtw(q, r, outputs=("cost", "path"))
+    assert res.start is None          # unrequested, even though swept
+    want = warping_paths(q, r)
+    assert len(res.path) == B
+    for got, exp in zip(res.path, want):
+        np.testing.assert_array_equal(got, exp)
+
+
+def test_soft_alignment_output_equals_expected_alignment(data):
+    q, r = data
+    spec = DPSpec(reduction="softmin", gamma=0.5)
+    res = sdtw(q, r, spec=spec, outputs=("cost", "soft_alignment"))
+    want = expected_alignment(q, r, spec=spec)
+    assert res.soft_alignment.shape == (B, M, N)
+    np.testing.assert_allclose(np.asarray(res.soft_alignment),
+                               np.asarray(want), rtol=1e-5, atol=1e-7)
+    # a soft_alignment-ONLY request skips the backend sweep entirely
+    # (the expected alignment is its own forward pass) yet returns the
+    # same tensor
+    only = sdtw(q, r, spec=spec, outputs=("soft_alignment",))
+    assert only.present == frozenset({"soft_alignment"})
+    np.testing.assert_array_equal(np.asarray(only.soft_alignment),
+                                  np.asarray(res.soft_alignment))
+
+
+def test_restrict_and_window_helpers(data):
+    q, r = data
+    res = sdtw(q, r, outputs=("cost", "start", "end"))
+    c, s, e = res.window()
+    assert c is res.cost and s is res.start and e is res.end
+    only_cost = res.restrict(("cost",))
+    assert only_cost.present == frozenset({"cost"})
+    np.testing.assert_array_equal(np.asarray(only_cost.cost),
+                                  np.asarray(res.cost))

@@ -29,10 +29,54 @@ def test_kernel_accepts_softmin():
 
 
 def test_kernel_rejects_softmin_windows():
-    """Soft-min has no argmin path, so soft WINDOWS stay rejected."""
+    """Soft-min has no argmin path, so soft start/window requests stay
+    rejected — now through the generalized outputs axis."""
     with pytest.raises(ValueError, match="soft-min"):
         registry.resolve("kernel", DPSpec(reduction="softmin"),
-                         alignment="window")
+                         outputs=("cost", "start", "end"))
+
+
+def test_outputs_axis_validation():
+    """Capabilities.outputs: unknown-to-the-backend outputs fail loudly
+    with a who-can-instead hint; spec-level impossibilities (start
+    under soft-min, soft_alignment under hard-min) fail everywhere."""
+    with pytest.raises(ValueError, match=r"output\(s\) \['start'\]"):
+        registry.resolve("quantized", DEFAULT_SPEC,
+                         outputs=("cost", "start"))
+    with pytest.raises(ValueError, match="soft_alignment"):
+        registry.resolve("engine", DEFAULT_SPEC,
+                         outputs=("soft_alignment",))
+    with pytest.raises(ValueError, match="soft_alignment"):
+        registry.resolve("kernel", DPSpec(reduction="softmin"),
+                         outputs=("soft_alignment",))
+    # spec-level impossibility with auto-select: nobody can
+    with pytest.raises(ValueError, match="no registered backend"):
+        registry.select(DPSpec(reduction="softmin"), outputs=("start",))
+    # the happy paths
+    assert registry.supports("engine", DPSpec(reduction="softmin"),
+                             outputs=("cost", "soft_alignment"))
+    assert registry.supports("kernel", DEFAULT_SPEC,
+                             outputs=("cost", "start", "path"))
+    assert not registry.supports("kernel", DEFAULT_SPEC,
+                                 outputs=("path", "soft_alignment"))
+
+
+def test_outputs_accepts_bare_name():
+    """A bare string must mean ONE output, not its characters."""
+    assert registry.supports("engine", DEFAULT_SPEC, outputs="start")
+    assert not registry.supports("quantized", DEFAULT_SPEC,
+                                 outputs="start")
+    with pytest.raises(ValueError, match=r"output\(s\) \['start'\]"):
+        registry.resolve("quantized", DEFAULT_SPEC, outputs="start")
+
+
+def test_outputs_typo_raises_unknown_not_unsupported():
+    """A misspelled output name must raise the loud unknown-output
+    error, not read as a capability gap."""
+    with pytest.raises(ValueError, match="unknown output"):
+        registry.supports("engine", DEFAULT_SPEC, outputs="cots")
+    with pytest.raises(ValueError, match="unknown output"):
+        registry.resolve("engine", DEFAULT_SPEC, outputs=("cost", "ned"))
 
 
 def test_kernel_rejects_cosine():
