@@ -6,7 +6,10 @@ streams query batches through it.  This bench measures, per backend,
   * **cold** — construct the session and run the first (tracing +
     compiling) call for a batch shape;
   * **warm** — the steady-state per-call latency at the same shape
-    (cache-hit dispatch only, zero retraces), and warm calls/sec;
+    (cache-hit dispatch only, zero retraces): mean, p50 and p99 from a
+    ``repro.obs`` histogram of per-call wall-clock (each call blocked
+    to completion, so async dispatch can't fake the quantiles), and
+    warm calls/sec;
   * the session's trace/compile counters, asserting the contract the
     tier-1 suite checks: one executable per (shape, outputs) key and
     NO retraces on warm calls.
@@ -30,6 +33,8 @@ def run(*, full: bool = False, ci: bool = False, csv: list | None = None):
     import jax.numpy as jnp
     import repro
 
+    from repro.obs import Histogram
+
     if ci:
         B, M, N, runs = 4, 12, 80, 5
     elif full:
@@ -49,26 +54,36 @@ def run(*, full: bool = False, ci: bool = False, csv: list | None = None):
         jax.block_until_ready(aligner(q).cost)
         cold = time.perf_counter() - t0
 
-        # steady state: same shape, same outputs -> dispatch only
+        # steady state: same shape, same outputs -> dispatch only.
+        # Each call is individually blocked and recorded, so the
+        # histogram quantiles are true per-call latencies under load,
+        # not an average hiding the tail.
         jax.block_until_ready(aligner(q).cost)      # one extra warm-up
+        lat = Histogram(f"warm_ms.{backend}")
         t0 = time.perf_counter()
         for _ in range(runs):
+            t1 = time.perf_counter()
             jax.block_until_ready(aligner(q).cost)
+            lat.record((time.perf_counter() - t1) * 1e3)
         warm = (time.perf_counter() - t0) / runs
 
         st = aligner.stats
         assert st.compiles == 1 and st.traces == 1, st
         assert st.cache_hits == st.calls - 1, st
         speedup = cold / warm if warm > 0 else float("inf")
+        p50, p99 = lat.quantile(0.5), lat.quantile(0.99)
         print(f"  {backend:7s}: cold {cold * 1e3:9.2f} ms   warm "
-              f"{warm * 1e3:7.3f} ms   ({1.0 / warm:9.1f} calls/s, "
-              f"{speedup:7.1f}x, traces={st.traces} "
-              f"compiles={st.compiles} hits={st.cache_hits})")
+              f"{warm * 1e3:7.3f} ms   p50 {p50:7.3f} p99 {p99:7.3f}   "
+              f"({1.0 / warm:9.1f} calls/s, {speedup:7.1f}x, "
+              f"traces={st.traces} compiles={st.compiles} "
+              f"hits={st.cache_hits})")
         if csv is not None:
             csv.append({"bench": "aligner_session", "backend": backend,
                         "B": B, "M": M, "N": N,
                         "ms_cold": round(cold * 1e3, 3),
                         "ms_warm": round(warm * 1e3, 4),
+                        "ms_warm_p50": round(p50, 4),
+                        "ms_warm_p99": round(p99, 4),
                         "warm_calls_per_s": round(1.0 / warm, 1),
                         "cold_over_warm": round(speedup, 1)})
         if ci:

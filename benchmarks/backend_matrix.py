@@ -104,6 +104,13 @@ def run(full: bool = False, ci: bool = False, csv: list | None = None):
     print(f"[backend_matrix] {checked} exact cross-checks OK, "
           f"{skipped} (backend, spec) cells correctly declined")
     assert checked > 0, "no exact cross-checks ran — matrix misconfigured"
+    if csv is not None:
+        # summary row: coverage counts are the comparable signal in --ci
+        # mode (where per-cell timing is intentionally skipped) — a drop
+        # in checked_cells between two BENCH reports means a backend
+        # silently lost a capability cell
+        csv.append({"bench": "backend_matrix", "B": B, "M": M, "N": N,
+                    "checked_cells": checked, "declined_cells": skipped})
 
 
 def main(argv=None):

@@ -6,6 +6,10 @@ the paper's formula
 
 where floatsProcessed counts every floating-point value in all queries of
 the batch.
+
+The structured per-bench reporter (schema-versioned ``BENCH_<name>.json``
+files that ``launch/report.py --compare`` diffs) lives in
+``repro.obs.bench`` and is re-exported here so benches keep one import.
 """
 
 from __future__ import annotations
@@ -13,6 +17,11 @@ from __future__ import annotations
 import time
 
 import jax
+
+from repro.obs.bench import (BENCH_SCHEMA, BenchSchemaError,  # noqa: F401
+                             bench_doc, bench_path, load_bench,
+                             load_bench_dir, machine_fingerprint,
+                             summarize_rows, validate_bench, write_bench)
 
 
 def time_fn(fn, *args, warmup: int = 2, runs: int = 10) -> float:

@@ -1,8 +1,13 @@
 """Benchmark driver: one bench per paper table/figure + framework-level
-benches. Writes benchmarks/out/results.csv.
+benches.  Every bench's rows are written both to the combined
+benchmarks/out/results.csv and to a schema-versioned, per-bench
+``BENCH_<name>.json`` (see benchmarks/common.py) that
+``launch/report.py --compare`` diffs for regressions.
 
   python -m benchmarks.run            # reduced CPU workloads
   python -m benchmarks.run --full     # paper's exact sizes (slow on CPU)
+  python -m benchmarks.run --ci       # tiny shapes; asserts + validates
+                                      # every emitted BENCH_*.json
 """
 
 from __future__ import annotations
@@ -11,48 +16,85 @@ import argparse
 import csv
 import os
 
+from benchmarks import common
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ci", action="store_true",
+                    help="tiny shapes, hard asserts, schema-validate "
+                         "every BENCH_*.json")
     ap.add_argument("--kernel", action="store_true", default=True)
     ap.add_argument("--out", default="benchmarks/out")
     args = ap.parse_args(argv)
-
-    rows: list[dict] = []
+    if args.ci and args.full:
+        ap.error("--ci and --full are mutually exclusive")
 
     from benchmarks import table1_throughput, fig3_segment_width
     from benchmarks import train_step_bench, sdtw_scaling
     from benchmarks import search_throughput, backend_matrix
     from benchmarks import align_throughput, band_skip, aligner_session
 
-    print("=" * 70)
-    table1_throughput.run(full=args.full, kernel=args.kernel, csv=rows)
-    print("=" * 70)
-    fig3_segment_width.run(full=args.full, csv=rows)
-    print("=" * 70)
-    sdtw_scaling.run(csv=rows)
-    print("=" * 70)
-    train_step_bench.run(csv=rows)
-    print("=" * 70)
-    search_throughput.run(full=args.full, csv=rows)
-    print("=" * 70)
-    backend_matrix.run(full=args.full, csv=rows)
-    print("=" * 70)
-    align_throughput.run(full=args.full, csv=rows)
-    print("=" * 70)
-    band_skip.run(full=args.full, csv=rows)
-    print("=" * 70)
-    aligner_session.run(full=args.full, csv=rows)
+    # (name, thunk(rows)) — in --ci mode only benches with a tiny
+    # asserting mode run; the paper-workload sweeps are bench-only
+    full, ci = args.full, args.ci
+    benches = []
+    if not ci:
+        benches += [
+            ("table1", lambda rows: table1_throughput.run(
+                full=full, kernel=args.kernel, csv=rows)),
+            ("fig3_segment_width", lambda rows: fig3_segment_width.run(
+                full=full, csv=rows)),
+            ("sdtw_scaling", lambda rows: sdtw_scaling.run(csv=rows)),
+            ("train_step", lambda rows: train_step_bench.run(csv=rows)),
+        ]
+    benches += [
+        ("search_throughput", lambda rows: search_throughput.run(
+            full=full, ci=ci, csv=rows)),
+        ("backend_matrix", lambda rows: backend_matrix.run(
+            full=full, ci=ci, csv=rows)),
+        ("align_throughput", lambda rows: align_throughput.run(
+            full=full, ci=ci, csv=rows)),
+        ("band_skip", lambda rows: band_skip.run(
+            full=full, ci=ci, csv=rows)),
+        ("aligner_session", lambda rows: aligner_session.run(
+            full=full, ci=ci, csv=rows)),
+    ]
+
+    mode = "ci" if ci else "full" if full else "reduced"
+    all_rows: list[dict] = []
+    written: list[str] = []
+    for name, thunk in benches:
+        print("=" * 70)
+        rows: list[dict] = []
+        thunk(rows)
+        path = common.write_bench(name, out_dir=args.out,
+                                  params={"mode": mode}, rows=rows)
+        written.append(path)
+        all_rows += rows
 
     os.makedirs(args.out, exist_ok=True)
-    keys = sorted({k for r in rows for k in r})
+    keys = sorted({k for r in all_rows for k in r})
     path = os.path.join(args.out, "results.csv")
     with open(path, "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=keys)
         w.writeheader()
-        w.writerows(rows)
-    print(f"wrote {len(rows)} rows -> {path}")
+        w.writerows(all_rows)
+    print("=" * 70)
+    print(f"wrote {len(all_rows)} rows -> {path}")
+
+    # validate what actually landed on disk: a malformed or metric-less
+    # document must fail the run (the CI contract), not sit in the
+    # artifacts looking plausible
+    docs = common.load_bench_dir(args.out)
+    missing = [n for n, _ in benches if n not in docs]
+    if missing:
+        raise common.BenchSchemaError(
+            f"missing BENCH_*.json for bench(es) {missing} in {args.out}")
+    for name, doc in docs.items():
+        print(f"  BENCH_{name}.json: {len(doc['metrics'])} metrics, "
+              f"{len(doc['rows'])} rows  [schema ok]")
 
 
 if __name__ == "__main__":

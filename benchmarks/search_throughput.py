@@ -3,7 +3,13 @@ workload with the pruning cascade on vs off, plus the fraction of full
 DP sweeps the cascade skips (exactness is cross-checked against the
 brute-force loop every run).
 
+Since repro.obs, the run also reports the per-call topk latency
+histogram (p50/p95/p99 from ``search.topk_ms``), the cascade's
+bound-vs-sweep wall-clock split, and the batcher's padding waste — all
+read from the service's metrics registry, not re-measured by the bench.
+
   PYTHONPATH=src python -m benchmarks.search_throughput [--full]
+  PYTHONPATH=src python -m benchmarks.search_throughput --ci  # tiny
 """
 
 from __future__ import annotations
@@ -11,13 +17,19 @@ from __future__ import annotations
 import time
 
 from repro.data.cbf import make_search_dataset
+from repro.obs import MetricsRegistry
 from repro.search import (ReferenceIndex, SearchConfig, SearchService,
                           brute_force_topk)
 
 
-def run(*, full: bool = False, csv: list | None = None, k: int = 1):
-    n_refs, n_queries = (24, 128) if full else (12, 48)
-    motifs_per_ref = 32 if full else 16
+def run(*, full: bool = False, ci: bool = False, csv: list | None = None,
+        k: int = 1):
+    if ci:
+        n_refs, n_queries, motifs_per_ref, runs = 4, 8, 6, 1
+    elif full:
+        n_refs, n_queries, motifs_per_ref, runs = 24, 128, 32, 3
+    else:
+        n_refs, n_queries, motifs_per_ref, runs = 12, 48, 16, 3
     refs, queries, _ = make_search_dataset(
         seed=0, n_refs=n_refs, motifs_per_ref=motifs_per_ref,
         n_queries=n_queries, query_motifs=2)
@@ -26,30 +38,44 @@ def run(*, full: bool = False, csv: list | None = None, k: int = 1):
         index.add(name, series)
 
     print(f"[search_throughput] {n_refs} refs x {refs['track0'].shape[0]} "
-          f"samples, {n_queries} queries x {len(queries[0])}, k={k}")
+          f"samples, {n_queries} queries x {len(queries[0])}, k={k} "
+          f"({'ci' if ci else 'full' if full else 'reduced'})")
     results = {}
     for prune in (False, True):
+        metrics = MetricsRegistry()       # per-config registry: clean p50
         svc = SearchService(index, SearchConfig(backend="engine",
-                                                prune=prune, max_slots=128))
+                                                prune=prune,
+                                                max_slots=128),
+                            metrics=metrics)
         out = svc.topk(queries, k=k)          # warm-up + compile
+        svc.reset_stats()
         t0 = time.perf_counter()
-        runs = 3
         for _ in range(runs):
             out = svc.topk(queries, k=k)
         dt = (time.perf_counter() - t0) / runs
         qps = n_queries / dt
-        st = svc.stats
+        st = svc.stats                    # cumulative over the timed runs
+        lat = metrics.histogram("search.topk_ms")
         results[prune] = (out, qps, st)
         print(f"  prune={str(prune):5s}: {qps:8.1f} q/s   "
               f"skipped {st.skipped}/{st.pairs} sweeps "
               f"({st.skip_fraction:.0%}; stage0={st.pruned_stage0}, "
               f"later={st.pruned_later}), {st.dp_calls} dispatches")
+        print(f"               topk p50={lat.quantile(0.5):.1f}ms "
+              f"p99={lat.quantile(0.99):.1f}ms   "
+              f"bound/sweep={st.bound_s:.3f}s/{st.sweep_s:.3f}s   "
+              f"padding={st.padding_waste:.0%}")
         if csv is not None:
             csv.append({"bench": "search_throughput", "prune": prune,
                         "qps": round(qps, 2), "refs": n_refs,
                         "queries": n_queries, "k": k,
                         "skip_fraction": round(st.skip_fraction, 4),
-                        "dp_pairs": st.dp_pairs, "pairs": st.pairs})
+                        "dp_pairs": st.dp_pairs, "pairs": st.pairs,
+                        "topk_ms_p50": round(lat.quantile(0.5), 3),
+                        "topk_ms_p99": round(lat.quantile(0.99), 3),
+                        "bound_s": round(st.bound_s, 4),
+                        "sweep_s": round(st.sweep_s, 4),
+                        "padding_waste": round(st.padding_waste, 4)})
 
     exact = results[True][0] == results[False][0] == brute_force_topk(
         index, queries, k=k, backend="engine")
@@ -59,6 +85,12 @@ def run(*, full: bool = False, csv: list | None = None, k: int = 1):
           f"pruning speedup={speedup:.2f}x")
     if not exact:
         raise AssertionError("pruned topk != brute force")
+    if ci:
+        st = results[True][2]
+        assert st.topk_calls == runs, st
+        assert st.dp_pairs + st.skipped == st.pairs, st
+        assert st.sweep_s > 0 and st.bound_s > 0, st
+        print("  cumulative stats + bound/sweep split recorded (ci ok)")
     return results
 
 
@@ -66,6 +98,7 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ci", action="store_true")
     ap.add_argument("--k", type=int, default=1)
     args = ap.parse_args()
-    run(full=args.full, k=args.k)
+    run(full=args.full, ci=args.ci, k=args.k)

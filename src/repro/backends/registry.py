@@ -28,10 +28,14 @@ of Pallas imports.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any, Callable, Mapping
 
+from repro import obs
 from repro.core.result import DEFAULT_OUTPUTS, normalize_outputs
 from repro.core.spec import DPSpec
+
+log = logging.getLogger(__name__)
 
 _BASE_OUTPUTS = frozenset(DEFAULT_OUTPUTS)          # every backend: cost+end
 
@@ -275,7 +279,9 @@ def select(spec: DPSpec, *, preferred: str | None = None,
     with the RETURNED spec, never the one you passed in.
     """
     if preferred is not None:
-        return resolve(preferred, spec, outputs=outputs)
+        backend, spec = resolve(preferred, spec, outputs=outputs)
+        _record_selection(backend.name, spec, "preferred by caller")
+        return backend, spec
     choices = capable(spec, outputs=outputs,
                       differentiable=differentiable)
     if not choices:
@@ -290,7 +296,23 @@ def select(spec: DPSpec, *, preferred: str | None = None,
             spec, outputs=outputs) if "engine" in _REGISTRY else None
         hint = f" (engine: {reason})" if reason else ""
         raise ValueError(f"no registered backend supports {what}{hint}")
+    why = (f"first capable of {len(choices)} on device="
+           f"{_device_default()}")
+    if differentiable:
+        why += ", differentiable"
+    _record_selection(choices[0], spec, why)
     return _REGISTRY[choices[0]], spec
+
+
+def _record_selection(name: str, spec: DPSpec, why: str) -> None:
+    """Selection observability: which backend won and why — counters in
+    the default registry (``registry.select.<backend>``) plus a debug
+    log line, so auto-selection drift (e.g. the TPU kernel-first rule)
+    shows up in exported metrics, not just in someone's recollection."""
+    m = obs.default_registry()
+    m.inc("registry.select.calls")
+    m.inc(f"registry.select.{name}")
+    log.debug("select -> %s (%s) for spec %s", name, why, spec.describe())
 
 
 def capability_rows() -> list[dict]:

@@ -38,17 +38,21 @@ pre-normalized reference and dispatches.
 from __future__ import annotations
 
 import dataclasses
+import logging
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.backends import registry
 from repro.core.normalize import normalize_batch
 from repro.core.api import _derive_outputs
 from repro.core.result import (DEFAULT_OUTPUTS, SDTWResult,
                                normalize_outputs, sweep_outputs)
 from repro.core.spec import DPSpec, resolve_spec, validate_batch_inputs
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -58,13 +62,25 @@ class AlignerStats:
     ``traces`` counts executions of a traced function body (a Python
     side effect inside the jitted closure, so it only ticks while JAX
     is tracing); a warm call leaves it unchanged.  ``compiles`` counts
-    distinct executables built — exactly one per new (batch shape,
-    dtype, outputs) key.  ``calls``/``cache_hits`` count dispatches.
+    jitted executables successfully brought to their first dispatch —
+    ``jax.jit`` traces *and compiles* lazily at that first call, so the
+    counter ticks AFTER the call returns, never at build time: a build
+    whose first dispatch raises leaves ``compiles`` (and the executable
+    cache) untouched, and eager strategies (distributed) never tick it.
+    ``calls``/``cache_hits`` count dispatches.
+
+    Every field is mirrored into the session's
+    :class:`~repro.obs.MetricsRegistry` under ``aligner.*`` (plus an
+    ``aligner.cache_hit_rate`` gauge), so cross-session aggregates live
+    in ``repro.obs`` while this dataclass stays the per-session view.
     """
     calls: int = 0
     cache_hits: int = 0
     compiles: int = 0
     traces: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 class Aligner:
@@ -98,7 +114,9 @@ class Aligner:
                  segment_width: int = 8,
                  interpret: bool | None = None,
                  options: dict | None = None,
-                 layout_cache: dict | None = None):
+                 layout_cache: dict | None = None,
+                 metrics: obs.MetricsRegistry | None = None,
+                 tracer: obs.Tracer | None = None):
         reference = jnp.asarray(reference)
         if reference.ndim != 1:
             raise ValueError(
@@ -132,6 +150,11 @@ class Aligner:
         self._layouts_verified: set = set()
         self._fns: dict = {}
         self.stats = AlignerStats()
+        self._metrics = obs.default_registry() if metrics is None else \
+            metrics
+        self._tracer = obs.default_tracer() if tracer is None else tracer
+        log.debug("Aligner(n=%d, backend=%s, spec=%s)", self.length,
+                  self.backend.name, self.spec.describe())
 
     # ----------------------------------------------------------- prep
     def layout(self, compute_dtype=jnp.float32):
@@ -183,6 +206,7 @@ class Aligner:
         registry.resolve(self.backend.name, self.spec, outputs=req)
         sweep = sweep_outputs(req)
         stats = self.stats
+        metrics = self._metrics
         # derived requests (path / soft_alignment) get their queries
         # normalized ONCE, eagerly, in align() — both the sweep and the
         # derivation consume the same batch, so the closure must not
@@ -203,6 +227,7 @@ class Aligner:
 
             def run(q):
                 stats.traces += 1
+                metrics.inc("aligner.traces")
                 if norm:
                     q = normalize_batch(q)
                 qk = _ops.prepare_queries(q.astype(jnp.float32))
@@ -235,6 +260,7 @@ class Aligner:
 
         def run(q):
             stats.traces += 1
+            metrics.inc("aligner.traces")
             if norm:
                 q = normalize_batch(q)
             plan = registry.ExecutionPlan(
@@ -257,6 +283,8 @@ class Aligner:
                               segment_width=self.segment_width)
         req = normalize_outputs(outputs)
         self.stats.calls += 1
+        m = self._metrics
+        m.inc("aligner.calls")
         derived = bool(req & {"path", "soft_alignment"})
         if derived and self.normalize:
             # normalize ONCE for both the sweep and the derivation
@@ -266,14 +294,34 @@ class Aligner:
         if req - {"soft_alignment"}:
             key = (queries.shape, jnp.dtype(queries.dtype).name, req)
             entry = self._fns.get(key)
-            if entry is None:
-                entry = self._fns[key] = self._build(queries.shape,
-                                                     queries.dtype, req)
-                if entry[1]:                  # eager strategies build no
-                    self.stats.compiles += 1  # executable: no compile
+            cold = entry is None
+            if cold:
+                with self._tracer.span("aligner.build",
+                                       backend=self.backend.name,
+                                       batch=list(queries.shape),
+                                       outputs=sorted(req)):
+                    entry = self._build(queries.shape, queries.dtype, req)
+                log.debug("built executable key=%s backend=%s",
+                          key, self.backend.name)
             else:
                 self.stats.cache_hits += 1
-            res = entry[0](queries)
+                m.inc("aligner.cache_hits")
+            with self._tracer.span("aligner.dispatch",
+                                   backend=self.backend.name,
+                                   batch=list(queries.shape),
+                                   cold=cold) as sp:
+                res = entry[0](queries)
+                sp.sync(res)
+            if cold:
+                # cache + count only now: jax.jit traces AND compiles
+                # lazily at that first dispatch, so an executable (and
+                # its ``compiles`` tick) exists exactly when the call
+                # above succeeded — eager strategies (jitted=False)
+                # build none and tick nothing
+                self._fns[key] = entry
+                if entry[1]:
+                    self.stats.compiles += 1
+                    m.inc("aligner.compiles")
         else:
             # soft_alignment-only: no sweep to run — validate the
             # request against the backend, then derive directly
@@ -282,6 +330,9 @@ class Aligner:
         if derived:
             res = _derive_outputs(res, req, queries, self.reference,
                                   self.spec)
+        m.set_gauge("aligner.cache_hit_rate",
+                    m.value("aligner.cache_hits") /
+                    max(m.value("aligner.calls"), 1))
         return res.restrict(req)
 
     __call__ = align

@@ -16,16 +16,19 @@ collective) is a bug in the system — the run exits nonzero.
 
 import argparse
 import json
+import logging
 import sys
 import time
 import traceback
 
 import jax
 
-from repro import configs
+from repro import configs, obs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_cell
 from repro.utils import roofline as R
+
+log = logging.getLogger(__name__)
 
 
 def run_cell(arch: str, shape: str, mesh, *, mesh_desc: str,
@@ -84,6 +87,7 @@ def main(argv=None):
                     help="quantized int8 KV cache for decode cells")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args(argv)
+    obs.configure_logging()
 
     meshes = []
     if not args.multi_pod_only:
@@ -101,8 +105,9 @@ def main(argv=None):
     for mesh, desc in meshes:
         for arch, shape in cells:
             if not configs.shape_applicable(arch, shape):
-                print(f"--- {arch} x {shape}: SKIP (long-context shape on "
-                      f"quadratic-attention arch; DESIGN.md §4)")
+                log.info("--- %s x %s: SKIP (long-context shape on "
+                         "quadratic-attention arch; DESIGN.md §4)",
+                         arch, shape)
                 continue
             try:
                 run_cell(arch, shape, mesh, mesh_desc=desc,
@@ -111,9 +116,9 @@ def main(argv=None):
                 failures.append((arch, shape, desc))
                 traceback.print_exc()
     if failures:
-        print(f"FAILED cells: {failures}")
+        log.error("FAILED cells: %s", failures)
         return 1
-    print(f"dry-run OK: {len(cells)} cells x {len(meshes)} mesh(es)")
+    log.info("dry-run OK: %d cells x %d mesh(es)", len(cells), len(meshes))
     return 0
 
 

@@ -11,12 +11,16 @@ hypothesis -> change -> measure loop (EXPERIMENTS.md §Perf).
 """
 
 import argparse
+import logging
 
 import jax
 
+from repro import obs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_cell
 from repro.utils import hlo_cost, roofline as R
+
+log = logging.getLogger(__name__)
 
 
 def main(argv=None):
@@ -27,6 +31,7 @@ def main(argv=None):
     ap.add_argument("--top", type=int, default=14)
     ap.add_argument("--dump", default=None)
     args = ap.parse_args(argv)
+    obs.configure_logging()
 
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     cell = build_cell(args.arch, args.shape, mesh)
@@ -37,7 +42,7 @@ def main(argv=None):
     if args.dump:
         with open(args.dump, "w") as f:
             f.write(text)
-        print(f"dumped HLO -> {args.dump} ({len(text) / 1e6:.1f} MB)")
+        log.info("dumped HLO -> %s (%.1f MB)", args.dump, len(text) / 1e6)
 
     r = R.from_compiled(compiled, arch=args.arch, shape=args.shape,
                         mesh_desc="prof", chips=mesh.size,

@@ -1,24 +1,116 @@
-"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
-table (markdown to stdout)."""
+"""Reporting driver, two modes:
+
+  * default — aggregate experiments/dryrun/*.json into the
+    EXPERIMENTS.md roofline table (markdown to stdout);
+  * ``--compare A/ B/`` — diff two directories of schema-versioned
+    ``BENCH_*.json`` files (written by ``benchmarks/run.py``; schema in
+    ``repro.obs.bench``) and flag regressions beyond ``--threshold``
+    (default 10%).  Metric direction is inferred from the name (``ms``/
+    ``*_s``/``waste`` are lower-better; ``gsps``/``qps``/``*_per_s``/
+    ``speedup``/``skip_fraction`` are higher-better; anything else is
+    reported but never flagged).  Exits nonzero when any regression is
+    found — the CI gate for perf PRs:
+
+      python -m repro.launch.report --compare main/ pr/ --threshold 0.1
+"""
 
 from __future__ import annotations
 
 import argparse
 import glob
 import json
+import logging
 import os
+import re
+import sys
+
+from repro import obs
+from repro.obs.bench import BenchSchemaError, load_bench_dir
+
+log = logging.getLogger(__name__)
+
+# direction by metric-name convention (see benchmarks/*.py rows)
+LOWER_BETTER = re.compile(
+    r"(^|_)(ms|ns|s|sec|seconds|time|latency|waste|bound_s|sweep_s)"
+    r"(_p\d+)?($|_)|_ms($|_)|ms_")
+HIGHER_BETTER = re.compile(
+    r"gsps|qps|per_s|throughput|speedup|calls_per_s|skip_fraction|"
+    r"hit_rate|over_warm")
+
+
+def metric_direction(name: str) -> int:
+    """-1 lower-better, +1 higher-better, 0 unknown (never flagged)."""
+    low = name.lower()
+    if HIGHER_BETTER.search(low):
+        return 1
+    if LOWER_BETTER.search(low):
+        return -1
+    return 0
+
+
+def compare_dirs(dir_a: str, dir_b: str, *, threshold: float = 0.10,
+                 out=None) -> int:
+    """Print a markdown diff table of B vs A; return the number of
+    regressions beyond ``threshold`` (relative worsening)."""
+    out = sys.stdout if out is None else out
+    a_docs, b_docs = load_bench_dir(dir_a), load_bench_dir(dir_b)
+    if not a_docs:
+        raise BenchSchemaError(f"{dir_a}: no BENCH_*.json files")
+    if not b_docs:
+        raise BenchSchemaError(f"{dir_b}: no BENCH_*.json files")
+    fp_a = next(iter(a_docs.values()))["machine"]
+    fp_b = next(iter(b_docs.values()))["machine"]
+    for key in ("platform", "jax_backend"):
+        if fp_a.get(key) != fp_b.get(key):
+            print(f"WARNING: machine.{key} differs "
+                  f"({fp_a.get(key)!r} vs {fp_b.get(key)!r}) — "
+                  f"deltas may reflect the machine, not the code",
+                  file=out)
+
+    regressions = []
+    print(f"| bench | metric | {dir_a} | {dir_b} | delta | verdict |",
+          file=out)
+    print("|---|---|---|---|---|---|", file=out)
+    for name in sorted(a_docs):
+        if name not in b_docs:
+            print(f"| {name} | - | present | MISSING | - | missing |",
+                  file=out)
+            regressions.append((name, "<bench missing>"))
+            continue
+        ma, mb = a_docs[name]["metrics"], b_docs[name]["metrics"]
+        for key in sorted(ma):
+            if key not in mb:
+                continue
+            va, vb = ma[key], mb[key]
+            if va == 0:
+                continue
+            delta = (vb - va) / abs(va)
+            direction = metric_direction(key)
+            worsening = delta * -direction    # >0 means B is worse
+            if direction and worsening > threshold:
+                verdict = f"REGRESSION (>{threshold:.0%})"
+                regressions.append((name, key))
+            elif direction and -worsening > threshold:
+                verdict = "improved"
+            else:
+                verdict = "ok" if direction else "(untracked)"
+            print(f"| {name} | {key} | {fmt(va)} | {fmt(vb)} | "
+                  f"{delta:+.1%} | {verdict} |", file=out)
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) beyond "
+              f"{threshold:.0%}:", file=out)
+        for name, key in regressions:
+            print(f"  - {name}: {key}", file=out)
+    else:
+        print(f"\nno regressions beyond {threshold:.0%}", file=out)
+    return len(regressions)
 
 
 def fmt(x):
     return f"{x:.3g}"
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dir", default="experiments/dryrun")
-    ap.add_argument("--mesh", default="pod16x16")
-    args = ap.parse_args(argv)
-
+def dryrun_table(args) -> int:
     rows = []
     for p in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
         d = json.load(open(p))
@@ -35,7 +127,31 @@ def main(argv=None):
               f"{fmt(d['t_memory'])} | {fmt(d['t_collective'])} | "
               f"{d['bottleneck']} | {fmt(d['flops_ratio'])} | "
               f"{fmt(d['roofline_fraction'])} |")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--compare", nargs=2, metavar=("BASE", "NEW"),
+                    help="diff two directories of BENCH_*.json files")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative worsening that counts as a "
+                         "regression (default 0.10 = 10%%)")
+    args = ap.parse_args(argv)
+    obs.configure_logging()
+
+    if args.compare:
+        try:
+            n = compare_dirs(args.compare[0], args.compare[1],
+                             threshold=args.threshold)
+        except BenchSchemaError as e:
+            log.error("%s", e)
+            return 2
+        return 1 if n else 0
+    return dryrun_table(args)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -12,22 +12,32 @@ CPU-scale usage (reduced workload):
   PYTHONPATH=src python -m repro.launch.search_serve --reduction softmin \
       --gamma 1.0      # soft specs disable the (inadmissible) cascade
                        # and the (argmin-shaped) matched windows
+  PYTHONPATH=src python -m repro.launch.search_serve --trace trace.json
+      # Chrome trace (chrome://tracing / perfetto) of every cascade stage
 
 The driver mirrors launch/serve.py: build the index once (normalized +
 cached layouts), then drive the SearchService over arriving chunks the
 way a serving frontend would.  Hits come back with their matched
 reference window — ``track3[412..540]`` — not just a distance, unless
 ``--no-windows`` (or a soft-min spec) turns the start lanes off.
+
+Per-chunk latency lands in a ``repro.obs`` histogram (reported as
+p50/p95/p99 — tails matter for serving); cascade totals come from the
+service's cumulative ``svc.stats`` after a post-warm-up reset.
 """
 
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
+from repro import obs
 from repro.core.spec import DISTANCES, REDUCTIONS, DPSpec
 from repro.data.cbf import make_search_dataset
 from repro.search import ReferenceIndex, SearchConfig, SearchService
+
+log = logging.getLogger(__name__)
 
 
 def main(argv=None):
@@ -51,8 +61,12 @@ def main(argv=None):
     ap.add_argument("--no-windows", action="store_true",
                     help="report distances only (matched windows are on "
                          "by default for hard-min specs)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace (.json) or JSONL (.jsonl) "
+                         "of the serve loop's spans")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    obs.configure_logging()
 
     spec = DPSpec(distance=args.distance, reduction=args.reduction,
                   gamma=args.gamma, band=args.band)
@@ -73,26 +87,33 @@ def main(argv=None):
         backend=args.backend, prune=not args.no_prune, windows=windows))
 
     n = len(queries)
-    print(f"[search] {len(index)} refs x {refs['track0'].shape[0]} samples, "
-          f"{n} queries arriving in chunks of {args.chunk}, "
-          f"backend={svc.backend.name}, spec={svc.spec.describe()}, "
-          f"prune={svc.prune_active}, windows={windows}")
+    log.info("[search] %d refs x %d samples, %d queries arriving in "
+             "chunks of %d, backend=%s, spec=%s, prune=%s, windows=%s",
+             len(index), refs["track0"].shape[0], n, args.chunk,
+             svc.backend.name, svc.spec.describe(), svc.prune_active,
+             windows)
     svc.topk(queries[:args.chunk], k=args.k)      # warm-up compile
+    svc.reset_stats()      # report steady state, not the compile chunk
+    lat = obs.default_registry().histogram("serve.chunk_ms")
     hits = 0
-    dp_pairs = pairs = skipped = 0
     t0 = time.perf_counter()
     for lo in range(0, n, args.chunk):
         chunk = queries[lo:lo + args.chunk]
+        t1 = time.perf_counter()
         matches = svc.topk(chunk, k=args.k)
-        st = svc.stats
-        dp_pairs += st.dp_pairs
-        pairs += st.pairs
-        skipped += st.skipped
+        lat.record((time.perf_counter() - t1) * 1e3)
         hits += sum(m[0].reference == labels[lo + i]
                     for i, m in enumerate(matches))
     dt = time.perf_counter() - t0
+    st = svc.stats        # cumulative across all chunks since reset
     print(f"[search] {n / dt:8.1f} q/s   top-1 hit-rate {hits / n:.0%}   "
-          f"sweeps {dp_pairs}/{pairs} (skipped {skipped / max(pairs, 1):.0%})")
+          f"sweeps {st.dp_pairs}/{st.pairs} "
+          f"(skipped {st.skipped / max(st.pairs, 1):.0%})")
+    print(f"[search] chunk latency ms: p50 {lat.quantile(0.5):.2f}  "
+          f"p95 {lat.quantile(0.95):.2f}  p99 {lat.quantile(0.99):.2f}  "
+          f"over {lat.count} chunks   bound {st.bound_s * 1e3:.1f} ms / "
+          f"sweep {st.sweep_s * 1e3:.1f} ms   "
+          f"padding waste {st.padding_waste:.0%}")
     for i, m in enumerate(svc.topk(queries[:3], k=args.k)):
         best = ", ".join(
             (f"{x.reference}[{x.start}..{x.end}] cost={x.cost:.3f}"
@@ -100,6 +121,9 @@ def main(argv=None):
              f"{x.reference}@{x.end} cost={x.cost:.3f}")
             for x in m)
         print(f"  q{i} ({labels[i]}): {best}")
+    if args.trace:
+        path = obs.save_trace(args.trace)
+        print(f"[search] trace -> {path}")
 
 
 if __name__ == "__main__":

@@ -11,16 +11,19 @@ step's cache shardings come from launch/specs.py.
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import Model
 from repro.models.sharding import use_mesh
 from repro.serve.engine import ServeConfig, generate
+
+log = logging.getLogger(__name__)
 
 
 def main(argv=None):
@@ -34,6 +37,7 @@ def main(argv=None):
     ap.add_argument("--mesh", default="none",
                     choices=["none", "prod", "prod-multipod"])
     args = ap.parse_args(argv)
+    obs.configure_logging()
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -62,8 +66,8 @@ def main(argv=None):
         toks = generate(model, params, batch, steps=args.steps,
                         serve_cfg=serve_cfg)
         dt = time.time() - t0
-        print(f"[serve] generated {toks.shape} in {dt:.2f}s "
-              f"({B * args.steps / dt:.1f} tok/s)")
+        log.info("[serve] generated %s in %.2fs (%.1f tok/s)",
+                 toks.shape, dt, B * args.steps / dt)
         print(toks[:, :12])
 
     if mesh is not None:

@@ -21,13 +21,14 @@ the last step checkpoint) is wired through the checkpoint cadence
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.data.pipeline import TokenStream
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import Model
@@ -36,6 +37,8 @@ from repro.optim.adamw import AdamWConfig
 from repro.train.checkpoint import (latest_step, restore_checkpoint,
                                     save_checkpoint)
 from repro.train.step import TrainState, make_train_step, train_state_init
+
+log = logging.getLogger(__name__)
 
 
 def main(argv=None):
@@ -56,6 +59,7 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+    obs.configure_logging()
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -78,7 +82,7 @@ def main(argv=None):
     if args.ckpt_dir:
         last = latest_step(args.ckpt_dir)
         if last is not None:
-            print(f"[train] resuming from step {last}")
+            log.info("[train] resuming from step %d", last)
             state_tree, extra = restore_checkpoint(
                 args.ckpt_dir, last, state_tree)
             start = last
@@ -108,10 +112,11 @@ def main(argv=None):
             state_tree, metrics = jit_step(state_tree, mb)
             if (i + 1) % args.log_every == 0 or i == start:
                 dt = time.time() - t0
-                print(f"[train] step {i + 1}/{args.steps} "
-                      f"loss={float(metrics['loss']):.4f} "
-                      f"gnorm={float(metrics['grad_norm']):.3f} "
-                      f"lr={float(metrics['lr']):.2e} ({dt:.1f}s)")
+                log.info("[train] step %d/%d loss=%.4f gnorm=%.3f "
+                         "lr=%.2e (%.1fs)", i + 1, args.steps,
+                         float(metrics["loss"]),
+                         float(metrics["grad_norm"]),
+                         float(metrics["lr"]), dt)
             if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
                 save_checkpoint(args.ckpt_dir, i + 1, state_tree,
                                 extra={"cursor": i + 1})
@@ -122,7 +127,7 @@ def main(argv=None):
             run()
     else:
         run()
-    print("[train] done")
+    log.info("[train] done")
 
 
 if __name__ == "__main__":

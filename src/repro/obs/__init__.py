@@ -1,0 +1,148 @@
+"""repro.obs — unified tracing, metrics, and logging for every layer.
+
+The paper reached peak throughput by *measuring* (the segment-width
+sweep of §4–5 picked the per-thread reference width from profiled
+wall-clock); this package makes that discipline a subsystem instead of
+scattered ad-hoc dataclasses:
+
+  * :class:`MetricsRegistry` — thread-safe counters / gauges /
+    histograms (p50/p95/p99), accumulated for the life of the process;
+  * :class:`Tracer` + :func:`span` / :func:`trace` — nestable regions
+    whose timers are device-sync-aware (``Span.sync(value)`` blocks on
+    in-flight JAX work before the end timestamp when the tracer runs
+    ``device_sync=True``, so async dispatch can't fake sub-microsecond
+    sweeps);
+  * exporters — metrics snapshots and span streams to JSONL,
+    span streams to Chrome ``chrome://tracing`` trace-event JSON;
+  * :func:`configure_logging` — stdlib logging with the level read
+    from ``REPRO_LOG`` (drivers call it once; libraries just use
+    ``logging.getLogger(__name__)``).
+
+Instrumented layers (backends.registry.select, core.session.Aligner,
+search.service.SearchService, the launch drivers and benchmarks) write
+to the process-wide default registry/tracer unless handed their own —
+so wrapping any run is:
+
+    import repro.obs as obs
+    with obs.trace("my-run"):
+        service.topk(queries, k=5)
+    obs.save_trace("trace.json")            # open in chrome://tracing
+    print(obs.default_registry().snapshot())
+
+Environment knobs: ``REPRO_LOG=debug`` (log level),
+``REPRO_TRACE_SYNC=1`` (default tracer blocks at span exit — benchmark
+runs, not serving).
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import os
+
+from repro.obs.metrics import (Counter, Gauge, Histogram,   # noqa: F401
+                               MetricsRegistry)
+from repro.obs.tracing import (Span, Tracer, chrome_event,  # noqa: F401
+                               load_chrome, load_jsonl)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Span", "Tracer", "chrome_event", "load_chrome", "load_jsonl",
+    "default_registry", "default_tracer", "span", "trace",
+    "save_trace", "save_metrics", "reset", "configure_logging",
+]
+
+_registry = MetricsRegistry()
+_tracer = Tracer(metrics=_registry,
+                 device_sync=os.environ.get("REPRO_TRACE_SYNC", "") not in
+                 ("", "0", "false"))
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-wide registry every instrumented layer records to
+    (unless constructed with an explicit ``metrics=``)."""
+    return _registry
+
+
+def default_tracer() -> Tracer:
+    """The process-wide tracer behind :func:`span` / :func:`trace`."""
+    return _tracer
+
+
+def span(name: str, **args):
+    """Open a span on the default tracer:
+    ``with obs.span("aligner.dispatch") as sp: sp.sync(result)``."""
+    return _tracer.span(name, **args)
+
+
+# ``obs.trace("run")`` reads better at the top of a driver; same span.
+trace = span
+
+
+def save_trace(path, *, fmt: str | None = None) -> str:
+    """Export the default tracer — Chrome trace-event JSON by default,
+    JSONL when ``fmt="jsonl"`` (or the path ends in .jsonl).  Returns
+    the path written."""
+    if fmt is None:
+        fmt = "jsonl" if str(path).endswith(".jsonl") else "chrome"
+    if fmt == "jsonl":
+        _tracer.export_jsonl(path)
+    elif fmt == "chrome":
+        _tracer.export_chrome(path)
+    else:
+        raise ValueError(f"unknown trace format {fmt!r} "
+                         f"(use 'chrome' or 'jsonl')")
+    return str(path)
+
+
+def save_metrics(path) -> dict:
+    """Write the default registry snapshot as JSON; returns it."""
+    snap = _registry.snapshot()
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+    return snap
+
+
+def reset() -> None:
+    """Clear the default registry and tracer (tests / between runs)."""
+    _registry.reset()
+    _tracer.clear()
+
+
+_LEVELS = {"critical": logging.CRITICAL, "error": logging.ERROR,
+           "warning": logging.WARNING, "info": logging.INFO,
+           "debug": logging.DEBUG}
+
+
+def log_level(default: str = "info") -> int:
+    """The level named by ``REPRO_LOG`` (name or int), else default."""
+    raw = os.environ.get("REPRO_LOG", default).strip().lower()
+    if raw.isdigit():
+        return int(raw)
+    try:
+        return _LEVELS[raw]
+    except KeyError:
+        raise ValueError(
+            f"REPRO_LOG={raw!r}: use one of {sorted(_LEVELS)} or an "
+            f"integer level") from None
+
+
+def configure_logging(level: int | str | None = None, *,
+                      force: bool = False) -> None:
+    """Driver entry point: route stdlib logging to stderr at the
+    ``REPRO_LOG`` level (library modules never call this — they only
+    ``logging.getLogger(__name__)``)."""
+    if level is None:
+        level = log_level()
+    elif isinstance(level, str):
+        level = _LEVELS.get(level.strip().lower(), logging.INFO)
+    root = logging.getLogger("repro")
+    if force:
+        for h in list(root.handlers):
+            root.removeHandler(h)
+    if not root.handlers:
+        handler = logging.StreamHandler()
+        handler.setFormatter(logging.Formatter(
+            "[%(levelname).1s %(name)s] %(message)s"))
+        root.addHandler(handler)
+    root.setLevel(level)

@@ -1,0 +1,162 @@
+"""Schema-versioned benchmark reports: ``BENCH_<name>.json``.
+
+Every bench in ``benchmarks/`` writes one document per run through
+:func:`write_bench` — a machine/backend fingerprint, the bench params,
+a flat numeric ``metrics`` dict (the comparable summary), and the raw
+sweep ``rows``.  ``launch/report.py --compare A/ B/`` diffs two
+directories of these and flags regressions; CI validates and uploads
+them as artifacts, so perf claims in future PRs are diffs between
+tracked files, not eyeballed console output.
+
+The schema (``repro.bench/v1``) is deliberately small and hand-checked
+(:func:`validate_bench` — no jsonschema dependency):
+
+    {"schema": "repro.bench/v1", "name": str, "created_unix": float,
+     "machine": {"platform", "python", "jax", "jax_backend", ...},
+     "params": {...}, "metrics": {str: finite number, ...non-empty},
+     "rows": [ {...}, ... ]}
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import platform
+import statistics
+import time
+
+BENCH_SCHEMA = "repro.bench/v1"
+
+
+class BenchSchemaError(ValueError):
+    """A BENCH_*.json document violating the repro.bench/v1 schema."""
+
+
+def machine_fingerprint() -> dict:
+    """Where these numbers came from — enough for --compare to warn
+    before diffing apples against oranges."""
+    out = {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count() or 1,
+    }
+    try:
+        import jax
+        out["jax"] = jax.__version__
+        out["jax_backend"] = jax.default_backend()
+        out["device_count"] = jax.device_count()
+    except Exception:                      # fingerprint must never fail
+        out["jax"] = "unavailable"
+        out["jax_backend"] = "unavailable"
+        out["device_count"] = 0
+    return out
+
+
+def summarize_rows(rows: list[dict]) -> dict:
+    """Median over the rows for every numeric column — the comparable
+    metric dict of a bench whose rows sweep a parameter.  Bools and
+    non-numeric values are skipped; an all-non-numeric row set yields
+    an empty dict (validate_bench then rejects the doc loudly)."""
+    cols: dict[str, list[float]] = {}
+    for row in rows:
+        for key, val in row.items():
+            if isinstance(val, bool) or not isinstance(val, (int, float)):
+                continue
+            if not math.isfinite(val):
+                continue
+            cols.setdefault(key, []).append(float(val))
+    return {key: statistics.median(vals) for key, vals in
+            sorted(cols.items())}
+
+
+def validate_bench(doc: dict, *, source: str = "<doc>") -> dict:
+    """Raise :class:`BenchSchemaError` unless ``doc`` is a well-formed
+    repro.bench/v1 document with at least one finite numeric metric."""
+    def fail(msg):
+        raise BenchSchemaError(f"{source}: {msg}")
+
+    if not isinstance(doc, dict):
+        fail(f"expected a JSON object, got {type(doc).__name__}")
+    if doc.get("schema") != BENCH_SCHEMA:
+        fail(f"schema={doc.get('schema')!r}, expected {BENCH_SCHEMA!r}")
+    name = doc.get("name")
+    if not name or not isinstance(name, str):
+        fail(f"name must be a non-empty string, got {name!r}")
+    if not isinstance(doc.get("created_unix"), (int, float)):
+        fail("created_unix must be a unix timestamp")
+    machine = doc.get("machine")
+    if not isinstance(machine, dict):
+        fail("machine fingerprint missing")
+    for key in ("platform", "python", "jax", "jax_backend"):
+        if not isinstance(machine.get(key), str):
+            fail(f"machine.{key} must be a string")
+    if not isinstance(doc.get("params"), dict):
+        fail("params must be an object")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        fail("metrics must be a non-empty object of numbers")
+    for key, val in metrics.items():
+        if isinstance(val, bool) or not isinstance(val, (int, float)) \
+                or not math.isfinite(val):
+            fail(f"metric {key!r} must be a finite number, got {val!r}")
+    rows = doc.get("rows", [])
+    if not isinstance(rows, list) or \
+            any(not isinstance(r, dict) for r in rows):
+        fail("rows must be a list of objects")
+    return doc
+
+
+def bench_doc(name: str, *, params: dict | None = None,
+              rows: list[dict] | None = None,
+              metrics: dict | None = None) -> dict:
+    """Assemble (and validate) one bench document.  ``metrics`` defaults
+    to :func:`summarize_rows` over ``rows``."""
+    rows = rows or []
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "name": name,
+        "created_unix": time.time(),
+        "machine": machine_fingerprint(),
+        "params": params or {},
+        "metrics": metrics if metrics is not None else summarize_rows(rows),
+        "rows": rows,
+    }
+    return validate_bench(doc, source=f"BENCH_{name}")
+
+
+def bench_path(out_dir: str, name: str) -> str:
+    return os.path.join(out_dir, f"BENCH_{name}.json")
+
+
+def write_bench(name: str, *, out_dir: str, params: dict | None = None,
+                rows: list[dict] | None = None,
+                metrics: dict | None = None) -> str:
+    """Validate + write ``BENCH_<name>.json``; returns the path."""
+    doc = bench_doc(name, params=params, rows=rows, metrics=metrics)
+    os.makedirs(out_dir, exist_ok=True)
+    path = bench_path(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    return path
+
+
+def load_bench(path: str) -> dict:
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            raise BenchSchemaError(f"{path}: not JSON ({e})") from None
+    return validate_bench(doc, source=path)
+
+
+def load_bench_dir(dirpath: str) -> dict[str, dict]:
+    """{bench name: doc} for every BENCH_*.json in a directory."""
+    if not os.path.isdir(dirpath):
+        raise BenchSchemaError(f"{dirpath}: not a directory")
+    out = {}
+    for fname in sorted(os.listdir(dirpath)):
+        if fname.startswith("BENCH_") and fname.endswith(".json"):
+            doc = load_bench(os.path.join(dirpath, fname))
+            out[doc["name"]] = doc
+    return out

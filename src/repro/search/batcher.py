@@ -50,14 +50,22 @@ class QueryBatch:
 
 
 class QueryBatcher:
-    """Length-bucketed slot packer for a stream of 1-D queries."""
+    """Length-bucketed slot packer for a stream of 1-D queries.
 
-    def __init__(self, *, max_slots: int = 64):
+    ``metrics``: optional :class:`repro.obs.MetricsRegistry` — every
+    emitted batch records ``batcher.batches`` / ``batcher.rows_real`` /
+    ``batcher.rows_padded`` counters and a ``batcher.fill`` histogram
+    (real rows / grid rows), so bucket occupancy and padding waste are
+    observable across a serving run instead of vanishing with the
+    batcher object."""
+
+    def __init__(self, *, max_slots: int = 64, metrics=None):
         if max_slots < SUBLANES or max_slots % SUBLANES:
             raise ValueError(
                 f"max_slots must be a positive multiple of SUBLANES="
                 f"{SUBLANES}, got {max_slots}")
         self.max_slots = max_slots
+        self.metrics = metrics
         self._buckets: dict[int, list] = {}     # length -> [(id, series)]
 
     def add(self, qid, series) -> list[QueryBatch]:
@@ -97,5 +105,12 @@ class QueryBatcher:
         ids = tuple(qid for qid, _ in bucket)
         q = jnp.stack([s for _, s in bucket])
         g = grid_size(q.shape[0], self.max_slots)
-        q = jnp.pad(q, ((0, g - q.shape[0]), (0, 0)))
+        n_real = int(q.shape[0])
+        q = jnp.pad(q, ((0, g - n_real), (0, 0)))
+        if self.metrics is not None:
+            self.metrics.inc("batcher.batches")
+            self.metrics.inc("batcher.rows_real", n_real)
+            if g > n_real:
+                self.metrics.inc("batcher.rows_padded", g - n_real)
+            self.metrics.observe("batcher.fill", n_real / g)
         return QueryBatch(length=length, ids=ids, queries=q)

@@ -54,10 +54,13 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import logging
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.backends import registry
 from repro.core.api import sdtw
 from repro.core.normalize import normalize_batch
@@ -71,6 +74,8 @@ from repro.search.batcher import QueryBatcher, grid_size
 from repro.search.index import ReferenceIndex
 from repro.search.prune import (lb_keogh_sdtw, lb_keogh_sdtw_multi,
                                 prune_admissible)
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,8 +130,17 @@ class Match:
 
 @dataclasses.dataclass
 class SearchStats:
-    """Cascade accounting for one topk() call (benchmarked in
-    benchmarks/search_throughput.py)."""
+    """Cascade accounting (benchmarked in
+    benchmarks/search_throughput.py).
+
+    ``SearchService.stats`` is CUMULATIVE over the service's lifetime —
+    it is merged into, never silently replaced — and
+    ``SearchService.last`` holds the per-call snapshot of the most
+    recent ``topk()``.  Poking fields from outside the service is
+    deprecated: every field is mirrored into the service's
+    :class:`~repro.obs.MetricsRegistry` under ``search.*``, which is
+    the supported way to consume (and export) these numbers.
+    """
     pairs: int = 0                   # queries x references
     dp_pairs: int = 0                # pairs that reached a full sweep
     pruned_stage0: int = 0           # discarded on the coarse batched bound
@@ -137,6 +151,11 @@ class SearchStats:
     #                                  would have executed — banded specs
     #                                  pick the band-skip KernelPlan, so
     #                                  run < total for tight bands
+    topk_calls: int = 0              # topk() invocations folded in here
+    bound_s: float = 0.0             # wall-clock in the pruning cascade
+    sweep_s: float = 0.0             # wall-clock in full DP sweeps
+    sweep_rows: int = 0              # dispatched batch rows incl. padding
+    sweep_rows_real: int = 0         # ... of which carried a real query
 
     @property
     def skipped(self) -> int:
@@ -150,10 +169,32 @@ class SearchStats:
     def kernel_blocks_skipped(self) -> int:
         return self.kernel_blocks_total - self.kernel_blocks_run
 
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of dispatched batch rows that were grid padding."""
+        if not self.sweep_rows:
+            return 0.0
+        return 1.0 - self.sweep_rows_real / self.sweep_rows
+
+    def merge(self, other: "SearchStats") -> "SearchStats":
+        """Fold another stats block into this one (field-wise sum)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+    def as_dict(self) -> dict:
+        out = dataclasses.asdict(self)
+        out.update(skipped=self.skipped, skip_fraction=self.skip_fraction,
+                   padding_waste=self.padding_waste)
+        return out
+
 
 class SearchService:
     def __init__(self, index: ReferenceIndex,
-                 config: SearchConfig = SearchConfig()):
+                 config: SearchConfig = SearchConfig(), *,
+                 metrics: obs.MetricsRegistry | None = None,
+                 tracer: obs.Tracer | None = None):
         if index.normalize != config.normalize:
             raise ValueError(
                 f"index.normalize={index.normalize} != "
@@ -189,14 +230,32 @@ class SearchService:
         # backends (quantized) or other specs fall back to full sweeps
         self.prune_active = (config.prune and prune_admissible(self.spec)
                              and self.backend.capabilities.exact)
+        # ``stats`` accumulates for the life of the service; ``last``
+        # is the per-call snapshot of the most recent topk()
         self.stats = SearchStats()
+        self.last = SearchStats()
+        self._cur = self.last
+        self._metrics = obs.default_registry() if metrics is None else \
+            metrics
+        self._tracer = obs.default_tracer() if tracer is None else tracer
+
+    def reset_stats(self) -> None:
+        """Zero the cumulative accounting (e.g. after warm-up) —
+        explicit, never implicit: ``topk()`` only ever merges."""
+        self.stats = SearchStats()
+        self.last = SearchStats()
 
     # ------------------------------------------------------------ topk
     def topk(self, queries, k: int = 1) -> list[list[Match]]:
         """queries: (B, M) array or sequence of 1-D arrays (any lengths).
         Returns, per query, the k best (reference, cost, end) matches
-        ordered by (cost, registration order)."""
-        cfg = self.config
+        ordered by (cost, registration order).
+
+        Accounting: the call's own numbers land in ``self.last`` and are
+        merged into the cumulative ``self.stats``; both are mirrored
+        into obs counters/gauges (``search.*``) plus a ``search.topk_ms``
+        latency histogram, and the whole call runs inside a
+        ``search.topk`` span with per-stage child spans."""
         refs = self.index.references()
         if not refs:
             raise ValueError("no references registered")
@@ -204,29 +263,46 @@ class SearchService:
             raise ValueError(f"k must be >= 1, got {k}")
         qlist = self._as_query_list(queries)
         B, R = len(qlist), len(refs)
-        self.stats = SearchStats(pairs=B * R)
+        st = self._cur = SearchStats(pairs=B * R, topk_calls=1)
+        t0 = time.perf_counter()
+        with self._tracer.span("search.topk", queries=B, refs=R, k=k,
+                               backend=self.backend.name):
+            out = self._topk_impl(qlist, refs, k)
+        self.last = st
+        self.stats.merge(st)
+        self._publish(st, time.perf_counter() - t0)
+        return out
+
+    def _topk_impl(self, qlist, refs, k: int) -> list[list[Match]]:
+        cfg = self.config
+        st = self._cur
+        B, R = len(qlist), len(refs)
 
         # --- stage 0: batched coarse bounds for every (query, ref) pair,
         # queries packed into the sweeps' fixed shapes and equal-length
         # reference envelopes stacked into one fan-out dispatch
         lb0 = np.zeros((B, R))
         if self.prune_active:
-            by_nc: dict[int, list[int]] = {}
-            envs = {}
-            for j, e in enumerate(refs):
-                envs[j] = self.index.envelopes(e.name, cfg.stages[0])
-                by_nc.setdefault(int(envs[j][0].shape[0]), []).append(j)
-            stacked = {nc: (jnp.stack([envs[j][0] for j in refidx]),
-                            jnp.stack([envs[j][1] for j in refidx]))
-                       for nc, refidx in by_nc.items()}
-            batcher = QueryBatcher(max_slots=cfg.max_slots)
-            for batch in batcher.pack(qlist):
-                for nc, refidx in by_nc.items():
-                    rlo, rhi = stacked[nc]
-                    vals = np.asarray(lb_keogh_sdtw_multi(
-                        batch.queries, rlo, rhi, spec=self.spec))
-                    lb0[np.ix_(list(batch.ids), refidx)] = \
-                        vals[:batch.n_real]
+            tb = time.perf_counter()
+            with self._tracer.span("search.bound0", pairs=B * R):
+                by_nc: dict[int, list[int]] = {}
+                envs = {}
+                for j, e in enumerate(refs):
+                    envs[j] = self.index.envelopes(e.name, cfg.stages[0])
+                    by_nc.setdefault(int(envs[j][0].shape[0]),
+                                     []).append(j)
+                stacked = {nc: (jnp.stack([envs[j][0] for j in refidx]),
+                                jnp.stack([envs[j][1] for j in refidx]))
+                           for nc, refidx in by_nc.items()}
+                batcher = QueryBatcher(max_slots=cfg.max_slots)
+                for batch in batcher.pack(qlist):
+                    for nc, refidx in by_nc.items():
+                        rlo, rhi = stacked[nc]
+                        vals = np.asarray(lb_keogh_sdtw_multi(
+                            batch.queries, rlo, rhi, spec=self.spec))
+                        lb0[np.ix_(list(batch.ids), refidx)] = \
+                            vals[:batch.n_real]
+            st.bound_s += time.perf_counter() - tb
 
         # --- per-query pending references, best-bound-first
         if self.prune_active:
@@ -260,7 +336,7 @@ class SearchService:
                     if self.prune_active and lb0[i, j] > threshold(i) + \
                             cfg.prune_margin:
                         # pending is sorted by lb0: everything left prunes
-                        self.stats.pruned_stage0 += len(pending[i])
+                        st.pruned_stage0 += len(pending[i])
                         pending[i] = []
                         break
                     pending[i].pop(0)
@@ -291,33 +367,63 @@ class SearchService:
                         for cost, _, end, name, start in found[i][:k]])
         return out
 
+    def _publish(self, st: SearchStats, seconds: float) -> None:
+        """Mirror one call's stats into the obs registry: counters
+        accumulate, gauges hold the latest ratios, and the latency
+        histogram feeds p50/p99 (``search.topk_ms``)."""
+        m = self._metrics
+        m.inc("search.topk_calls")
+        for name in ("pairs", "dp_pairs", "pruned_stage0", "pruned_later",
+                     "dp_calls", "kernel_blocks_run", "kernel_blocks_total",
+                     "sweep_rows", "sweep_rows_real"):
+            n = getattr(st, name)
+            if n:
+                m.inc(f"search.{name}", n)
+        m.set_gauge("search.skip_fraction", st.skip_fraction)
+        m.set_gauge("search.padding_waste", st.padding_waste)
+        m.set_gauge("search.bound_vs_sweep",
+                    st.bound_s / st.sweep_s if st.sweep_s else 0.0)
+        m.observe("search.topk_ms", seconds * 1e3)
+        m.observe("search.bound_ms", st.bound_s * 1e3)
+        m.observe("search.sweep_ms", st.sweep_s * 1e3)
+        log.debug("topk: %.1fms  pairs=%d swept=%d skipped=%d (%.0f%%)  "
+                  "bound/sweep=%.3fs/%.3fs  padding=%.0f%%",
+                  seconds * 1e3, st.pairs, st.dp_pairs, st.skipped,
+                  100 * st.skip_fraction, st.bound_s, st.sweep_s,
+                  100 * st.padding_waste)
+
     # ---------------------------------------------------------- cascade
     def _later_stages(self, nominations, refs, qlist, threshold):
         """Tighter (costlier) bound stages over one round's nominations,
         batched per reference through the same fixed-shape packer the
         sweeps use. A pruned query simply re-nominates next round."""
         cfg = self.config
-        for chunk in cfg.stages[1:]:
-            survivors: dict[int, list[int]] = {}
-            for j, qids in nominations.items():
-                qids = [i for i in qids if threshold(i) < np.inf]
-                cheap = [i for i in nominations[j] if i not in qids]
-                if cheap:   # nothing found yet: no threshold to beat
-                    survivors.setdefault(j, []).extend(cheap)
-                if not qids:
-                    continue
-                rlo, rhi = self.index.envelopes(refs[j].name, chunk)
-                batcher = QueryBatcher(max_slots=cfg.max_slots)
-                for batch in batcher.pack([qlist[i] for i in qids],
-                                          ids=qids):
-                    vals = np.asarray(lb_keogh_sdtw(
-                        batch.queries, rlo, rhi, spec=self.spec))
-                    for row, i in enumerate(batch.ids):
-                        if vals[row] > threshold(i) + cfg.prune_margin:
-                            self.stats.pruned_later += 1
-                        else:
-                            survivors.setdefault(j, []).append(i)
-            nominations = survivors
+        st = self._cur
+        tb = time.perf_counter()
+        with self._tracer.span("search.cascade",
+                               stages=list(cfg.stages[1:])):
+            for chunk in cfg.stages[1:]:
+                survivors: dict[int, list[int]] = {}
+                for j, qids in nominations.items():
+                    qids = [i for i in qids if threshold(i) < np.inf]
+                    cheap = [i for i in nominations[j] if i not in qids]
+                    if cheap:   # nothing found yet: no threshold to beat
+                        survivors.setdefault(j, []).extend(cheap)
+                    if not qids:
+                        continue
+                    rlo, rhi = self.index.envelopes(refs[j].name, chunk)
+                    batcher = QueryBatcher(max_slots=cfg.max_slots)
+                    for batch in batcher.pack([qlist[i] for i in qids],
+                                              ids=qids):
+                        vals = np.asarray(lb_keogh_sdtw(
+                            batch.queries, rlo, rhi, spec=self.spec))
+                        for row, i in enumerate(batch.ids):
+                            if vals[row] > threshold(i) + cfg.prune_margin:
+                                st.pruned_later += 1
+                            else:
+                                survivors.setdefault(j, []).append(i)
+                nominations = survivors
+        st.bound_s += time.perf_counter() - tb
         return nominations
 
     # ----------------------------------------------------------- sweeps
@@ -351,28 +457,37 @@ class SearchService:
         blocks are dropped from the pallas grid itself
         (``stats.kernel_blocks_run`` vs ``kernel_blocks_total``)."""
         cfg = self.config
+        st = self._cur
         aligner = self._aligner(entry)
-        batcher = QueryBatcher(max_slots=cfg.max_slots)
-        for batch in batcher.pack([qlist[i] for i in qids], ids=qids):
-            res = aligner.align(batch.queries, outputs=self._outputs)
-            if self.backend.name == "kernel":
-                blocked = self.spec.band is not None and \
-                    batch.length - 1 - self.spec.band > entry.length - 1
-                if not blocked:   # blocked bands short-circuit in ops:
-                    #             no pallas grid ran, no steps to count
-                    plan = _ops.kernel_plan(self.spec, m=batch.length,
-                                            n=entry.length,
-                                            segment_width=cfg.segment_width,
-                                            with_window=cfg.windows)
-                    grid_groups = ceil_to(batch.queries.shape[0],
-                                          SUBLANES) // SUBLANES
-                    self.stats.kernel_blocks_run += \
-                        grid_groups * plan.grid_blocks
-                    self.stats.kernel_blocks_total += \
-                        grid_groups * plan.num_ref_blocks
-            self._record(res, batch.ids, order, entry.name, found)
-            self.stats.dp_pairs += batch.n_real
-            self.stats.dp_calls += 1
+        batcher = QueryBatcher(max_slots=cfg.max_slots,
+                               metrics=self._metrics)
+        ts = time.perf_counter()
+        with self._tracer.span("search.sweep", ref=entry.name,
+                               queries=len(qids)) as sp:
+            for batch in batcher.pack([qlist[i] for i in qids], ids=qids):
+                res = aligner.align(batch.queries, outputs=self._outputs)
+                sp.sync(res)
+                if self.backend.name == "kernel":
+                    blocked = self.spec.band is not None and \
+                        batch.length - 1 - self.spec.band > entry.length - 1
+                    if not blocked:   # blocked bands short-circuit in ops:
+                        #             no pallas grid ran, no steps to count
+                        plan = _ops.kernel_plan(
+                            self.spec, m=batch.length, n=entry.length,
+                            segment_width=cfg.segment_width,
+                            with_window=cfg.windows)
+                        grid_groups = ceil_to(batch.queries.shape[0],
+                                              SUBLANES) // SUBLANES
+                        st.kernel_blocks_run += \
+                            grid_groups * plan.grid_blocks
+                        st.kernel_blocks_total += \
+                            grid_groups * plan.num_ref_blocks
+                self._record(res, batch.ids, order, entry.name, found)
+                st.dp_pairs += batch.n_real
+                st.dp_calls += 1
+                st.sweep_rows += int(batch.queries.shape[0])
+                st.sweep_rows_real += batch.n_real
+        st.sweep_s += time.perf_counter() - ts
 
     def _sweep_pairs(self, nominations: dict, refs, qlist, found):
         """Full DP of one round's (query, reference) pairs for backends
@@ -380,30 +495,40 @@ class SearchService:
         length, reference length) go in ONE stacked call, so a round
         costs O(distinct shapes) dispatches, not O(refs)."""
         cfg = self.config
+        st = self._cur
         shapes: dict[tuple, list[tuple]] = {}    # (M, N) -> [(i, j)]
         for j, qids in sorted(nominations.items()):
             for i in qids:
                 key = (int(qlist[i].shape[0]), refs[j].length)
                 shapes.setdefault(key, []).append((i, j))
-        for (m, n), pairs in shapes.items():
-            qg = jnp.stack([qlist[i] for i, _ in pairs])
-            rg = jnp.stack([refs[j].series for _, j in pairs])
-            p = len(pairs)
-            g = (grid_size(p, cfg.max_slots) if p <= cfg.max_slots
-                 else ceil_to(p, SUBLANES))
-            qg = jnp.pad(qg, ((0, g - p), (0, 0)))
-            rg = jnp.concatenate(
-                [rg, jnp.broadcast_to(rg[:1], (g - p, n))]) if g > p else rg
-            plan = registry.ExecutionPlan(
-                queries=qg, reference=rg,
-                segment_width=cfg.segment_width, interpret=cfg.interpret,
-                outputs=self._outputs, options=cfg.options)
-            res = self.backend.execute(self.spec, plan)
-            self._record(res, [i for i, _ in pairs],
-                         [j for _, j in pairs],
-                         [refs[j].name for _, j in pairs], found)
-            self.stats.dp_pairs += p
-            self.stats.dp_calls += 1
+        ts = time.perf_counter()
+        with self._tracer.span("search.sweep",
+                               shapes=len(shapes)) as sp:
+            for (m, n), pairs in shapes.items():
+                qg = jnp.stack([qlist[i] for i, _ in pairs])
+                rg = jnp.stack([refs[j].series for _, j in pairs])
+                p = len(pairs)
+                g = (grid_size(p, cfg.max_slots) if p <= cfg.max_slots
+                     else ceil_to(p, SUBLANES))
+                qg = jnp.pad(qg, ((0, g - p), (0, 0)))
+                rg = jnp.concatenate(
+                    [rg, jnp.broadcast_to(rg[:1], (g - p, n))]) \
+                    if g > p else rg
+                plan = registry.ExecutionPlan(
+                    queries=qg, reference=rg,
+                    segment_width=cfg.segment_width,
+                    interpret=cfg.interpret,
+                    outputs=self._outputs, options=cfg.options)
+                res = self.backend.execute(self.spec, plan)
+                sp.sync(res)
+                self._record(res, [i for i, _ in pairs],
+                             [j for _, j in pairs],
+                             [refs[j].name for _, j in pairs], found)
+                st.dp_pairs += p
+                st.dp_calls += 1
+                st.sweep_rows += g
+                st.sweep_rows_real += p
+        st.sweep_s += time.perf_counter() - ts
 
     def _record(self, res: SDTWResult, qids, order, name, found):
         """Fold one dispatch's :class:`SDTWResult` into the per-query
