@@ -18,7 +18,7 @@ until an entry point is actually touched.
 __version__ = "1.1.0"
 
 __all__ = ["sdtw", "sdtw_batch", "sdtw_search", "Aligner", "SDTWResult",
-           "DPSpec", "ALL_OUTPUTS"]
+           "DPSpec", "ALL_OUTPUTS", "tune"]
 
 _LAZY = {
     "sdtw": ("repro.core.api", "sdtw"),
@@ -28,6 +28,7 @@ _LAZY = {
     "SDTWResult": ("repro.core.result", "SDTWResult"),
     "ALL_OUTPUTS": ("repro.core.result", "ALL_OUTPUTS"),
     "DPSpec": ("repro.core.spec", "DPSpec"),
+    "tune": ("repro.tune", None),    # the autotuner subpackage itself
 }
 
 
@@ -38,7 +39,8 @@ def __getattr__(name):
         raise AttributeError(
             f"module {__name__!r} has no attribute {name!r}") from None
     import importlib
-    value = getattr(importlib.import_module(module), attr)
+    mod = importlib.import_module(module)
+    value = mod if attr is None else getattr(mod, attr)
     globals()[name] = value          # cache: resolve each name once
     return value
 

@@ -79,10 +79,21 @@ register_alias("soft", "engine", reduction="softmin")
 # --------------------------------------------------------------- kernel
 def _exec_kernel(spec, plan):
     from repro.kernels import ops
+    width = plan.segment_width
+    if isinstance(width, str):
+        # a plan built with segment_width="auto" that reached dispatch
+        # unresolved (core.api resolves it earlier on the normal path):
+        # ask the tuner, which answers from its cache when warm
+        from repro import tune
+        width = tune.autotune(
+            plan.reference, m=int(plan.queries.shape[1]),
+            batch=int(plan.queries.shape[0]), spec=spec,
+            outputs=plan.outputs, backends=("kernel",),
+            interpret=plan.interpret).segment_width
     return from_sweep(
         ops.sdtw_wavefront(
             plan.queries, plan.reference,
-            segment_width=plan.segment_width, interpret=plan.interpret,
+            segment_width=width, interpret=plan.interpret,
             spec=spec, return_window="start" in plan.outputs),
         plan.outputs)
 

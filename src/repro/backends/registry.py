@@ -102,7 +102,7 @@ class ExecutionPlan:
 
     queries: Any
     reference: Any
-    segment_width: int = 8
+    segment_width: int | str = 8   # "auto" = tuner-resolved at execute
     interpret: bool | None = None      # None = auto (kernels.ops)
     outputs: frozenset = _BASE_OUTPUTS
     #   sweep-level outputs the execute() must materialize — a subset of
@@ -266,7 +266,8 @@ def resolve(name: str, spec: DPSpec, *,
 
 def select(spec: DPSpec, *, preferred: str | None = None,
            outputs=None,
-           differentiable: bool = False) -> tuple[Backend, DPSpec]:
+           differentiable: bool = False,
+           workload: tuple | None = None) -> tuple[Backend, DPSpec]:
     """Pick a backend for the spec: the preferred one when capable,
     else the first capable backend in preference order (the auto-
     fallback path: ``preferred=None, outputs={"start", ...}`` lands on
@@ -274,6 +275,12 @@ def select(spec: DPSpec, *, preferred: str | None = None,
     restricts auto-selection to gradient-safe backends (see
     :func:`capable`) — a named ``preferred`` backend is taken at the
     caller's word.
+
+    ``workload=(m, n, batch)`` lets auto-selection consult the
+    ``repro.tune`` cache: when this exact workload has a measured
+    verdict on this machine, the measured winner beats the static
+    device-priority guess (still restricted to capable backends — a
+    verdict can re-rank choices, never bypass capability checks).
 
     Returns ``(backend, spec)`` with alias overrides applied — execute
     with the RETURNED spec, never the one you passed in.
@@ -284,6 +291,11 @@ def select(spec: DPSpec, *, preferred: str | None = None,
         return backend, spec
     choices = capable(spec, outputs=outputs,
                       differentiable=differentiable)
+    if workload is not None and choices:
+        tuned = _tuned_choice(spec, workload, outputs, choices)
+        if tuned is not None:
+            _record_selection(tuned, spec, "tuned verdict")
+            return _REGISTRY[tuned], spec
     if not choices:
         what = f"spec {spec.describe()}"
         if outputs is not None:
@@ -302,6 +314,24 @@ def select(spec: DPSpec, *, preferred: str | None = None,
         why += ", differentiable"
     _record_selection(choices[0], spec, why)
     return _REGISTRY[choices[0]], spec
+
+
+def _tuned_choice(spec: DPSpec, workload: tuple, outputs,
+                  choices: list[str]) -> str | None:
+    """The tuning cache's pick for (m, n, batch), when it has one and
+    the pick is among the capable choices.  Best-effort by design —
+    any tuning-layer problem silently falls back to static priority,
+    because selection must keep working on machines that never tuned."""
+    try:
+        from repro.tune import cached_verdict
+        m, n, batch = workload
+        verdict = cached_verdict(spec, m=m, n=n, batch=batch,
+                                 outputs=outputs)
+        if verdict is not None and verdict.get("backend") in choices:
+            return verdict["backend"]
+    except Exception:
+        pass
+    return None
 
 
 def _record_selection(name: str, spec: DPSpec, why: str) -> None:

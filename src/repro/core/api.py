@@ -95,6 +95,39 @@ def _derive_outputs(res: SDTWResult, req: frozenset, queries, reference,
     return res
 
 
+def _auto_width(backend_impl, spec: DPSpec, req: frozenset, reference,
+                workload: tuple, *, pinned: bool,
+                interpret: bool | None):
+    """Resolve ``segment_width="auto"`` through ``repro.tune``.
+
+    Returns ``(width, backend)``: the tuned width, plus (when the
+    caller did NOT pin a backend) the measured winner between kernel
+    and engine — a cold call pays the one-time tuning trials, a warm
+    cache answers with zero measurements.  A pinned non-kernel backend
+    ignores width anyway, so "auto" resolves to the default with zero
+    trials; a verdict never overrides capability checks (the swap only
+    happens when the winner supports the request).
+    """
+    from repro.kernels.ops import DEFAULT_SEGMENT_WIDTH
+    if not (req - {"soft_alignment"}):      # no backend sweep at all
+        return DEFAULT_SEGMENT_WIDTH, backend_impl
+    if pinned and backend_impl.name != "kernel":
+        return DEFAULT_SEGMENT_WIDTH, backend_impl
+    if not pinned and backend_impl.name not in ("kernel", "engine"):
+        return DEFAULT_SEGMENT_WIDTH, backend_impl
+    from repro import tune
+    m, n, batch = workload
+    res = tune.autotune(np.asarray(reference), m=m, batch=batch,
+                        spec=spec, outputs=sweep_outputs(req),
+                        backends=("kernel",) if pinned else None,
+                        interpret=interpret)
+    if (not pinned and res.backend != backend_impl.name
+            and (res.from_cache or res.trials > 0)
+            and registry.supports(res.backend, spec, outputs=req)):
+        backend_impl = registry.get(res.backend)
+    return res.segment_width, backend_impl
+
+
 def sdtw(queries, reference, *,
          outputs=DEFAULT_OUTPUTS,
          normalize: bool = True,
@@ -104,7 +137,7 @@ def sdtw(queries, reference, *,
          reduction: str | None = None,
          gamma: float | None = None,
          band: int | None = None,
-         segment_width: int = 8,
+         segment_width: int | str = 8,
          interpret: bool | None = None,
          options: dict | None = None) -> SDTWResult:
     """Align a batch of queries against one reference.
@@ -132,20 +165,37 @@ def sdtw(queries, reference, *,
     requested outputs; naming an incapable backend raises the
     registry's loud who-can-instead error.  ``interpret=None``
     auto-selects the Pallas mode from ``jax.default_backend()``.
-    ``options`` passes backend extras (e.g. ``{"mesh": ...}`` for
-    ``backend="distributed"``).
+    ``segment_width="auto"`` asks ``repro.tune`` for the measured
+    fastest plan for this (machine, spec, shapes, outputs) workload —
+    tuned once, then answered from the persistent cache (see the
+    README "Autotuning" section); results are bit-identical to any
+    pinned width.  ``options`` passes backend extras (e.g.
+    ``{"mesh": ...}`` for ``backend="distributed"``).
     """
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
-    validate_batch_inputs(queries, reference, segment_width=segment_width)
+    auto_width = isinstance(segment_width, str)
+    if auto_width and segment_width != "auto":
+        raise ValueError(f"segment_width must be an int >= 1 or 'auto', "
+                         f"got {segment_width!r}")
+    validate_batch_inputs(queries, reference,
+                          segment_width=None if auto_width
+                          else segment_width)
     resolved = resolve_spec(spec, distance=distance, reduction=reduction,
                             gamma=gamma, band=band)
     req = normalize_outputs(outputs)
+    workload = (int(queries.shape[1]), int(reference.shape[0]),
+                int(queries.shape[0]))
     if backend is None:
-        backend_impl, resolved = registry.select(resolved, outputs=req)
+        backend_impl, resolved = registry.select(resolved, outputs=req,
+                                                 workload=workload)
     else:
         backend_impl, resolved = registry.resolve(backend, resolved,
                                                   outputs=req)
+    if auto_width:
+        segment_width, backend_impl = _auto_width(
+            backend_impl, resolved, req, reference, workload,
+            pinned=backend is not None, interpret=interpret)
     if normalize:
         queries = normalize_batch(queries)
         reference = normalize_batch(reference)
@@ -176,7 +226,7 @@ def sdtw_batch(queries, reference, *, normalize: bool = True,
                reduction: str | None = None,
                gamma: float | None = None,
                band: int | None = None,
-               segment_width: int = 8,
+               segment_width: int | str = 8,
                interpret: bool | None = None,
                return_window: bool = False,
                options: dict | None = None):

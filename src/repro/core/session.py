@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +68,8 @@ class AlignerStats:
     counter ticks AFTER the call returns, never at build time: a build
     whose first dispatch raises leaves ``compiles`` (and the executable
     cache) untouched, and eager strategies (distributed) never tick it.
-    ``calls``/``cache_hits`` count dispatches.
+    ``calls``/``cache_hits`` count dispatches; ``evictions`` counts
+    executables dropped by the ``max_executables`` LRU bound.
 
     Every field is mirrored into the session's
     :class:`~repro.obs.MetricsRegistry` under ``aligner.*`` (plus an
@@ -78,6 +80,7 @@ class AlignerStats:
     cache_hits: int = 0
     compiles: int = 0
     traces: int = 0
+    evictions: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -97,6 +100,20 @@ class Aligner:
     ``interpret`` (kernel backend), ``options`` (backend extras, e.g.
     ``{"mesh": ...}``).
 
+    ``segment_width="auto"`` defers the width to ``repro.tune``: the
+    first executable build for each (query length, batch bucket,
+    outputs) key tunes (or answers from the persistent tuning cache —
+    a warm machine measures nothing) and every executable dispatches
+    the tuned width; results are bit-identical to any pinned width.
+    ``tune_options`` forwards extras to :func:`repro.tune.autotune`
+    (``budget=``, ``cache=``, ``candidates=``, ``timer=``).
+
+    ``max_executables`` bounds the per-(batch shape, dtype, outputs)
+    executable cache with an LRU: a long-lived session fed many
+    distinct shapes stops growing without bound, evictions tick
+    ``stats.evictions`` / the ``aligner.evictions`` counter, and an
+    evicted key simply recompiles on next use.
+
     ``layout_cache`` shares a pre-existing swizzled-layout dict (keyed
     ``(segment_width, dtype_name)`` like ``ReferenceIndex`` entries),
     so index-backed sessions reuse the index's offline prep instead of
@@ -111,10 +128,12 @@ class Aligner:
                  gamma: float | None = None,
                  band: int | None = None,
                  outputs=None,
-                 segment_width: int = 8,
+                 segment_width: int | str = 8,
                  interpret: bool | None = None,
                  options: dict | None = None,
                  layout_cache: dict | None = None,
+                 max_executables: int = 64,
+                 tune_options: dict | None = None,
                  metrics: obs.MetricsRegistry | None = None,
                  tracer: obs.Tracer | None = None):
         reference = jnp.asarray(reference)
@@ -143,12 +162,22 @@ class Aligner:
         self.reference = (normalize_batch(reference) if normalize
                           else reference)
         self.length = int(reference.shape[0])
+        self._auto_width = isinstance(segment_width, str)
+        if self._auto_width and segment_width != "auto":
+            raise ValueError(f"segment_width must be an int >= 1 or "
+                             f"'auto', got {segment_width!r}")
         self.segment_width = segment_width
         self.interpret = interpret
         self.options = options
+        self.tune_options = dict(tune_options) if tune_options else {}
+        self._tuned_widths: dict = {}   # (m, bucket, sweep-req) -> width
+        if max_executables < 1:
+            raise ValueError(f"max_executables must be >= 1, got "
+                             f"{max_executables}")
+        self.max_executables = max_executables
         self._layouts: dict = {} if layout_cache is None else layout_cache
         self._layouts_verified: set = set()
-        self._fns: dict = {}
+        self._fns: OrderedDict = OrderedDict()
         self.stats = AlignerStats()
         self._metrics = obs.default_registry() if metrics is None else \
             metrics
@@ -157,7 +186,38 @@ class Aligner:
                   self.backend.name, self.spec.describe())
 
     # ----------------------------------------------------------- prep
-    def layout(self, compute_dtype=jnp.float32):
+    def resolved_width(self, batch_shape, outputs=DEFAULT_OUTPUTS) -> int:
+        """The segment width this session dispatches for a (B, M)
+        batch shape and output request.
+
+        A pinned-width session returns it verbatim.  An
+        ``segment_width="auto"`` session on the kernel backend asks
+        ``repro.tune`` — memoized per (query length, batch bucket,
+        sweep outputs) key, so the tuner (or its persistent cache) is
+        consulted once per workload; non-kernel backends ignore width
+        and get the default.
+        """
+        from repro.kernels import ops as _ops
+        if not self._auto_width:
+            return self.segment_width
+        if self.backend.name != "kernel":
+            return _ops.DEFAULT_SEGMENT_WIDTH
+        from repro import tune
+        B, m = batch_shape
+        req = sweep_outputs(normalize_outputs(outputs))
+        key = (int(m), tune.batch_bucket(int(B)), req)
+        w = self._tuned_widths.get(key)
+        if w is None:
+            res = tune.autotune(
+                np.asarray(self.reference), m=int(m), batch=int(B),
+                spec=self.spec, outputs=req, backends=("kernel",),
+                interpret=self.interpret, metrics=self._metrics,
+                tracer=self._tracer, **self.tune_options)
+            w = self._tuned_widths[key] = res.segment_width
+        return w
+
+    def layout(self, compute_dtype=jnp.float32,
+               segment_width: int | None = None):
         """The cached swizzled kernel layout of this session's
         (already normalized) reference — computed at most once per
         (segment_width, dtype).
@@ -169,11 +229,18 @@ class Aligner:
         instead of sweeping against the wrong series.
         """
         from repro.kernels import ops as _ops
-        key = (self.segment_width, jnp.dtype(compute_dtype).name)
+        if segment_width is None:
+            if self._auto_width:
+                raise ValueError(
+                    "segment_width='auto' sessions have no single "
+                    "layout; pass layout(dtype, segment_width=...) "
+                    "with a width from resolved_width()")
+            segment_width = self.segment_width
+        key = (segment_width, jnp.dtype(compute_dtype).name)
         cached = self._layouts.get(key)
         if cached is None:
             self._layouts[key] = _ops.swizzle_reference(
-                self.reference.astype(compute_dtype), self.segment_width)
+                self.reference.astype(compute_dtype), segment_width)
             self._layouts_verified.add(key)
         elif key not in self._layouts_verified:
             want = np.asarray(self.reference.astype(compute_dtype))
@@ -220,8 +287,9 @@ class Aligner:
             from repro.kernels import ops as _ops
             from repro.core.result import from_sweep
             B, m = batch_shape
-            r_layout = self.layout(jnp.float32)
-            n, w = self.length, self.segment_width
+            w = self.resolved_width(batch_shape, req)
+            r_layout = self.layout(jnp.float32, segment_width=w)
+            n = self.length
             interp, spec = self.interpret, self.spec
             norm = self.normalize and not pre_normalized
 
@@ -242,7 +310,8 @@ class Aligner:
         backend, spec = self.backend, self.spec
         norm = self.normalize and not pre_normalized
         reference, opts = self.reference, self.options
-        seg, interp = self.segment_width, self.interpret
+        seg = self.resolved_width(batch_shape, req)
+        interp = self.interpret
 
         if backend.name == "distributed":
             # shard_map pipelines carry their own jit + per-mesh cache
@@ -280,7 +349,8 @@ class Aligner:
         """
         queries = jnp.asarray(queries)
         validate_batch_inputs(queries, self.reference,
-                              segment_width=self.segment_width)
+                              segment_width=None if self._auto_width
+                              else self.segment_width)
         req = normalize_outputs(outputs)
         self.stats.calls += 1
         m = self._metrics
@@ -306,6 +376,7 @@ class Aligner:
             else:
                 self.stats.cache_hits += 1
                 m.inc("aligner.cache_hits")
+                self._fns.move_to_end(key)      # LRU touch
             with self._tracer.span("aligner.dispatch",
                                    backend=self.backend.name,
                                    batch=list(queries.shape),
@@ -322,6 +393,13 @@ class Aligner:
                 if entry[1]:
                     self.stats.compiles += 1
                     m.inc("aligner.compiles")
+                while len(self._fns) > self.max_executables:
+                    old_key, _ = self._fns.popitem(last=False)
+                    self.stats.evictions += 1
+                    m.inc("aligner.evictions")
+                    log.debug("evicted executable key=%s (LRU, "
+                              "max_executables=%d)", old_key,
+                              self.max_executables)
         else:
             # soft_alignment-only: no sweep to run — validate the
             # request against the backend, then derive directly

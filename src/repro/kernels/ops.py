@@ -35,6 +35,51 @@ from repro.kernels.wavefront import KernelPlan, build_plan
 from repro.kernels.normalizer import normalizer_pallas
 
 
+DEFAULT_SEGMENT_WIDTH = 8
+#   The untuned per-lane reference segment width (the paper's thread-
+#   coarsening knob w, Fig. 3).  ``repro.tune`` searches
+#   DEFAULT_WIDTH_CANDIDATES around it per workload; the default always
+#   sits in the candidate set so a tuned width can never lose to it on
+#   the same measurements.
+
+DEFAULT_WIDTH_CANDIDATES = (2, 4, 8, 14, 16, 32)
+#   The paper's Fig. 3 sweep points (AMD optimum: 14) plus the TPU
+#   sublane-aligned powers of two.
+
+
+def validate_segment_width(w) -> int:
+    """The candidate-width contract: a positive int (bools rejected —
+    ``True`` silently meaning width 1 is a bug, not a knob)."""
+    if isinstance(w, bool) or not isinstance(w, int):
+        raise ValueError(
+            f"segment_width must be an int >= 1 (or the string 'auto' "
+            f"where autotuning is supported), got {w!r}")
+    if w < 1:
+        raise ValueError(f"segment_width must be >= 1, got {w}")
+    return w
+
+
+def width_candidates(n: int, candidates=None) -> tuple:
+    """Validated, sorted, deduplicated candidate widths for a reference
+    of length ``n``.
+
+    Widths whose padded layout (``ceil_to(n, LANES * w)``) is more than
+    4x the real reference are dropped — a sweep that is mostly
+    PAD_VALUE columns can never win a tuning trial, so measuring it is
+    pure budget waste on short references.  The smallest candidate
+    always survives, so the set is never empty.
+    """
+    if n < 1:
+        raise ValueError(f"reference length must be >= 1, got {n}")
+    cands = sorted({validate_segment_width(w) for w in
+                    (DEFAULT_WIDTH_CANDIDATES if candidates is None
+                     else candidates)})
+    if not cands:
+        raise ValueError("empty segment-width candidate set")
+    kept = [w for w in cands if ceil_to(n, LANES * w) <= 4 * n]
+    return tuple(kept) if kept else (cands[0],)
+
+
 def default_interpret() -> bool:
     """Pallas ``interpret`` default: compiled on TPU, interpreted
     everywhere else — so the same call site runs the real kernel on TPU

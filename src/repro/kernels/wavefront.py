@@ -375,6 +375,23 @@ class KernelPlan:
     def skipped_blocks(self) -> int:
         return self.num_ref_blocks - self.grid_blocks
 
+    def geometry(self) -> dict:
+        """The plan's work shape as plain numbers — what a tuning trial
+        or a bench row records next to its wall-clock: how many grid
+        steps run, how wide each block is, and how much of the padded
+        reference is PAD_VALUE overhead (padding rises with
+        ``segment_width``, which is exactly the trade the paper's
+        Fig. 3 sweep measures)."""
+        block_cols = LANES * self.segment_width
+        return {
+            "segment_width": self.segment_width,
+            "block_cols": block_cols,
+            "num_ref_blocks": self.num_ref_blocks,
+            "grid_blocks": self.grid_blocks,
+            "skipped_blocks": self.skipped_blocks,
+            "padded_cols": self.num_ref_blocks * block_cols,
+        }
+
     # ------------------------------------------------------------ cell
     def cell(self, qv, rv, *, is_row0, i_l, j_col, vals3):
         """One DP cell across every channel.

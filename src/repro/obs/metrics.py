@@ -180,11 +180,32 @@ class MetricsRegistry:
     A process-wide default registry lives at
     :func:`repro.obs.default_registry`; instrumented classes accept a
     ``metrics=`` override so tests assert on their own registries.
+
+    **Cardinality guard.** Metric names are meant to be a small, static
+    vocabulary — a caller interpolating per-query or per-key data into
+    names (``tune.<workload-key>.ms``) would grow the registry without
+    bound and poison every export.  ``max_names`` caps the number of
+    distinct names (default 4096, far above legitimate use);
+    ``overflow`` picks what happens at the cap: ``"error"`` (default)
+    raises loudly naming the offender, ``"drop"`` returns a detached
+    metric that records into the void while the registry's own
+    ``metrics.dropped_names`` counter ticks — exports stay bounded,
+    hot paths stay alive.
     """
 
-    def __init__(self):
+    def __init__(self, *, max_names: int = 4096,
+                 overflow: str = "error"):
+        if max_names < 1:
+            raise ValueError(f"max_names must be >= 1, got {max_names}")
+        if overflow not in ("error", "drop"):
+            raise ValueError(f"overflow must be 'error' or 'drop', "
+                             f"got {overflow!r}")
+        self.max_names = max_names
+        self.overflow = overflow
         self._lock = threading.RLock()
         self._metrics: dict[str, object] = {}
+
+    _DROPPED = "metrics.dropped_names"
 
     def _get(self, name: str, cls, **kw):
         if not name or not isinstance(name, str):
@@ -193,6 +214,29 @@ class MetricsRegistry:
         with self._lock:
             m = self._metrics.get(name)
             if m is None:
+                # drop mode reserves one slot for the guard's own
+                # counter so the drop path can always account for itself
+                cap = self.max_names
+                if self.overflow == "drop" and \
+                        self._DROPPED not in self._metrics and \
+                        name != self._DROPPED:
+                    cap -= 1
+                if len(self._metrics) >= cap:
+                    if self.overflow == "error":
+                        raise ValueError(
+                            f"metric registry at max_names="
+                            f"{self.max_names}: refusing new name "
+                            f"{name!r} — metric names must be a small "
+                            f"static vocabulary, never interpolated "
+                            f"per-key/per-query data (use "
+                            f"MetricsRegistry(overflow='drop') to clamp "
+                            f"instead)")
+                    dropped = self._metrics.get(self._DROPPED)
+                    if dropped is None:
+                        dropped = self._metrics[self._DROPPED] = \
+                            Counter(self._DROPPED)
+                    dropped.inc()
+                    return cls(name, **kw)      # detached, unregistered
                 m = self._metrics[name] = cls(name, **kw)
             elif not isinstance(m, cls):
                 raise TypeError(

@@ -11,7 +11,8 @@ from repro.search.index import RefEntry, ReferenceIndex
 from repro.search.prune import (envelope_cost_cosine, envelope_gap2,
                                 envelope_gap_cost, lb_keogh_sdtw,
                                 lb_keogh_sdtw_multi, lb_paa_sdtw,
-                                paa_envelopes, prune_admissible)
+                                paa_envelopes, prune_admissible,
+                                streaming_envelopes)
 from repro.search.service import (Match, SearchConfig, SearchService,
                                   SearchStats, brute_force_topk)
 
@@ -22,7 +23,7 @@ __all__ = [
     "envelope_cost_cosine", "envelope_gap2", "envelope_gap_cost",
     "lb_keogh_sdtw",
     "lb_keogh_sdtw_multi", "lb_paa_sdtw", "paa_envelopes",
-    "prune_admissible",
+    "prune_admissible", "streaming_envelopes",
     "Match", "SearchConfig", "SearchService", "SearchStats",
     "brute_force_topk",
 ]

@@ -117,9 +117,19 @@ class ReferenceIndex:
         return entry.layouts[key]
 
     def envelopes(self, name: str, chunk: int):
-        """Cached PAA (lo, hi) envelopes at the given chunk size."""
-        from repro.search.prune import paa_envelopes
+        """Cached (lo, hi) block envelopes at the given chunk size.
+
+        Built by the O(L) streaming monotonic-deque pass
+        (:func:`repro.search.prune.streaming_envelopes`) — bit-identical
+        to the reshape-based ``paa_envelopes`` but with no padded copy,
+        which matters for one-time builds over long references.  The
+        in-jit query-side envelopes in the cascade still use
+        ``paa_envelopes``; this host-side build is cached, so it runs
+        once per (reference, chunk).
+        """
+        from repro.search.prune import streaming_envelopes
         entry = self.get(name)
         if chunk not in entry.envelopes:
-            entry.envelopes[chunk] = paa_envelopes(entry.series, chunk)
+            entry.envelopes[chunk] = streaming_envelopes(entry.series,
+                                                         chunk)
         return entry.envelopes[chunk]

@@ -31,9 +31,11 @@ reaches the full kernel sweep.
 from __future__ import annotations
 
 import functools
+from collections import deque
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.spec import DEFAULT_SPEC, INF, DPSpec  # noqa: F401
@@ -107,6 +109,59 @@ def paa_envelopes(x: jnp.ndarray, chunk: int):
         x = jnp.concatenate([x, edge], axis=-1)
     xb = x.reshape(x.shape[:-1] + (-1, chunk))
     return xb.min(axis=-1), xb.max(axis=-1)
+
+
+def streaming_envelopes(x, chunk: int):
+    """O(L) monotonic-deque block envelopes — numerically identical to
+    :func:`paa_envelopes`, built the wildboar ``find_min_max`` way.
+
+    Two monotone index deques (one non-decreasing for the min, one
+    non-increasing for the max) stream over the series; at each block
+    boundary the fronts are evicted past the block start and sampled.
+    Every element is pushed once and popped at most once, so the build
+    is O(L) regardless of chunk size — where the reshape-based
+    :func:`paa_envelopes` materializes a padded (L/chunk, chunk) copy,
+    this streams host-side with no padding at all, which is what
+    ``ReferenceIndex`` wants for its one-time cached envelope builds
+    over long references.  A ragged tail block's envelope is the
+    min/max of its real samples, exactly like the edge-padded reshape.
+
+    x: (..., L) array-like -> two jnp (..., ceil(L/chunk)) arrays.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    x = np.asarray(x)
+    if x.shape[-1] == 0:
+        raise ValueError("cannot build envelopes of an empty series")
+    lead, L = x.shape[:-1], x.shape[-1]
+    nb = -(-L // chunk)
+    flat = x.reshape(-1, L)
+    lo = np.empty((flat.shape[0], nb), x.dtype)
+    hi = np.empty((flat.shape[0], nb), x.dtype)
+    for r in range(flat.shape[0]):
+        row = flat[r]
+        min_dq: deque = deque()     # indices, values non-decreasing
+        max_dq: deque = deque()     # indices, values non-increasing
+        b = 0
+        for i in range(L):
+            v = row[i]
+            while min_dq and row[min_dq[-1]] >= v:
+                min_dq.pop()
+            min_dq.append(i)
+            while max_dq and row[max_dq[-1]] <= v:
+                max_dq.pop()
+            max_dq.append(i)
+            if i + 1 == L or (i + 1) % chunk == 0:
+                start = b * chunk
+                while min_dq[0] < start:
+                    min_dq.popleft()
+                while max_dq[0] < start:
+                    max_dq.popleft()
+                lo[r, b] = row[min_dq[0]]
+                hi[r, b] = row[max_dq[0]]
+                b += 1
+    return (jnp.asarray(lo.reshape(lead + (nb,))),
+            jnp.asarray(hi.reshape(lead + (nb,))))
 
 
 def envelope_gap_cost(qlo, qhi, rlo, rhi, spec: DPSpec = DEFAULT_SPEC):

@@ -82,7 +82,12 @@ log = logging.getLogger(__name__)
 class SearchConfig:
     backend: str = "engine"          # any registry backend or alias
     spec: DPSpec | None = None       # recurrence; None = the index's spec
-    segment_width: int = 8           # kernel backend only
+    segment_width: int | str = 8     # kernel backend only; "auto" defers
+    #                                  to repro.tune per reference — the
+    #                                  per-reference Aligner sessions tune
+    #                                  (or hit the persistent cache) on
+    #                                  first sweep and every session
+    #                                  shares the index's layout dicts
     interpret: bool | None = None    # kernel backend only (None = auto)
     normalize: bool = True           # must match the index's setting
     windows: bool = False            # return matched (start, end) windows
@@ -474,7 +479,8 @@ class SearchService:
                         #             no pallas grid ran, no steps to count
                         plan = _ops.kernel_plan(
                             self.spec, m=batch.length, n=entry.length,
-                            segment_width=cfg.segment_width,
+                            segment_width=aligner.resolved_width(
+                                batch.queries.shape, self._outputs),
                             with_window=cfg.windows)
                         grid_groups = ceil_to(batch.queries.shape[0],
                                               SUBLANES) // SUBLANES
@@ -566,7 +572,7 @@ class SearchService:
 
 def brute_force_topk(index: ReferenceIndex, queries, k: int = 1, *,
                      backend: str = "engine", spec: DPSpec | None = None,
-                     segment_width: int = 8,
+                     segment_width: int | str = 8,
                      interpret: bool | None = None,
                      windows: bool = False,
                      options: dict | None = None) -> list[list[Match]]:

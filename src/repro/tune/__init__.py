@@ -1,0 +1,32 @@
+"""``repro.tune`` — measured plan autotuning with a persistent cache.
+
+``segment_width="auto"`` on :class:`repro.Aligner` / :func:`repro.sdtw`
+routes here: :func:`autotune` measures the engine baseline plus a
+budgeted hill-climb over kernel segment widths for the workload's
+(machine, DPSpec, M, N, batch-bucket, outputs) key, then persists the
+winner in a schema-versioned JSON cache so later processes dispatch
+tuned plans with zero re-measurement.  Width only changes the sweep
+schedule — results are bit-identical across every candidate (enforced
+by the tier-1 parity matrix in ``tests/test_tune.py``).
+"""
+
+from repro.tune.cache import (TUNE_SCHEMA, TuningCache, default_cache,
+                              default_cache_path, machine_key,
+                              set_default_cache, workload_key)
+from repro.tune.tuner import (TuneBudget, TuneResult, autotune,
+                              batch_bucket, cached_verdict)
+
+__all__ = [
+    "TUNE_SCHEMA",
+    "TuneBudget",
+    "TuneResult",
+    "TuningCache",
+    "autotune",
+    "batch_bucket",
+    "cached_verdict",
+    "default_cache",
+    "default_cache_path",
+    "machine_key",
+    "set_default_cache",
+    "workload_key",
+]

@@ -1,0 +1,234 @@
+"""Persistent, schema-versioned tuning cache: measure once per machine,
+dispatch tuned forever.
+
+The autotuner (``repro.tune.tuner``) is a *measured* search — its
+trials cost real device time — so its verdicts must outlive the
+process.  This module stores them in one JSON document
+(``repro.tune/v1``), keyed two levels deep:
+
+  * a **machine key** derived from ``repro.obs.bench``'s
+    :func:`machine_fingerprint` (platform, jax version, jax backend,
+    device count) — a cache written on a TPU host is never trusted on a
+    CPU host;
+  * a **workload key** — the resolved ``DPSpec`` (``describe()`` plus
+    accumulator dtype), query length ``m``, reference length ``n``, the
+    SUBLANES x 2^k batch bucket, and the requested sweep outputs.
+
+Every verdict records the winning backend (kernel vs engine), the
+winning ``segment_width``, the measured times, and how many trials were
+spent, so a warm process answers ``segment_width="auto"`` with ZERO
+timing trials (asserted by the tier-1 suite via the ``tune.trials`` /
+``tune.cache_hits`` counters).
+
+Location: ``$REPRO_TUNE_CACHE`` names the file; unset it defaults to
+``~/.cache/repro/tuning.json``; set it to ``0`` / ``off`` / ``none`` to
+keep the cache in memory only.  Writes are atomic (tmp + rename).  A
+corrupt or schema-mismatched file is REJECTED — logged and treated as
+empty, never trusted and never allowed to crash a dispatch — and the
+next :meth:`TuningCache.put` rewrites a valid document.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import math
+import os
+import threading
+import time
+
+from repro.obs.bench import machine_fingerprint
+
+log = logging.getLogger(__name__)
+
+TUNE_SCHEMA = "repro.tune/v1"
+
+_DISABLED = ("0", "off", "none", "false")
+
+
+def default_cache_path() -> str | None:
+    """The tuning-cache file the default cache persists to, or None
+    (memory-only) when ``REPRO_TUNE_CACHE`` disables persistence."""
+    raw = os.environ.get("REPRO_TUNE_CACHE")
+    if raw is None:
+        return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                            "tuning.json")
+    if raw.strip().lower() in _DISABLED or not raw.strip():
+        return None
+    return raw
+
+
+def machine_key(fingerprint: dict | None = None) -> str:
+    """The cache's trust boundary: verdicts only apply to the machine
+    shape they were measured on."""
+    fp = machine_fingerprint() if fingerprint is None else fingerprint
+    return (f"{fp.get('platform', '?')}|jax={fp.get('jax', '?')}|"
+            f"{fp.get('jax_backend', '?')}x{fp.get('device_count', 0)}")
+
+
+def workload_key(*, spec, m: int, n: int, batch_bucket: int,
+                 outputs) -> str:
+    """One tuning key per (recurrence, shape, outputs) workload."""
+    out = "+".join(sorted(outputs))
+    return (f"{spec.describe()}|accum={spec.accum_dtype}|m={m}|n={n}|"
+            f"b={batch_bucket}|out={out}")
+
+
+def _valid_verdict(v) -> bool:
+    """Entry-level rejection: a verdict read back from disk must carry
+    a sane winner before anyone dispatches on it."""
+    if not isinstance(v, dict):
+        return False
+    w = v.get("segment_width")
+    if isinstance(w, bool) or not isinstance(w, int) or w < 1:
+        return False
+    if not isinstance(v.get("backend"), str):
+        return False
+    best = v.get("best_ms")
+    if best is not None and (not isinstance(best, (int, float))
+                             or not math.isfinite(best)):
+        return False
+    return True
+
+
+class TuningCache:
+    """One machine's view of the persistent tuning document.
+
+    ``path=None`` keeps the cache in memory (still shared by every
+    consumer holding this object).  The on-disk document may hold
+    entries for many machines; this object reads and writes only the
+    section under its own :func:`machine_key`, preserving the rest.
+    """
+
+    def __init__(self, path: str | None = None, *,
+                 fingerprint: dict | None = None):
+        self.path = path
+        self.fingerprint = (machine_fingerprint() if fingerprint is None
+                            else fingerprint)
+        self.machine = machine_key(self.fingerprint)
+        self._lock = threading.Lock()
+        self._entries: dict[str, dict] = {}
+        self.rejected = False       # a corrupt/mismatched file was seen
+        if path is not None:
+            self._entries = self._load(path)
+
+    # ------------------------------------------------------------ load
+    def _load(self, path: str) -> dict:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            return {}
+        except (OSError, json.JSONDecodeError) as e:
+            self.rejected = True
+            log.warning("tuning cache %s rejected (not JSON: %s); "
+                        "starting empty", path, e)
+            return {}
+        if not isinstance(doc, dict) or doc.get("schema") != TUNE_SCHEMA:
+            self.rejected = True
+            log.warning("tuning cache %s rejected (schema=%r, expected "
+                        "%r); starting empty", path,
+                        doc.get("schema") if isinstance(doc, dict)
+                        else type(doc).__name__, TUNE_SCHEMA)
+            return {}
+        section = doc.get("machines", {})
+        if not isinstance(section, dict):
+            self.rejected = True
+            log.warning("tuning cache %s rejected (machines is not an "
+                        "object); starting empty", path)
+            return {}
+        mine = section.get(self.machine, {})
+        entries = mine.get("entries", {}) if isinstance(mine, dict) else {}
+        if not isinstance(entries, dict):
+            self.rejected = True
+            return {}
+        kept = {k: v for k, v in entries.items() if _valid_verdict(v)}
+        dropped = len(entries) - len(kept)
+        if dropped:
+            self.rejected = True
+            log.warning("tuning cache %s: dropped %d malformed "
+                        "entr%s", path, dropped,
+                        "y" if dropped == 1 else "ies")
+        return kept
+
+    # ------------------------------------------------------- accessors
+    def key(self, *, spec, m: int, n: int, batch_bucket: int,
+            outputs) -> str:
+        return workload_key(spec=spec, m=m, n=n,
+                            batch_bucket=batch_bucket, outputs=outputs)
+
+    def get(self, key: str) -> dict | None:
+        with self._lock:
+            v = self._entries.get(key)
+            return dict(v) if v is not None else None
+
+    def put(self, key: str, verdict: dict) -> None:
+        """Record a verdict and (when file-backed) persist atomically."""
+        if not _valid_verdict(verdict):
+            raise ValueError(f"malformed tuning verdict for {key!r}: "
+                             f"{verdict!r}")
+        with self._lock:
+            self._entries[key] = dict(verdict)
+            if self.path is not None:
+                self._flush()
+
+    def entries(self) -> dict[str, dict]:
+        with self._lock:
+            return {k: dict(v) for k, v in self._entries.items()}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ----------------------------------------------------------- flush
+    def _flush(self) -> None:
+        """Merge this machine's entries into the on-disk document and
+        atomically replace it (other machines' sections preserved)."""
+        path = self.path
+        doc: dict = {"schema": TUNE_SCHEMA, "machines": {}}
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            if isinstance(old, dict) and old.get("schema") == TUNE_SCHEMA \
+                    and isinstance(old.get("machines"), dict):
+                doc["machines"] = old["machines"]
+        except (OSError, json.JSONDecodeError):
+            pass                      # corrupt/missing: rewrite clean
+        doc["machines"][self.machine] = {
+            "fingerprint": self.fingerprint,
+            "updated_unix": time.time(),
+            "entries": self._entries,
+        }
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+
+    def __repr__(self):
+        return (f"TuningCache(path={self.path!r}, "
+                f"entries={len(self._entries)})")
+
+
+# ------------------------------------------------------ default cache
+_default: TuningCache | None = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> TuningCache:
+    """The process-wide cache ``segment_width="auto"`` consults unless
+    handed an explicit one (env knob: ``REPRO_TUNE_CACHE``)."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = TuningCache(default_cache_path())
+        return _default
+
+
+def set_default_cache(cache: TuningCache | None) -> TuningCache | None:
+    """Swap the process-wide cache (tests); returns the previous one."""
+    global _default
+    with _default_lock:
+        prev, _default = _default, cache
+        return prev

@@ -188,6 +188,43 @@ def test_distributed_session_stats_stay_eager(data):
                                   np.asarray(want.end))
 
 
+def test_executable_cache_is_lru_bounded(data):
+    """Past ``max_executables`` the oldest executable is evicted —
+    stats.evictions and the aligner.evictions counter tick — and the
+    evicted key recompiles on its next use."""
+    from repro import obs
+    q, r = data
+    metrics = obs.MetricsRegistry()
+    a = repro.Aligner(r, backend="engine", max_executables=2,
+                      metrics=metrics)
+    a(q)                                        # key A
+    a(q[:3])                                    # key B
+    assert a.executables() == 2 and a.stats.evictions == 0
+    a(q[:2])                                    # key C evicts A
+    assert a.executables() == 2 and a.stats.evictions == 1
+    assert metrics.snapshot()["aligner.evictions"]["value"] == 1
+    # B and C are resident (warm), A was evicted and recompiles
+    compiles = a.stats.compiles
+    a(q[:3])
+    a(q[:2])
+    assert a.stats.compiles == compiles
+    a(q)                                        # A again: cold
+    assert a.stats.compiles == compiles + 1
+    assert a.stats.evictions == 2               # ... evicting B
+
+    # a warm hit refreshes recency: touching C then adding a new key
+    # must evict A (least recently used), not C
+    a(q[:2])                                    # refresh C
+    a(q[:1])                                    # new key D evicts A
+    evs = a.stats.evictions
+    compiles = a.stats.compiles
+    a(q[:2])                                    # C still resident
+    assert a.stats.compiles == compiles and a.stats.evictions == evs
+
+    with pytest.raises(ValueError, match="max_executables"):
+        repro.Aligner(r, max_executables=0)
+
+
 def test_layout_cache_shared(data):
     """The kernel session reuses a caller-provided swizzled-layout dict
     (the ReferenceIndex integration) instead of re-swizzling."""

@@ -95,6 +95,38 @@ def test_registry_type_conflict_and_value():
     assert m.names() == []
 
 
+def test_registry_cardinality_cap_error_mode():
+    m = MetricsRegistry(max_names=3)
+    m.inc("a")
+    m.set_gauge("b", 1.0)
+    m.observe("c", 2.0)
+    m.inc("a", 5)                        # existing names keep working
+    with pytest.raises(ValueError, match="max_names"):
+        m.inc("d")
+    with pytest.raises(ValueError, match="max_names"):
+        m.histogram("e")
+    assert sorted(m.names()) == ["a", "b", "c"]
+    with pytest.raises(ValueError):
+        MetricsRegistry(max_names=0)
+    with pytest.raises(ValueError):
+        MetricsRegistry(overflow="explode")
+
+
+def test_registry_cardinality_cap_drop_mode():
+    m = MetricsRegistry(max_names=3, overflow="drop")
+    m.inc("a")
+    m.inc("b")                           # 2 names + 1 reserved slot
+    assert m.inc("overflow.1", 7) == 7   # detached metric still records
+    m.observe("overflow.2", 1.0)
+    m.set_gauge("overflow.3", 2.0)
+    assert "overflow.1" not in m
+    assert m.value("metrics.dropped_names") == 3
+    assert sorted(m.names()) == ["a", "b", "metrics.dropped_names"]
+    assert len(m.names()) <= 3           # exports stay bounded at the cap
+    m.inc("a")                           # registered names unaffected
+    assert m.value("a") == 2
+
+
 def test_registry_thread_safety():
     m = MetricsRegistry()
 
@@ -369,7 +401,8 @@ def test_aligner_counters_and_zero_warm_retraces():
     assert m.value("aligner.cache_hit_rate") == pytest.approx(3 / 4)
     # the dataclass view agrees with the registry
     assert aligner.stats.as_dict() == {
-        "calls": 4, "cache_hits": 3, "compiles": 1, "traces": 1}
+        "calls": 4, "cache_hits": 3, "compiles": 1, "traces": 1,
+        "evictions": 0}
     names = [e["name"] for e in tr.events]
     assert names.count("aligner.build") == 1
     assert names.count("aligner.dispatch") == 4

@@ -13,7 +13,7 @@ from repro.kernels.sdtw_wavefront import SUBLANES
 from repro.search import (QueryBatcher, ReferenceIndex, SearchConfig,
                           SearchService, brute_force_topk, grid_size,
                           lb_keogh_sdtw, lb_paa_sdtw, paa_envelopes,
-                          prune_admissible)
+                          prune_admissible, streaming_envelopes)
 
 
 @pytest.fixture(scope="module")
@@ -35,6 +35,39 @@ def test_paa_envelopes_cover_blocks(rng):
         blk = x[:, b * 8:(b + 1) * 8]
         np.testing.assert_allclose(np.asarray(lo)[:, b], blk.min(axis=1))
         np.testing.assert_allclose(np.asarray(hi)[:, b], blk.max(axis=1))
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 7, 8, 16, 37, 64])
+@pytest.mark.parametrize("shape", [(37,), (64,), (3, 37), (2, 5, 24)])
+def test_streaming_envelopes_equal_paa(rng, chunk, shape):
+    """The O(L) monotonic-deque build is bit-identical to the reshape
+    build — ragged tails, chunk == length, and chunk > length
+    included — so swapping it into ReferenceIndex changes nothing."""
+    x = rng.normal(size=shape).astype(np.float32)
+    lo_s, hi_s = streaming_envelopes(x, chunk)
+    lo_p, hi_p = paa_envelopes(jnp.asarray(x), chunk)
+    np.testing.assert_array_equal(np.asarray(lo_s), np.asarray(lo_p))
+    np.testing.assert_array_equal(np.asarray(hi_s), np.asarray(hi_p))
+    assert lo_s.dtype == lo_p.dtype
+
+
+def test_streaming_envelopes_validation(rng):
+    with pytest.raises(ValueError, match="chunk"):
+        streaming_envelopes(rng.normal(size=(8,)), 0)
+    with pytest.raises(ValueError, match="empty"):
+        streaming_envelopes(np.zeros((0,)), 4)
+
+
+def test_index_envelopes_use_streaming_build(rng):
+    """ReferenceIndex's cached envelopes come from the deque build and
+    match the reshape build on the test corpus."""
+    r = rng.normal(size=(217,)).astype(np.float32)
+    idx = ReferenceIndex(normalize=False)
+    idx.add("a", r)
+    lo, hi = idx.envelopes("a", 8)
+    lo_p, hi_p = paa_envelopes(jnp.asarray(r), 8)
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(lo_p))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(hi_p))
 
 
 @pytest.mark.parametrize("chunks", [(1, 1), (1, 4), (2, 8), (5, 7)])

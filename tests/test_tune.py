@@ -1,0 +1,382 @@
+"""repro.tune: the tentpole contracts.
+
+Safety: segment width only changes the kernel's sweep schedule, never
+the recurrence — the parity matrix asserts costs/ends/starts are
+BIT-identical across candidate widths x outputs x band settings
+(interpret mode), so no tuning verdict can ever change an answer.
+
+Tuner: cache round-trips survive a process boundary (modeled as a
+fresh TuningCache over the same file), budgets are respected, a seeded
+fake timer makes the winner deterministic, corrupt caches are rejected
+(treated as empty, never crash), and a warm cache answers with ZERO
+timing trials — the counters prove it.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import repro
+from repro import tune
+from repro.core.spec import DPSpec
+from repro.kernels import ops
+from repro.obs import MetricsRegistry
+
+WIDTHS = (2, 4, 8, 14, 16, 32)
+
+
+@pytest.fixture()
+def mem_cache():
+    """Memory-only default cache, restored afterwards — tests must not
+    touch the user's ~/.cache tuning file."""
+    prev = tune.set_default_cache(tune.TuningCache(None))
+    yield tune.default_cache()
+    tune.set_default_cache(prev)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    q = rng.standard_normal((5, 20)).astype(np.float32)
+    r = rng.standard_normal(700).astype(np.float32)
+    return q, r
+
+
+def fake_timer(times: dict, default: float = 9.9):
+    """timer(label, make_fn) stub returning scripted seconds; records
+    the call order so budget tests can count trials."""
+    calls = []
+
+    def timer(label, make_fn):
+        calls.append(label)
+        return times.get(label, default)
+
+    timer.calls = calls
+    return timer
+
+
+# ------------------------------------------------- width parity matrix
+@pytest.mark.parametrize("outputs", [("cost", "end"),
+                                     ("cost", "start", "end")])
+@pytest.mark.parametrize("band", [None, 12])
+def test_segment_width_parity_matrix(data, outputs, band):
+    """Every candidate width produces the SAME bits for every output
+    and band setting: tuning is free to pick any of them."""
+    q, r = data
+    base = None
+    for w in WIDTHS:
+        res = repro.sdtw(q, r, outputs=outputs, backend="kernel",
+                         segment_width=w, band=band, interpret=True)
+        got = {o: np.asarray(getattr(res, o)) for o in outputs}
+        if base is None:
+            base = got
+            continue
+        for o in outputs:
+            np.testing.assert_array_equal(
+                got[o], base[o],
+                err_msg=f"width {w} changed output {o!r} (band={band})")
+
+
+def test_soft_spec_width_parity(data):
+    """Soft-min sweeps stay equal across widths to float rounding: the
+    width reorders the running logsumexp fold, so the last ulp can
+    move — everything the hard-min matrix asserts bitwise stays
+    bitwise; the soft channel is tested at tight tolerance."""
+    q, r = data
+    base = None
+    for w in WIDTHS:
+        res = repro.sdtw(q, r, backend="kernel", reduction="softmin",
+                         gamma=0.5, segment_width=w, interpret=True)
+        c = np.asarray(res.cost)
+        if base is None:
+            base = c
+        else:
+            np.testing.assert_allclose(c, base, rtol=1e-6, atol=1e-6)
+
+
+def test_width_candidates_prune_pathological_padding():
+    # a 700-sample reference pads to 4x+ its length at wide widths:
+    # those candidates are dropped, the rest survive sorted + deduped
+    kept = ops.width_candidates(700, WIDTHS)
+    assert kept == tuple(sorted(kept))
+    assert all(ops.ceil_to(700, 128 * w) <= 4 * 700 for w in kept)
+    assert ops.width_candidates(10, (64,)) == (64,)   # smallest survives
+    with pytest.raises(ValueError):
+        ops.width_candidates(0)
+    with pytest.raises(ValueError):
+        ops.width_candidates(100, ())
+    with pytest.raises(ValueError, match="segment_width"):
+        ops.width_candidates(100, (True,))
+
+
+# -------------------------------------------------------- tuning cache
+def test_cache_round_trip(tmp_path, data):
+    _, r = data
+    path = str(tmp_path / "tuning.json")
+    spec = DPSpec()
+    c1 = tune.TuningCache(path)
+    key = c1.key(spec=spec, m=20, n=700, batch_bucket=8,
+                 outputs=("cost", "end"))
+    verdict = {"backend": "kernel", "segment_width": 14, "best_ms": 1.5,
+               "trials": 3, "measured": {"kernel:w14": 1.5}}
+    c1.put(key, verdict)
+    # a fresh object over the same file — the process boundary
+    c2 = tune.TuningCache(path)
+    got = c2.get(key)
+    assert got is not None and got["segment_width"] == 14
+    assert got["backend"] == "kernel"
+    assert not c2.rejected
+    # the document is schema-versioned and machine-keyed
+    doc = json.loads((tmp_path / "tuning.json").read_text())
+    assert doc["schema"] == tune.TUNE_SCHEMA
+    assert c2.machine in doc["machines"]
+    assert "fingerprint" in doc["machines"][c2.machine]
+
+
+@pytest.mark.parametrize("corrupt", [
+    "not json at all {",
+    json.dumps({"schema": "repro.tune/v0", "machines": {}}),
+    json.dumps(["wrong", "shape"]),
+    json.dumps({"schema": "repro.tune/v1", "machines": "nope"}),
+])
+def test_corrupt_cache_rejected(tmp_path, corrupt):
+    path = tmp_path / "tuning.json"
+    path.write_text(corrupt)
+    c = tune.TuningCache(str(path))
+    assert c.rejected
+    assert len(c) == 0
+    # and the next put() rewrites a valid document
+    key = c.key(spec=DPSpec(), m=8, n=100, batch_bucket=8,
+                outputs=("cost",))
+    c.put(key, {"backend": "engine", "segment_width": 8})
+    assert not tune.TuningCache(str(path)).rejected
+
+
+def test_malformed_entries_dropped(tmp_path):
+    path = tmp_path / "tuning.json"
+    mkey = tune.machine_key()
+    path.write_text(json.dumps({
+        "schema": tune.TUNE_SCHEMA,
+        "machines": {mkey: {"entries": {
+            "good": {"backend": "kernel", "segment_width": 4},
+            "bad_width": {"backend": "kernel", "segment_width": 0},
+            "bad_bool": {"backend": "kernel", "segment_width": True},
+            "bad_type": "not a dict",
+            "bad_ms": {"backend": "kernel", "segment_width": 4,
+                       "best_ms": float("nan")},
+        }}}}))
+    c = tune.TuningCache(str(path))
+    assert c.rejected
+    assert list(c.entries()) == ["good"]
+    with pytest.raises(ValueError, match="malformed"):
+        c.put("k", {"backend": "kernel", "segment_width": -1})
+
+
+def test_cache_preserves_other_machines(tmp_path):
+    path = str(tmp_path / "tuning.json")
+    other = tune.TuningCache(path, fingerprint={"platform": "mars"})
+    other.put("alien-key", {"backend": "kernel", "segment_width": 2})
+    mine = tune.TuningCache(path)
+    mine.put("my-key", {"backend": "engine", "segment_width": 8})
+    doc = json.loads((tmp_path / "tuning.json").read_text())
+    assert len(doc["machines"]) == 2
+    assert tune.TuningCache(
+        path, fingerprint={"platform": "mars"}).get("alien-key")
+
+
+def test_disabled_cache_path(monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", "0")
+    assert tune.default_cache_path() is None
+    monkeypatch.setenv("REPRO_TUNE_CACHE", "off")
+    assert tune.default_cache_path() is None
+    monkeypatch.setenv("REPRO_TUNE_CACHE", "/x/y.json")
+    assert tune.default_cache_path() == "/x/y.json"
+    monkeypatch.delenv("REPRO_TUNE_CACHE")
+    assert tune.default_cache_path().endswith("tuning.json")
+
+
+# -------------------------------------------------------------- tuner
+def test_deterministic_winner_on_fake_timer(data):
+    _, r = data
+    times = {"engine": 5.0, "kernel:w8": 3.0, "kernel:w4": 2.0,
+             "kernel:w2": 2.5, "kernel:w14": 4.0}
+    for _ in range(2):     # same fake timings -> same winner, twice
+        m = MetricsRegistry()
+        res = tune.autotune(r, m=20, batch=5, candidates=WIDTHS,
+                            interpret=True, cache=tune.TuningCache(None),
+                            metrics=m, timer=fake_timer(times))
+        assert (res.backend, res.segment_width) == ("kernel", 4)
+        assert res.trials == m.value("tune.trials") > 0
+        assert not res.from_cache
+        # hill-climb walked 8 -> 4 -> 2 and stopped at the local min
+        assert "kernel:w4" in res.measured
+        assert "kernel:w2" in res.measured
+
+
+def test_budget_max_trials_respected(data):
+    _, r = data
+    timer = fake_timer({})
+    m = MetricsRegistry()
+    res = tune.autotune(r, m=20, batch=5, candidates=WIDTHS,
+                        interpret=True, cache=tune.TuningCache(None),
+                        budget=tune.TuneBudget(max_trials=2), metrics=m,
+                        timer=timer)
+    assert len(timer.calls) == 2 == m.value("tune.trials")
+    assert res.trials == 2
+    with pytest.raises(ValueError):
+        tune.TuneBudget(max_trials=0)
+
+
+def test_warm_cache_zero_trials(tmp_path, data):
+    _, r = data
+    path = str(tmp_path / "t.json")
+    timer = fake_timer({"kernel:w8": 1.0})
+    cold = MetricsRegistry()
+    res1 = tune.autotune(r, m=20, batch=5, interpret=True,
+                         cache=tune.TuningCache(path), metrics=cold,
+                         timer=timer)
+    assert cold.value("tune.trials") > 0
+    assert cold.value("tune.cache_hits") == 0
+    # "second process": fresh cache object, fresh metrics, a timer that
+    # would blow up if consulted
+    def exploding(label, make_fn):
+        raise AssertionError("warm path must not measure")
+    warm = MetricsRegistry()
+    res2 = tune.autotune(r, m=20, batch=5, interpret=True,
+                         cache=tune.TuningCache(path), metrics=warm,
+                         timer=exploding)
+    assert res2.from_cache and res2.trials == 0
+    assert warm.value("tune.trials") == 0
+    assert warm.value("tune.cache_hits") == 1
+    assert (res2.backend, res2.segment_width) == \
+        (res1.backend, res1.segment_width)
+
+
+def test_tune_span_recorded(data):
+    _, r = data
+    from repro.obs import Tracer
+    tr = Tracer()
+    tune.autotune(r, m=20, batch=5, interpret=True,
+                  cache=tune.TuningCache(None), metrics=MetricsRegistry(),
+                  tracer=tr, timer=fake_timer({}))
+    assert any(e["name"] == "tune.search" for e in tr.events)
+
+
+def test_engine_winner_still_records_best_kernel_width(data):
+    _, r = data
+    times = {"engine": 1.0, "kernel:w8": 7.0, "kernel:w4": 6.0,
+             "kernel:w2": 8.0}
+    res = tune.autotune(r, m=20, batch=5, candidates=WIDTHS,
+                        interpret=True, cache=tune.TuningCache(None),
+                        metrics=MetricsRegistry(),
+                        timer=fake_timer(times))
+    assert res.backend == "engine"
+    assert res.segment_width == 4     # the best kernel width measured
+
+
+def test_batch_bucket():
+    assert tune.batch_bucket(1) == 8
+    assert tune.batch_bucket(8) == 8
+    assert tune.batch_bucket(9) == 16
+    assert tune.batch_bucket(100) == 128
+    with pytest.raises(ValueError):
+        tune.batch_bucket(0)
+
+
+# -------------------------------------------- integration: auto width
+def test_auto_aligner_bit_identical_to_pinned(data, mem_cache):
+    q, r = data
+    m = MetricsRegistry()
+    auto = repro.Aligner(r, backend="kernel", segment_width="auto",
+                         interpret=True, metrics=m,
+                         tune_options={"budget": tune.TuneBudget(
+                             max_trials=3, warmup=0, runs=1)})
+    res = auto(q, outputs=("cost", "start", "end"))
+    assert m.value("tune.trials") > 0
+    for w in WIDTHS:
+        pin = repro.Aligner(r, backend="kernel", segment_width=w,
+                            interpret=True)
+        ref = pin(q, outputs=("cost", "start", "end"))
+        np.testing.assert_array_equal(np.asarray(res.cost),
+                                      np.asarray(ref.cost))
+        np.testing.assert_array_equal(np.asarray(res.end),
+                                      np.asarray(ref.end))
+        np.testing.assert_array_equal(np.asarray(res.start),
+                                      np.asarray(ref.start))
+
+
+def test_auto_aligner_warm_cache_zero_trials(tmp_path, data):
+    q, r = data
+    path = str(tmp_path / "t.json")
+    budget = tune.TuneBudget(max_trials=2, warmup=0, runs=1)
+    m1 = MetricsRegistry()
+    a1 = repro.Aligner(r, backend="kernel", segment_width="auto",
+                       interpret=True, metrics=m1,
+                       tune_options={"budget": budget,
+                                     "cache": tune.TuningCache(path)})
+    r1 = a1(q)
+    assert m1.value("tune.trials") > 0
+    # "second process": a fresh Aligner + fresh cache object over the
+    # same file performs zero timing trials
+    m2 = MetricsRegistry()
+    a2 = repro.Aligner(r, backend="kernel", segment_width="auto",
+                       interpret=True, metrics=m2,
+                       tune_options={"budget": budget,
+                                     "cache": tune.TuningCache(path)})
+    r2 = a2(q)
+    assert m2.value("tune.trials") == 0
+    assert m2.value("tune.cache_hits") == 1
+    np.testing.assert_array_equal(np.asarray(r1.cost),
+                                  np.asarray(r2.cost))
+    # the tuned width is memoized per workload key: a second batch of
+    # the same shape consults neither the tuner nor the cache again
+    a2(q)
+    assert m2.value("tune.cache_hits") == 1
+
+
+def test_auto_sdtw_front_door(data, mem_cache):
+    q, r = data
+    res = repro.sdtw(q, r, segment_width="auto", interpret=True)
+    ref = repro.sdtw(q, r, backend="engine")
+    np.testing.assert_allclose(np.asarray(res.cost), np.asarray(ref.cost),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="auto"):
+        repro.sdtw(q, r, segment_width="fastest")
+    with pytest.raises(ValueError, match="auto"):
+        repro.Aligner(r, segment_width="fastest")
+
+
+def test_auto_width_non_kernel_backend_skips_tuning(data, mem_cache):
+    q, r = data
+    m = MetricsRegistry()
+    a = repro.Aligner(r, backend="engine", segment_width="auto",
+                      metrics=m)
+    a(q)
+    assert m.value("tune.trials") == 0
+    assert a.resolved_width(q.shape) == ops.DEFAULT_SEGMENT_WIDTH
+
+
+def test_registry_select_consults_verdict(data, mem_cache):
+    """A measured verdict re-ranks auto-selection: after the tuner
+    records that the kernel won this workload, backend=None lands on
+    the kernel (on CPU the static priority would pick the engine)."""
+    from repro.backends import registry
+    _, r = data
+    spec = DPSpec()
+    times = {"engine": 5.0, "kernel:w8": 1.0}
+    tune.autotune(r, m=20, batch=5, spec=spec, interpret=True,
+                  metrics=MetricsRegistry(), timer=fake_timer(times))
+    backend, _ = registry.select(spec, workload=(20, 700, 5))
+    assert backend.name == "kernel"
+    # an untuned workload still follows static priority
+    backend, _ = registry.select(spec, workload=(21, 700, 5))
+    assert backend.name == "engine"
+
+
+def test_layout_requires_width_under_auto(data, mem_cache):
+    _, r = data
+    a = repro.Aligner(r, backend="kernel", segment_width="auto",
+                      interpret=True)
+    with pytest.raises(ValueError, match="auto"):
+        a.layout()
+    assert a.layout(segment_width=4).shape[1] == 4
