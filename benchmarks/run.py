@@ -35,6 +35,7 @@ def main(argv=None):
     from benchmarks import train_step_bench, sdtw_scaling
     from benchmarks import search_throughput, backend_matrix
     from benchmarks import align_throughput, band_skip, aligner_session
+    from benchmarks import serve_stream
 
     # (name, thunk(rows)) — in --ci mode only benches with a tiny
     # asserting mode run; the paper-workload sweeps are bench-only
@@ -61,6 +62,11 @@ def main(argv=None):
         ("band_skip", lambda rows: band_skip.run(
             full=full, ci=ci, csv=rows)),
         ("aligner_session", lambda rows: aligner_session.run(
+            full=full, ci=ci, csv=rows)),
+        # serve_stream runs in --ci too: a seconds-long deterministic
+        # smoke that hard-asserts zero timeouts/rejects and served
+        # results bit-identical to offline SearchService.topk
+        ("serve_stream", lambda rows: serve_stream.run(
             full=full, ci=ci, csv=rows)),
     ]
 
@@ -107,6 +113,37 @@ def main(argv=None):
     for name, doc in docs.items():
         print(f"  BENCH_{name}.json: {len(doc['metrics'])} metrics, "
               f"{len(doc['rows'])} rows  [schema ok]")
+
+    # bench history: in --ci the validated BENCH_*.json set is also
+    # archived under benchmarks/history/<git-sha>/ so
+    # `launch/report.py --history` can flag metric trends across runs
+    if args.ci:
+        dest = _archive_history(written, args.out)
+        if dest:
+            print(f"archived {len(written)} BENCH docs -> {dest}")
+
+
+def _archive_history(paths, out_dir,
+                     root: str = "benchmarks/history") -> str | None:
+    """Copy the run's BENCH_*.json files into ``<root>/<git-sha>/``;
+    falls back to a timestamped entry outside a git checkout."""
+    import shutil
+    import subprocess
+    import time
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip()
+    except Exception:
+        sha = f"nogit-{int(time.time())}"
+    if not sha:
+        return None
+    dest = os.path.join(root, sha)
+    os.makedirs(dest, exist_ok=True)
+    for p in paths:
+        shutil.copy2(p, dest)
+    return dest
 
 
 if __name__ == "__main__":

@@ -1,0 +1,229 @@
+"""Closed-loop streaming-serving benchmark: seeded Poisson arrivals
+through the StreamServer at several offered loads.
+
+For each offered load (queries/second) a fresh :class:`StreamServer`
+(its own MetricsRegistry, warmed executables) is driven by an
+open-loop Poisson arrival process — seeded ``rng.exponential``
+inter-arrival gaps, so every run replays the same trace — and every
+response is checked BIT-IDENTICAL against an offline
+``SearchService.topk`` on the same queries: continuous batching must
+change latency, never answers.
+
+Per load the bench reports offered vs. goodput qps, p50/p95/p99
+response latency, timeout/reject/retry rates, and the batch-formation
+profile (mean fill, padded rows) straight from the server's own
+``serve.*`` metrics.  The headline ``metrics`` dict (diffed by
+``launch/report.py --compare``) carries the HIGHEST offered load's
+numbers — the regime where batching policy actually matters.
+
+  --ci    one low load, tiny dataset, seconds-long; hard-asserts zero
+          timeouts, zero rejects, and bit-identity on every response
+  --full  bigger dataset and loads (still CPU-tractable)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import write_bench
+from repro import obs
+from repro.data.cbf import make_search_dataset
+from repro.search.index import ReferenceIndex
+from repro.search.service import SearchConfig, SearchService
+from repro.serve import RejectedError, StreamConfig, StreamServer
+
+
+def _dataset(full: bool, ci: bool):
+    """(index, queries) — queries at TWO lengths so several buckets are
+    live at once (the formation loop must interleave them)."""
+    if ci:
+        refs, queries, _ = make_search_dataset(
+            7, n_refs=2, motifs_per_ref=4, motif_len=48, n_queries=8)
+    elif full:
+        refs, queries, _ = make_search_dataset(
+            7, n_refs=6, motifs_per_ref=12, motif_len=96, n_queries=48)
+    else:
+        refs, queries, _ = make_search_dataset(
+            7, n_refs=3, motifs_per_ref=6, motif_len=64, n_queries=24)
+    # truncate every other query to 3/4 length: a second length bucket
+    queries = [q if i % 2 == 0 else np.ascontiguousarray(q[: (3 * len(q))
+                                                            // 4])
+               for i, q in enumerate(queries)]
+    index = ReferenceIndex()
+    for name, series in refs.items():
+        index.add(name, series)
+    return index, queries
+
+
+def _drive(server: StreamServer, queries, *, rate_qps: float,
+           n_requests: int, k: int, seed: int,
+           deadline_ms: float | None):
+    """Open-loop Poisson submit; returns (responses, rejects, elapsed_s).
+
+    ``responses`` is ``[(query_idx, ServeResponse)]`` for every ADMITTED
+    request; rejected submits are counted, not retried (an open-loop
+    client walks away)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_qps, size=n_requests)
+    futures, rejects = [], 0
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        qi = i % len(queries)
+        try:
+            fut = server.submit(queries[qi], k=k, deadline_ms=deadline_ms)
+            futures.append((qi, fut))
+        except RejectedError:
+            rejects += 1
+        time.sleep(float(gaps[i]))
+    responses = [(qi, fut.result(timeout=120.0)) for qi, fut in futures]
+    elapsed = time.perf_counter() - t0
+    return responses, rejects, elapsed
+
+
+def _assert_bit_identical(offline_hits, responses, queries) -> int:
+    """Every "ok" response must equal the offline sweep field-for-field
+    (reference, cost, end, start) — float equality, no tolerance."""
+    checked = 0
+    for qi, resp in responses:
+        if not resp.ok:
+            continue
+        want = offline_hits[qi][: len(resp.hits)]
+        assert len(resp.hits) == len(want), \
+            f"query {qi}: served {len(resp.hits)} hits, offline " \
+            f"{len(want)}"
+        for served, ref in zip(resp.hits, want):
+            assert (served.reference == ref.reference
+                    and served.cost == ref.cost
+                    and served.end == ref.end
+                    and served.start == ref.start), \
+                f"query {qi}: served {served} != offline {ref}"
+        checked += 1
+    return checked
+
+
+def run(full: bool = False, ci: bool = False, csv: list | None = None
+        ) -> dict:
+    index, queries = _dataset(full, ci)
+    k = 2
+    search = SearchConfig()
+
+    # the offline truth: one plain SearchService over the same index +
+    # config; per-query results are batch-independent, so this is THE
+    # answer the server must reproduce bitwise
+    offline = SearchService(index, search, metrics=obs.MetricsRegistry(),
+                            tracer=obs.Tracer())
+    offline_hits = offline.topk(queries, k=k)
+
+    if ci:
+        loads = [(20.0, 16)]            # (offered qps, n_requests)
+        deadline_ms = None
+        max_batch, max_wait_ms, workers = 16, 10.0, 1
+    elif full:
+        loads = [(25.0, 96), (100.0, 96), (400.0, 96)]
+        deadline_ms = 2000.0
+        max_batch, max_wait_ms, workers = 32, 10.0, 2
+    else:
+        loads = [(25.0, 48), (200.0, 48)]
+        deadline_ms = 2000.0
+        max_batch, max_wait_ms, workers = 16, 10.0, 2
+
+    lengths = sorted({len(q) for q in queries})
+    headline: dict[str, float] = {}
+    for rate_qps, n_requests in loads:
+        metrics = obs.MetricsRegistry()
+        config = StreamConfig(max_batch=max_batch,
+                              max_wait_ms=max_wait_ms,
+                              workers=workers)
+        with StreamServer(index, config=config, search=search,
+                          metrics=metrics,
+                          tracer=obs.Tracer()) as server:
+            server.warmup(lengths, k=k)
+            metrics.reset()             # warmup sweeps are not traffic
+            responses, rejects, elapsed = _drive(
+                server, queries, rate_qps=rate_qps,
+                n_requests=n_requests, k=k, seed=11,
+                deadline_ms=deadline_ms)
+
+        checked = _assert_bit_identical(offline_hits, responses, queries)
+        n_ok = sum(1 for _, r in responses if r.ok)
+        n_timeout = sum(1 for _, r in responses
+                        if r.status == "timeout")
+        n_error = sum(1 for _, r in responses if r.status == "error")
+        lat = sorted(r.latency_ms for _, r in responses if r.ok)
+
+        def q(p):
+            return float(lat[min(int(p * len(lat)), len(lat) - 1)]) \
+                if lat else float("nan")
+
+        fills = metrics.get("serve.batch_fill")
+        row = {
+            "bench": "serve_stream",
+            "offered_qps": rate_qps,
+            "n_requests": n_requests,
+            "goodput_qps": n_ok / elapsed if elapsed > 0 else 0.0,
+            "p50_ms": q(0.50), "p95_ms": q(0.95), "p99_ms": q(0.99),
+            "timeout_rate": n_timeout / n_requests,
+            "reject_rate": rejects / n_requests,
+            "error_rate": n_error / n_requests,
+            "retries": metrics.value("serve.retries"),
+            "batches": metrics.value("serve.batches"),
+            "rows_real": metrics.value("serve.batch_rows_real"),
+            "rows_padded": metrics.value("serve.batch_rows_padded"),
+            "mean_fill": (fills.mean if fills is not None
+                          and fills.count else 1.0),
+            "bit_identical": checked,
+        }
+        if csv is not None:
+            csv.append(row)
+        print(f"serve_stream: offered={rate_qps:7.1f} qps  "
+              f"goodput={row['goodput_qps']:7.1f} qps  "
+              f"p50={row['p50_ms']:6.1f}ms p99={row['p99_ms']:6.1f}ms  "
+              f"timeout={row['timeout_rate']:.2%} "
+              f"reject={row['reject_rate']:.2%}  "
+              f"batches={row['batches']} fill={row['mean_fill']:.2f}  "
+              f"bitwise-ok={checked}/{n_ok}")
+
+        assert n_ok + n_timeout + n_error + rejects == n_requests, \
+            "every request must resolve: ok/timeout/error/reject"
+        assert checked == n_ok, "every ok response must be verified"
+        if ci:
+            assert rejects == 0, f"ci smoke rejected {rejects} requests"
+            assert n_timeout == 0, f"ci smoke timed out {n_timeout}"
+            assert n_error == 0, f"ci smoke errored {n_error}"
+            assert n_ok == n_requests
+
+        headline = {
+            "offered_qps": rate_qps,
+            "goodput_qps": row["goodput_qps"],
+            "p50_ms": row["p50_ms"], "p99_ms": row["p99_ms"],
+            "timeout_rate": row["timeout_rate"],
+            "reject_rate": row["reject_rate"],
+            "error_rate": row["error_rate"],
+            "retry_rate": row["retries"] / n_requests,
+            "mean_batch_fill": row["mean_fill"],
+        }
+    return headline
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ci", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="also write BENCH_serve_stream.json here")
+    args = ap.parse_args(argv)
+    rows: list[dict] = []
+    metrics = run(full=args.full, ci=args.ci, csv=rows)
+    if args.out:
+        path = write_bench("serve_stream", out_dir=args.out,
+                           params={"mode": "ci" if args.ci else
+                                   "full" if args.full else "reduced"},
+                           rows=rows, metrics=metrics)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

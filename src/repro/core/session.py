@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import threading
 from collections import OrderedDict
 
 import jax
@@ -118,6 +119,12 @@ class Aligner:
     ``(segment_width, dtype_name)`` like ``ReferenceIndex`` entries),
     so index-backed sessions reuse the index's offline prep instead of
     re-swizzling.
+
+    Pool-safety: the executable LRU is lock-guarded, so one session may
+    be dispatched from several serve-pool worker threads concurrently
+    (``repro.serve.pool``); the per-session ``stats`` counters stay
+    consistent, and racing cold builds of the same key are wasteful but
+    correct.
     """
 
     def __init__(self, reference, *, spec: DPSpec | None = None,
@@ -177,6 +184,14 @@ class Aligner:
         self.max_executables = max_executables
         self._layouts: dict = {} if layout_cache is None else layout_cache
         self._layouts_verified: set = set()
+        # pool-safety: the executable LRU is the only structure a
+        # session mutates per call, so guarding it (lookup / insert /
+        # evict as short critical sections — the sweep itself runs
+        # unlocked) makes one Aligner safely shareable across
+        # serve-pool worker threads.  Two threads racing the same cold
+        # key may both build; last insert wins, which is wasteful but
+        # correct (jit executables for the same key are interchangeable)
+        self._fns_lock = threading.RLock()
         self._fns: OrderedDict = OrderedDict()
         self.stats = AlignerStats()
         self._metrics = obs.default_registry() if metrics is None else \
@@ -363,8 +378,13 @@ class Aligner:
             queries = normalize_batch(queries)
         if req - {"soft_alignment"}:
             key = (queries.shape, jnp.dtype(queries.dtype).name, req)
-            entry = self._fns.get(key)
-            cold = entry is None
+            with self._fns_lock:
+                entry = self._fns.get(key)
+                cold = entry is None
+                if not cold:
+                    self.stats.cache_hits += 1
+                    m.inc("aligner.cache_hits")
+                    self._fns.move_to_end(key)      # LRU touch
             if cold:
                 with self._tracer.span("aligner.build",
                                        backend=self.backend.name,
@@ -373,10 +393,6 @@ class Aligner:
                     entry = self._build(queries.shape, queries.dtype, req)
                 log.debug("built executable key=%s backend=%s",
                           key, self.backend.name)
-            else:
-                self.stats.cache_hits += 1
-                m.inc("aligner.cache_hits")
-                self._fns.move_to_end(key)      # LRU touch
             with self._tracer.span("aligner.dispatch",
                                    backend=self.backend.name,
                                    batch=list(queries.shape),
@@ -389,17 +405,18 @@ class Aligner:
                 # its ``compiles`` tick) exists exactly when the call
                 # above succeeded — eager strategies (jitted=False)
                 # build none and tick nothing
-                self._fns[key] = entry
-                if entry[1]:
-                    self.stats.compiles += 1
-                    m.inc("aligner.compiles")
-                while len(self._fns) > self.max_executables:
-                    old_key, _ = self._fns.popitem(last=False)
-                    self.stats.evictions += 1
-                    m.inc("aligner.evictions")
-                    log.debug("evicted executable key=%s (LRU, "
-                              "max_executables=%d)", old_key,
-                              self.max_executables)
+                with self._fns_lock:
+                    self._fns[key] = entry
+                    if entry[1]:
+                        self.stats.compiles += 1
+                        m.inc("aligner.compiles")
+                    while len(self._fns) > self.max_executables:
+                        old_key, _ = self._fns.popitem(last=False)
+                        self.stats.evictions += 1
+                        m.inc("aligner.evictions")
+                        log.debug("evicted executable key=%s (LRU, "
+                                  "max_executables=%d)", old_key,
+                                  self.max_executables)
         else:
             # soft_alignment-only: no sweep to run — validate the
             # request against the backend, then derive directly
@@ -417,7 +434,8 @@ class Aligner:
 
     def executables(self) -> int:
         """How many distinct jitted executables this session holds."""
-        return sum(1 for _, jitted in self._fns.values() if jitted)
+        with self._fns_lock:
+            return sum(1 for _, jitted in self._fns.values() if jitted)
 
     def __repr__(self):
         return (f"Aligner(n={self.length}, backend={self.backend.name!r}, "

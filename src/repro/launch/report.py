@@ -1,4 +1,4 @@
-"""Reporting driver, two modes:
+"""Reporting driver, three modes:
 
   * default — aggregate experiments/dryrun/*.json into the
     EXPERIMENTS.md roofline table (markdown to stdout);
@@ -12,6 +12,17 @@
     found — the CI gate for perf PRs:
 
       python -m repro.launch.report --compare main/ pr/ --threshold 0.1
+
+  * ``--history DIR`` — trend view over the archive that
+    ``benchmarks/run.py --ci`` grows (one ``DIR/<git-sha>/`` entry of
+    BENCH docs per run).  Orders entries by the docs' ``created_unix``,
+    takes the last ``--last`` (default 5), and flags any metric whose
+    LATEST value worsened beyond ``--threshold`` against the median of
+    the preceding window — the median, not the single previous run, so
+    one noisy entry can't hide (or fake) a drift.  Same exit codes as
+    ``--compare``: 1 when anything is flagged, 2 on schema errors.
+
+      python -m repro.launch.report --history benchmarks/history --last 5
 """
 
 from __future__ import annotations
@@ -110,6 +121,89 @@ def fmt(x):
     return f"{x:.3g}"
 
 
+# ------------------------------------------------------------- history
+def load_history(root: str) -> list[tuple[str, dict]]:
+    """-> [(entry_name, {bench: doc})] ordered oldest -> newest by the
+    docs' ``created_unix`` (directory names are git shas — unordered)."""
+    entries = []
+    for d in sorted(os.listdir(root)):
+        path = os.path.join(root, d)
+        if not os.path.isdir(path):
+            continue
+        docs = load_bench_dir(path)       # raises BenchSchemaError
+        if docs:
+            stamp = min(doc["created_unix"] for doc in docs.values())
+            entries.append((stamp, d, docs))
+    entries.sort(key=lambda e: e[0])
+    return [(name, docs) for _, name, docs in entries]
+
+
+def _median(xs):
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else (s[n // 2 - 1] + s[n // 2]) / 2
+
+
+def history_trends(root: str, *, last: int = 5,
+                   threshold: float = 0.10, out=None) -> int:
+    """Print the metric trend table over the last ``last`` history
+    entries; return the number of flagged drifts (latest vs. the median
+    of the preceding entries, directional metrics only)."""
+    out = sys.stdout if out is None else out
+    entries = load_history(root)
+    if not entries:
+        raise BenchSchemaError(f"{root}: no history entries with "
+                               f"BENCH_*.json files")
+    entries = entries[-last:]
+    names = [name for name, _ in entries]
+    print(f"history: {len(entries)} entr"
+          f"{'y' if len(entries) == 1 else 'ies'} "
+          f"({' -> '.join(names)})", file=out)
+    if len(entries) < 2:
+        print("(need >= 2 entries for a trend; nothing to flag)",
+              file=out)
+        return 0
+
+    latest_name, latest = entries[-1]
+    window = entries[:-1]
+    flagged = []
+    print(f"| bench | metric | median({len(window)} prior) | "
+          f"{latest_name} | delta | verdict |", file=out)
+    print("|---|---|---|---|---|---|", file=out)
+    for bench in sorted(latest):
+        metrics = latest[bench]["metrics"]
+        for key in sorted(metrics):
+            prior = [docs[bench]["metrics"][key]
+                     for _, docs in window
+                     if bench in docs and key in docs[bench]["metrics"]]
+            if not prior:
+                continue
+            base = _median(prior)
+            if base == 0:
+                continue
+            vb = metrics[key]
+            delta = (vb - base) / abs(base)
+            direction = metric_direction(key)
+            worsening = delta * -direction
+            if direction and worsening > threshold:
+                verdict = f"DRIFT (>{threshold:.0%})"
+                flagged.append((bench, key))
+            elif direction and -worsening > threshold:
+                verdict = "improved"
+            else:
+                verdict = "ok" if direction else "(untracked)"
+            print(f"| {bench} | {key} | {fmt(base)} | {fmt(vb)} | "
+                  f"{delta:+.1%} | {verdict} |", file=out)
+    if flagged:
+        print(f"\n{len(flagged)} metric(s) drifted beyond "
+              f"{threshold:.0%}:", file=out)
+        for bench, key in flagged:
+            print(f"  - {bench}: {key}", file=out)
+    else:
+        print(f"\nno drift beyond {threshold:.0%}", file=out)
+    return len(flagged)
+
+
 def dryrun_table(args) -> int:
     rows = []
     for p in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
@@ -136,17 +230,34 @@ def main(argv=None):
     ap.add_argument("--mesh", default="pod16x16")
     ap.add_argument("--compare", nargs=2, metavar=("BASE", "NEW"),
                     help="diff two directories of BENCH_*.json files")
+    ap.add_argument("--history", metavar="DIR",
+                    help="trend view over a benchmarks/history archive "
+                         "(one <git-sha>/ entry per --ci run)")
+    ap.add_argument("--last", type=int, default=5,
+                    help="history entries to consider (default 5)")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="relative worsening that counts as a "
                          "regression (default 0.10 = 10%%)")
     args = ap.parse_args(argv)
     obs.configure_logging()
+    if args.compare and args.history:
+        ap.error("--compare and --history are mutually exclusive")
 
     if args.compare:
         try:
             n = compare_dirs(args.compare[0], args.compare[1],
                              threshold=args.threshold)
         except BenchSchemaError as e:
+            log.error("%s", e)
+            return 2
+        return 1 if n else 0
+    if args.history:
+        if args.last < 1:
+            ap.error("--last must be >= 1")
+        try:
+            n = history_trends(args.history, last=args.last,
+                               threshold=args.threshold)
+        except (BenchSchemaError, OSError) as e:
             log.error("%s", e)
             return 2
         return 1 if n else 0

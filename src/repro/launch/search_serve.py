@@ -14,6 +14,11 @@ CPU-scale usage (reduced workload):
                        # and the (argmin-shaped) matched windows
   PYTHONPATH=src python -m repro.launch.search_serve --trace trace.json
       # Chrome trace (chrome://tracing / perfetto) of every cascade stage
+  PYTHONPATH=src python -m repro.launch.search_serve --stream --rate 100
+      # live-traffic mode: Poisson arrivals of SINGLE queries through
+      # the StreamServer (continuous batching, deadlines, backpressure)
+      # instead of pre-formed chunks; --max-wait-ms / --max-batch /
+      # --workers / --deadline-ms expose the formation policy knobs
 
 The driver mirrors launch/serve.py: build the index once (normalized +
 cached layouts), then drive the SearchService over arriving chunks the
@@ -65,6 +70,20 @@ def main(argv=None):
                     help="write a Chrome trace (.json) or JSONL (.jsonl) "
                          "of the serve loop's spans")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="drive single-query Poisson arrivals through "
+                         "the StreamServer instead of pre-formed chunks")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="offered load in queries/second (--stream)")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="formation grid cap, SUBLANES multiple "
+                         "(--stream)")
+    ap.add_argument("--max-wait-ms", type=float, default=10.0,
+                    help="straggler flush deadline (--stream)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="session-pool sweep workers (--stream)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; omit for none (--stream)")
     args = ap.parse_args(argv)
     obs.configure_logging()
 
@@ -83,8 +102,11 @@ def main(argv=None):
     index = ReferenceIndex(spec=spec)
     for name, series in refs.items():
         index.add(name, series)
-    svc = SearchService(index, SearchConfig(
-        backend=args.backend, prune=not args.no_prune, windows=windows))
+    search = SearchConfig(backend=args.backend,
+                          prune=not args.no_prune, windows=windows)
+    if args.stream:
+        return _stream_main(args, index, search, queries, labels)
+    svc = SearchService(index, search)
 
     n = len(queries)
     log.info("[search] %d refs x %d samples, %d queries arriving in "
@@ -124,6 +146,62 @@ def main(argv=None):
     if args.trace:
         path = obs.save_trace(args.trace)
         print(f"[search] trace -> {path}")
+
+
+def _stream_main(args, index, search, queries, labels):
+    """--stream: single-query Poisson arrivals through the StreamServer."""
+    import numpy as np
+
+    from repro.serve import RejectedError, StreamConfig, StreamServer
+
+    config = StreamConfig(max_batch=args.max_batch,
+                          max_wait_ms=args.max_wait_ms,
+                          workers=args.workers,
+                          default_deadline_ms=args.deadline_ms)
+    rng = np.random.default_rng(args.seed)
+    gaps = rng.exponential(1.0 / args.rate, size=len(queries))
+    with StreamServer(index, config=config, search=search) as srv:
+        srv.warmup(sorted({len(q) for q in queries}), k=args.k)
+        log.info("[stream] %d queries at %.0f q/s offered, max_batch=%d "
+                 "max_wait=%.1fms workers=%d deadline=%s", len(queries),
+                 args.rate, args.max_batch, args.max_wait_ms,
+                 args.workers, args.deadline_ms)
+        futures, rejects = [], 0
+        t0 = time.perf_counter()
+        for i, q in enumerate(queries):
+            try:
+                futures.append((i, srv.submit(q, k=args.k)))
+            except RejectedError as e:
+                rejects += 1
+                time.sleep(e.retry_after_s)
+            time.sleep(float(gaps[i]))
+        responses = [(i, f.result(timeout=120.0)) for i, f in futures]
+        dt = time.perf_counter() - t0
+    ok = [(i, r) for i, r in responses if r.ok]
+    timeouts = sum(1 for _, r in responses if r.status == "timeout")
+    lat = sorted(r.latency_ms for _, r in ok)
+
+    def pct(p):
+        return lat[min(int(p * len(lat)), len(lat) - 1)] if lat else 0.0
+
+    hits = sum(r.hits[0].reference == labels[i] for i, r in ok)
+    print(f"[stream] offered {args.rate:.0f} q/s   goodput "
+          f"{len(ok) / dt:8.1f} q/s   top-1 hit-rate "
+          f"{hits / max(len(ok), 1):.0%}   timeouts {timeouts}   "
+          f"rejects {rejects}")
+    print(f"[stream] request latency ms: p50 {pct(0.50):.2f}  "
+          f"p95 {pct(0.95):.2f}  p99 {pct(0.99):.2f}  over "
+          f"{len(ok)} ok responses")
+    for i, r in [x for x in ok[:3]]:
+        best = ", ".join(
+            (f"{x.reference}[{x.start}..{x.end}] cost={x.cost:.3f}"
+             if x.start is not None else
+             f"{x.reference}@{x.end} cost={x.cost:.3f}")
+            for x in r.hits)
+        print(f"  q{i} ({labels[i]}): {best}")
+    if args.trace:
+        path = obs.save_trace(args.trace)
+        print(f"[stream] trace -> {path}")
 
 
 if __name__ == "__main__":

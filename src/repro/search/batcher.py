@@ -91,6 +91,49 @@ class QueryBatcher:
         self._buckets = {}
         return out
 
+    # ------------------------------------------------ streaming admission
+    # Hooks for the streaming server (repro.serve.stream): the batcher
+    # is its bucket store, so the server needs to flush ONE aged bucket
+    # (not all of them), drop expired requests, and inspect bucket
+    # heads to compute the next flush deadline.
+
+    def flush_bucket(self, length: int) -> QueryBatch | None:
+        """Emit one length's partially-filled bucket (grid-padded);
+        None when that bucket is empty or unknown — the age-based
+        flush of the streaming batch-formation policy."""
+        bucket = self._buckets.pop(length, None)
+        if not bucket:
+            return None
+        return self._emit(length, bucket)
+
+    def evict(self, predicate) -> list[tuple]:
+        """Remove (and return, as ``(qid, series)`` pairs) every queued
+        entry whose ``predicate(qid)`` is true — how the streaming
+        server strips deadline-expired requests out of open buckets
+        without emitting them.  Arrival order of survivors is kept."""
+        out = []
+        for length in list(self._buckets):
+            bucket = self._buckets[length]
+            kept = [(qid, s) for qid, s in bucket if not predicate(qid)]
+            if len(kept) != len(bucket):
+                out += [(qid, s) for qid, s in bucket if predicate(qid)]
+                if kept:
+                    self._buckets[length] = kept
+                else:
+                    del self._buckets[length]
+        return out
+
+    def oldest_ids(self) -> dict[int, object]:
+        """{length: qid of that bucket's oldest entry} — the inputs of
+        the age-based flush decision (serve.policy.due_flushes)."""
+        return {length: bucket[0][0]
+                for length, bucket in self._buckets.items() if bucket}
+
+    def queued_ids(self) -> list:
+        """Every queued qid, bucket by bucket in arrival order."""
+        return [qid for _, bucket in sorted(self._buckets.items())
+                for qid, _ in bucket]
+
     def pack(self, queries, ids=None) -> list[QueryBatch]:
         """One-shot convenience: add all then flush."""
         out = []

@@ -250,6 +250,17 @@ class SearchService:
         self.stats = SearchStats()
         self.last = SearchStats()
 
+    def warmup(self, m: int, batch: int = SUBLANES, k: int = 1) -> None:
+        """Precompile the sweep executables a (batch, m) query workload
+        would use: one seeded synthetic ``topk`` through the real path,
+        so a serving frontend (``repro.serve``) pays trace+compile
+        before live traffic instead of inside a request's latency
+        budget.  Results are discarded; stats/metrics tick as usual
+        (call :meth:`reset_stats` afterwards for clean accounting)."""
+        rng = np.random.default_rng(0)
+        q = rng.standard_normal((int(batch), int(m))).astype(np.float32)
+        self.topk(list(q), k=k)
+
     # ------------------------------------------------------------ topk
     def topk(self, queries, k: int = 1) -> list[list[Match]]:
         """queries: (B, M) array or sequence of 1-D arrays (any lengths).

@@ -1,2 +1,48 @@
-from repro.serve.engine import (make_prefill_step, make_decode_step,
-                                ServeConfig, generate)
+"""repro.serve — the streaming search service.
+
+The live-traffic layer over the repo's fast primitives: a
+:class:`StreamServer` admits ragged query arrivals onto the
+SUBLANES x 2^k bucket grid (flush on bucket-full OR max-wait, whichever
+first), dispatches formed batches through a fault-tolerant
+:class:`SessionPool` of precompiled ``SearchService`` workers, and
+resolves per-request futures with :class:`ServeResponse`\\ s whose hits
+are bit-identical to offline ``SearchService.topk``.  Robustness —
+per-request deadlines, bounded admission with retry-after backpressure,
+retry-once on transient sweep failure, graceful drain — is part of the
+contract and under test (``tests/test_stream_serve.py``); the load
+profile is benchmarked closed-loop under seeded Poisson arrivals
+(``benchmarks/serve_stream.py``).
+
+    from repro.search import ReferenceIndex
+    from repro.serve import StreamServer, StreamConfig
+
+    index = ReferenceIndex()
+    index.add("track0", series)
+    with StreamServer(index, config=StreamConfig(max_wait_ms=5)) as srv:
+        fut = srv.submit(query, k=3, deadline_ms=100)
+        resp = fut.result()          # ServeResponse(status="ok", hits=...)
+
+The seed-era LM generation stubs (``serve.engine`` prefill/decode,
+``serve.batcher`` token-slot continuous batching) remain importable
+from their submodules for the legacy model stack; this package's public
+surface is the search service.
+"""
+
+from repro.serve.faults import FaultPolicy, TransientSweepError
+from repro.serve.policy import StreamConfig, due_flushes
+from repro.serve.pool import SessionPool, SweepBatch
+from repro.serve.stream import (RejectedError, ServeResponse,
+                                ServerClosed, StreamServer)
+
+__all__ = [
+    "FaultPolicy",
+    "RejectedError",
+    "ServeResponse",
+    "ServerClosed",
+    "SessionPool",
+    "StreamConfig",
+    "StreamServer",
+    "SweepBatch",
+    "TransientSweepError",
+    "due_flushes",
+]

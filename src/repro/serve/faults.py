@@ -1,0 +1,86 @@
+"""Fault injection for the streaming search service.
+
+A serving loop earns its robustness claims only if the failure paths
+are *provable*: tests (and chaos drills) need a way to make a sweep
+fail or stall on demand, deterministically, without monkeypatching
+backend internals.  :class:`FaultPolicy` is that hook — the
+:class:`~repro.serve.pool.SessionPool` calls :meth:`FaultPolicy.on_dispatch`
+immediately before every sweep attempt, and the policy may
+
+  * **stall** it (``latency_s`` — sleeps before the sweep, the lever
+    for forcing per-request deadlines and admission-queue backpressure
+    to engage), and/or
+  * **fail** it (``fail_first`` / ``fail_when`` — raises
+    :class:`TransientSweepError`, which the pool retries once, or a
+    plain ``RuntimeError`` when ``fatal=True``, which it never
+    retries).
+
+The attempt counter is policy-global and thread-safe, so
+``fail_first=1`` means "the first dispatch attempt anywhere in the
+pool fails, its retry succeeds" — the exact shape of the retry-once
+tests in ``tests/test_stream_serve.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional
+
+
+class TransientSweepError(RuntimeError):
+    """A sweep failure the pool treats as retryable (exactly once per
+    batch).  Anything else raised from a sweep is permanent: the
+    batch's requests get well-formed ``status="error"`` responses."""
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    """Injectable failure/latency applied before every sweep attempt.
+
+    fail_first: the first N dispatch attempts (pool-wide) raise.
+    fail_when:  optional ``f(attempt_index) -> bool`` for arbitrary
+                failure schedules (attempt_index is 0-based, and counts
+                retries as fresh attempts).
+    latency_s:  every attempt sleeps this long before sweeping.
+    fatal:      injected failures raise ``RuntimeError`` instead of
+                :class:`TransientSweepError` — the pool must NOT retry.
+    """
+
+    fail_first: int = 0
+    fail_when: Optional[Callable[[int], bool]] = None
+    latency_s: float = 0.0
+    fatal: bool = False
+
+    def __post_init__(self):
+        if self.fail_first < 0:
+            raise ValueError(f"fail_first must be >= 0, got "
+                             f"{self.fail_first}")
+        if self.latency_s < 0:
+            raise ValueError(f"latency_s must be >= 0, got "
+                             f"{self.latency_s}")
+        self._lock = threading.Lock()
+        self._attempts = 0
+
+    @property
+    def attempts(self) -> int:
+        """Dispatch attempts seen so far (retries included)."""
+        with self._lock:
+            return self._attempts
+
+    def on_dispatch(self) -> None:
+        """Called by the pool before each sweep attempt; sleeps and/or
+        raises per the configured schedule."""
+        with self._lock:
+            idx = self._attempts
+            self._attempts += 1
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        fail = idx < self.fail_first or (self.fail_when is not None
+                                         and self.fail_when(idx))
+        if fail:
+            msg = f"injected sweep failure (attempt {idx})"
+            if self.fatal:
+                raise RuntimeError(msg)
+            raise TransientSweepError(msg)

@@ -1,0 +1,111 @@
+"""Batch-formation and admission policy for the streaming server.
+
+The paper's peak numbers come from fixed, well-shaped batches; a live
+stream is ragged and bursty.  The policy here is the standard
+continuous-batching compromise (AnySeq/GPU-style device saturation on
+the host side): per query length, requests accumulate in a bucket and
+the bucket flushes on whichever comes FIRST —
+
+  * **full** — the bucket reaches ``max_batch`` rows (the
+    SUBLANES x 2^k grid cap, so a full flush is a full grid, zero
+    padding), or
+  * **aged** — the bucket's *oldest* request has waited ``max_wait_ms``
+    (bounded latency for stragglers; the flush pads up to the grid).
+
+Admission is bounded: at most ``max_queue`` requests may be waiting
+(arrived or bucketed, not yet dispatched); past that the server
+rejects with an explicit retry-after instead of growing without bound.
+
+Everything here is pure data + pure functions (no clocks, no threads),
+so the flush decisions are unit-testable without racing a real event
+loop — the :class:`~repro.serve.stream.StreamServer` owns the clock
+and feeds ``now`` in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from repro.kernels.sdtw_wavefront import SUBLANES
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Knobs of the serving loop (see the module docstring for the
+    batch-formation semantics).
+
+    max_batch:     bucket-full flush threshold; must be a positive
+                   multiple of SUBLANES (it is also the grid cap every
+                   emitted batch is padded onto).
+    max_wait_ms:   oldest-arrival age that forces a flush of a
+                   partially-filled bucket.
+    max_queue:     admission bound — pending (not yet dispatched)
+                   requests beyond this are rejected with retry-after.
+    workers:       session-pool size (sweep threads; each owns its own
+                   SearchService over the shared index).
+    max_retries:   sweep retries on :class:`TransientSweepError`
+                   (default 1 = retry exactly once).
+    default_deadline_ms: per-request deadline applied when ``submit``
+                   gets none; None = requests never time out.
+    retry_after_ms: the retry-after advertised on rejects;
+                   None = ``max_wait_ms`` (one batch-formation period).
+    """
+
+    max_batch: int = 64
+    max_wait_ms: float = 20.0
+    max_queue: int = 1024
+    workers: int = 1
+    max_retries: int = 1
+    default_deadline_ms: float | None = None
+    retry_after_ms: float | None = None
+
+    def __post_init__(self):
+        if self.max_batch < SUBLANES or self.max_batch % SUBLANES:
+            raise ValueError(
+                f"max_batch must be a positive multiple of "
+                f"SUBLANES={SUBLANES}, got {self.max_batch}")
+        if self.max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got "
+                             f"{self.max_wait_ms}")
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got "
+                             f"{self.max_queue}")
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+        for name in ("default_deadline_ms", "retry_after_ms"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
+
+    @property
+    def max_wait_s(self) -> float:
+        return self.max_wait_ms / 1e3
+
+    @property
+    def retry_after_s(self) -> float:
+        ms = (self.max_wait_ms if self.retry_after_ms is None
+              else self.retry_after_ms)
+        return ms / 1e3
+
+
+def due_flushes(oldest: Mapping[int, float], now: float,
+                max_wait_s: float) -> tuple[list[int], float | None]:
+    """The age-based flush decision, pure.
+
+    ``oldest`` maps query length -> arrival time of that bucket's
+    oldest request.  Returns ``(due, wake_at)``: the lengths whose
+    buckets must flush NOW (oldest waited >= max_wait_s, ascending
+    length for determinism) and the earliest future instant any
+    remaining bucket comes due (None when nothing is pending).
+    Bucket-FULL flushes don't pass through here — they happen at
+    admission time, the moment the filling row arrives.
+    """
+    due = sorted(length for length, t0 in oldest.items()
+                 if now - t0 >= max_wait_s)
+    pending = [t0 + max_wait_s for length, t0 in oldest.items()
+               if now - t0 < max_wait_s]
+    return due, (min(pending) if pending else None)

@@ -1,0 +1,198 @@
+"""SessionPool — fault-tolerant sweep workers over precompiled sessions.
+
+One pool = N worker threads, each owning its OWN
+:class:`~repro.search.service.SearchService` built over one SHARED
+:class:`~repro.search.index.ReferenceIndex`.  Sharing the index means
+the expensive per-reference preparation (normalized series, swizzled
+kernel layouts, PAA envelopes) is paid once; giving each worker its own
+service means the per-call cascade state and per-reference
+:class:`~repro.core.session.Aligner` executables never race (a
+``SearchService`` is single-threaded by design — the pool is how it
+scales across threads).  Executable memory stays bounded: every
+session's jit cache is the LRU from PR 7 (``Aligner.max_executables``).
+
+Fault tolerance is the pool's contract, not the caller's problem:
+
+  * a sweep raising :class:`~repro.serve.faults.TransientSweepError`
+    is retried (``max_retries``, default exactly once) on the same
+    worker — counted in ``serve.retries``;
+  * any other exception (or an exhausted retry budget) completes the
+    batch with the error — the worker thread itself NEVER dies, so a
+    poisoned batch can't take pool capacity with it;
+  * every submitted batch reaches its ``on_result`` callback exactly
+    once (``(matches, error, attempts)``) — no dropped futures.
+
+``warmup()`` pushes a seeded synthetic batch per (query length, batch
+rows) shape through every worker's service, so the jit compiles land
+before live traffic does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import queue
+import threading
+from typing import Callable, Sequence
+
+from repro import obs
+from repro.kernels.sdtw_wavefront import SUBLANES
+from repro.search.index import ReferenceIndex
+from repro.search.service import SearchConfig, SearchService
+from repro.serve.faults import FaultPolicy, TransientSweepError
+
+log = logging.getLogger(__name__)
+
+_SHUTDOWN = object()
+
+
+@dataclasses.dataclass
+class SweepBatch:
+    """One unit of pool work: same-length queries, one top-k sweep.
+
+    ``on_result(matches, error, attempts)`` is called exactly once —
+    ``matches`` is the per-query ``list[list[Match]]`` on success (and
+    ``error`` None), or None with the exception on failure.
+    ``attempts`` counts sweep attempts (1 = no retry was needed)."""
+    queries: list
+    k: int
+    on_result: Callable
+    length: int = 0
+    rows: int = 0
+
+
+class SessionPool:
+    """``size`` sweep workers over one shared reference index."""
+
+    def __init__(self, index: ReferenceIndex, search: SearchConfig, *,
+                 size: int = 1, max_retries: int = 1,
+                 fault_policy: FaultPolicy | None = None,
+                 metrics: obs.MetricsRegistry | None = None,
+                 tracer: obs.Tracer | None = None):
+        if size < 1:
+            raise ValueError(f"pool size must be >= 1, got {size}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{max_retries}")
+        self.size = size
+        self.max_retries = max_retries
+        self.fault_policy = fault_policy
+        self._metrics = obs.default_registry() if metrics is None else \
+            metrics
+        self._tracer = obs.default_tracer() if tracer is None else tracer
+        # build the services eagerly: a capability/config error must
+        # surface at pool construction, not on the first live request
+        self._services = [SearchService(index, search,
+                                        metrics=self._metrics,
+                                        tracer=self._tracer)
+                          for _ in range(size)]
+        self._q: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._inflight = 0
+        self._closed = False
+        self._threads = [
+            threading.Thread(target=self._worker, args=(svc,),
+                             name=f"repro-serve-pool-{i}", daemon=True)
+            for i, svc in enumerate(self._services)]
+        for t in self._threads:
+            t.start()
+
+    # --------------------------------------------------------- serving
+    def submit(self, batch: SweepBatch) -> None:
+        """Enqueue one batch (admission bounds live upstream in the
+        StreamServer; the pool queue itself never rejects)."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("SessionPool is closed")
+            self._inflight += 1
+        self._q.put(batch)
+
+    @property
+    def inflight(self) -> int:
+        """Batches submitted but not yet completed."""
+        with self._lock:
+            return self._inflight
+
+    def join(self, timeout: float | None = None) -> bool:
+        """Block until every submitted batch has completed; returns
+        False on timeout."""
+        with self._idle:
+            return self._idle.wait_for(lambda: self._inflight == 0,
+                                       timeout=timeout)
+
+    def close(self) -> None:
+        """Stop the workers after in-flight batches finish.  Idempotent;
+        batches still queued ARE processed (drain the server first for
+        an orderly shutdown, or complete their futures yourself)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        for _ in self._threads:
+            self._q.put(_SHUTDOWN)
+        for t in self._threads:
+            t.join()
+
+    # ---------------------------------------------------------- warmup
+    def warmup(self, lengths: Sequence[int],
+               batches: Sequence[int] = (SUBLANES,), k: int = 1) -> int:
+        """Compile ahead of traffic: run one seeded synthetic batch per
+        (length, rows) shape through EVERY worker's service; returns the
+        number of warmup sweeps executed.  Call before serving — the
+        pool must be idle."""
+        n = 0
+        for svc in self._services:
+            for m in lengths:
+                for b in batches:
+                    svc.warmup(int(m), batch=int(b), k=k)
+                    n += 1
+        return n
+
+    # ---------------------------------------------------------- worker
+    def _worker(self, svc: SearchService) -> None:
+        while True:
+            batch = self._q.get()
+            if batch is _SHUTDOWN:
+                return
+            try:
+                self._run(svc, batch)
+            finally:
+                with self._idle:
+                    self._inflight -= 1
+                    self._idle.notify_all()
+
+    def _run(self, svc: SearchService, batch: SweepBatch) -> None:
+        attempts = 0
+        while True:
+            attempts += 1
+            try:
+                if self.fault_policy is not None:
+                    self.fault_policy.on_dispatch()
+                with self._tracer.span("serve.sweep",
+                                       length=batch.length,
+                                       rows=len(batch.queries),
+                                       attempt=attempts):
+                    matches = svc.topk(batch.queries, k=batch.k)
+            except TransientSweepError as e:
+                if attempts <= self.max_retries:
+                    self._metrics.inc("serve.retries")
+                    log.warning("transient sweep failure (attempt %d), "
+                                "retrying: %s", attempts, e)
+                    continue
+                self._finish(batch, None, e, attempts)
+                return
+            except Exception as e:           # permanent: never retried
+                self._finish(batch, None, e, attempts)
+                return
+            self._finish(batch, matches, None, attempts)
+            return
+
+    def _finish(self, batch, matches, error, attempts) -> None:
+        if error is not None:
+            log.error("sweep failed permanently after %d attempt(s): %s",
+                      attempts, error)
+        try:
+            batch.on_result(matches, error, attempts)
+        except Exception:                     # a bad callback must not
+            log.exception("on_result callback raised")  # kill the worker

@@ -26,6 +26,12 @@ keep the cache in memory only.  Writes are atomic (tmp + rename).  A
 corrupt or schema-mismatched file is REJECTED — logged and treated as
 empty, never trusted and never allowed to crash a dispatch — and the
 next :meth:`TuningCache.put` rewrites a valid document.
+
+Hygiene: verdicts whose stored machine fingerprint no longer hashes to
+the section's :func:`machine_key` (jax upgraded in place, device set
+changed, hand-migrated files) are AGED OUT on load — counted in the
+``tune.cache_expired`` obs counter and ``TuningCache.expired`` — so a
+stale measurement can never pick this machine's dispatch plan.
 """
 
 from __future__ import annotations
@@ -109,6 +115,9 @@ class TuningCache:
         self._lock = threading.Lock()
         self._entries: dict[str, dict] = {}
         self.rejected = False       # a corrupt/mismatched file was seen
+        self.expired = 0            # verdicts aged out on load (stored
+        #                             fingerprint drifted off machine_key;
+        #                             mirrored in ``tune.cache_expired``)
         if path is not None:
             self._entries = self._load(path)
 
@@ -142,6 +151,23 @@ class TuningCache:
         if not isinstance(entries, dict):
             self.rejected = True
             return {}
+        # cache hygiene: the section sits under our machine_key, but the
+        # FULL fingerprint stored alongside it must still hash back to
+        # that key — a hand-migrated file, a historical key scheme, or a
+        # jax upgrade that drifted the stored fingerprint all mean these
+        # verdicts were measured on a machine shape that no longer
+        # matches, so they age out rather than mis-tune dispatches
+        stored_fp = mine.get("fingerprint") if isinstance(mine, dict) \
+            else None
+        if entries and isinstance(stored_fp, dict) \
+                and machine_key(stored_fp) != self.machine:
+            self.expired += len(entries)
+            self._count_expired(len(entries))
+            log.warning(
+                "tuning cache %s: expired %d verdict(s) — stored "
+                "fingerprint (%s) no longer matches this machine (%s)",
+                path, len(entries), machine_key(stored_fp), self.machine)
+            return {}
         kept = {k: v for k, v in entries.items() if _valid_verdict(v)}
         dropped = len(entries) - len(kept)
         if dropped:
@@ -150,6 +176,16 @@ class TuningCache:
                         "entr%s", path, dropped,
                         "y" if dropped == 1 else "ies")
         return kept
+
+    @staticmethod
+    def _count_expired(n: int) -> None:
+        """Tick the process-wide ``tune.cache_expired`` counter (late
+        import: repro.obs must stay importable without repro.tune)."""
+        try:
+            from repro import obs
+            obs.default_registry().inc("tune.cache_expired", n)
+        except Exception:      # hygiene must never break a cache load
+            log.debug("could not record tune.cache_expired", exc_info=True)
 
     # ------------------------------------------------------- accessors
     def key(self, *, spec, m: int, n: int, batch_bucket: int,

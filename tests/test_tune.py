@@ -172,6 +172,49 @@ def test_malformed_entries_dropped(tmp_path):
         c.put("k", {"backend": "kernel", "segment_width": -1})
 
 
+def test_stale_fingerprint_entries_expire(tmp_path):
+    """Entries filed under this machine's key whose STORED fingerprint
+    no longer hashes back to it (e.g. a jax upgrade in place) age out
+    on load — counted in ``expired`` and ``tune.cache_expired``."""
+    path = tmp_path / "tuning.json"
+    mkey = tune.machine_key()
+    from repro.obs.bench import machine_fingerprint
+    stale_fp = dict(machine_fingerprint())
+    stale_fp["jax"] = "0.0.archaeology"      # drifts the machine_key
+    assert tune.machine_key(stale_fp) != mkey
+    path.write_text(json.dumps({
+        "schema": tune.TUNE_SCHEMA,
+        "machines": {mkey: {
+            "fingerprint": stale_fp,
+            "entries": {
+                "w1": {"backend": "kernel", "segment_width": 4},
+                "w2": {"backend": "engine", "segment_width": 2},
+            }}}}))
+    from repro import obs
+    before = obs.default_registry().value("tune.cache_expired")
+    c = tune.TuningCache(str(path))
+    assert len(c) == 0                       # nothing trusted
+    assert c.expired == 2
+    assert not c.rejected                    # hygiene, not corruption
+    assert obs.default_registry().value("tune.cache_expired") \
+        == before + 2
+    # a matching stored fingerprint is trusted as before
+    path.write_text(json.dumps({
+        "schema": tune.TUNE_SCHEMA,
+        "machines": {mkey: {
+            "fingerprint": dict(machine_fingerprint()),
+            "entries": {"w1": {"backend": "kernel",
+                               "segment_width": 4}}}}}))
+    c2 = tune.TuningCache(str(path))
+    assert c2.expired == 0 and list(c2.entries()) == ["w1"]
+    # legacy documents without a stored fingerprint keep working
+    path.write_text(json.dumps({
+        "schema": tune.TUNE_SCHEMA,
+        "machines": {mkey: {"entries": {
+            "w1": {"backend": "kernel", "segment_width": 4}}}}}))
+    assert list(tune.TuningCache(str(path)).entries()) == ["w1"]
+
+
 def test_cache_preserves_other_machines(tmp_path):
     path = str(tmp_path / "tuning.json")
     other = tune.TuningCache(path, fingerprint={"platform": "mars"})
