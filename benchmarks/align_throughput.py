@@ -25,9 +25,8 @@ BACKENDS = ("engine", "kernel", "ref")
 def run(*, full: bool = False, ci: bool = False, csv: list | None = None):
     import jax
     import jax.numpy as jnp
-    from repro.align import sdtw_window
     from repro.align.oracle import oracle_window
-    from repro.core.api import sdtw_batch
+    from repro.core.api import sdtw
 
     if ci:
         B, M, N, reps = 4, 12, 80, 1
@@ -46,14 +45,15 @@ def run(*, full: bool = False, ci: bool = False, csv: list | None = None):
               for b in range(B)] if (ci or not full) else None
     for backend in BACKENDS:
         def dist_only():
-            return jax.block_until_ready(sdtw_batch(
-                q, r, backend=backend, normalize=False,
-                segment_width=seg))
+            res = sdtw(q, r, backend=backend, normalize=False,
+                       segment_width=seg)
+            return jax.block_until_ready((res.cost, res.end))
 
         def windows():
-            return jax.block_until_ready(sdtw_window(
-                q, r, backend=backend, normalize=False,
-                segment_width=seg))
+            res = sdtw(q, r, outputs=("cost", "start", "end"),
+                       backend=backend, normalize=False,
+                       segment_width=seg)
+            return jax.block_until_ready(res.window())
 
         t0 = time_fn(dist_only, warmup=1, runs=reps)
         t1 = time_fn(windows, warmup=1, runs=reps)

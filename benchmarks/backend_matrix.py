@@ -45,7 +45,7 @@ def _specs(m: int, n: int):
 def run(full: bool = False, ci: bool = False, csv: list | None = None):
     import jax.numpy as jnp
     from repro.backends import registry
-    from repro.core.api import sdtw_batch
+    from repro.core.api import sdtw
 
     if ci:
         B, M, N = 4, 12, 80
@@ -75,8 +75,9 @@ def run(full: bool = False, ci: bool = False, csv: list | None = None):
                 continue
 
             def call():
-                return sdtw_batch(q, r, backend=name, spec=spec,
-                                  normalize=False, segment_width=4)
+                res = sdtw(q, r, backend=name, spec=spec,
+                           normalize=False, segment_width=4)
+                return res.cost, res.end
 
             if ci:
                 costs, ends = call()

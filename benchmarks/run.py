@@ -27,6 +27,9 @@ def main(argv=None):
                          "every BENCH_*.json")
     ap.add_argument("--kernel", action="store_true", default=True)
     ap.add_argument("--out", default="benchmarks/out")
+    ap.add_argument("--history-keep", type=int, default=20,
+                    help="in --ci: keep only the newest N sha entries "
+                         "under benchmarks/history/ (0 = keep all)")
     args = ap.parse_args(argv)
     if args.ci and args.full:
         ap.error("--ci and --full are mutually exclusive")
@@ -35,7 +38,7 @@ def main(argv=None):
     from benchmarks import train_step_bench, sdtw_scaling
     from benchmarks import search_throughput, backend_matrix
     from benchmarks import align_throughput, band_skip, aligner_session
-    from benchmarks import serve_stream
+    from benchmarks import serve_stream, soft_backward
 
     # (name, thunk(rows)) — in --ci mode only benches with a tiny
     # asserting mode run; the paper-workload sweeps are bench-only
@@ -67,6 +70,10 @@ def main(argv=None):
         # smoke that hard-asserts zero timeouts/rejects and served
         # results bit-identical to offline SearchService.topk
         ("serve_stream", lambda rows: serve_stream.run(
+            full=full, ci=ci, csv=rows)),
+        # soft_backward asserts fused-vs-engine gradient parity and the
+        # zero-O(M*N)-buffer memory contract in every mode
+        ("soft_backward", lambda rows: soft_backward.run(
             full=full, ci=ci, csv=rows)),
     ]
 
@@ -121,6 +128,11 @@ def main(argv=None):
         dest = _archive_history(written, args.out)
         if dest:
             print(f"archived {len(written)} BENCH docs -> {dest}")
+        removed = prune_history(keep=args.history_keep)
+        if removed:
+            print(f"pruned {len(removed)} old history entr"
+                  f"{'y' if len(removed) == 1 else 'ies'} "
+                  f"(--history-keep {args.history_keep})")
 
 
 def _archive_history(paths, out_dir,
@@ -144,6 +156,25 @@ def _archive_history(paths, out_dir,
     for p in paths:
         shutil.copy2(p, dest)
     return dest
+
+
+def prune_history(root: str = "benchmarks/history",
+                  keep: int = 20) -> list[str]:
+    """Drop all but the newest ``keep`` per-sha entries under ``root``
+    (newest by directory mtime — shas don't sort chronologically).
+    ``keep <= 0`` disables pruning.  Returns the removed entry names."""
+    import shutil
+    if keep <= 0 or not os.path.isdir(root):
+        return []
+    entries = [e for e in os.listdir(root)
+               if os.path.isdir(os.path.join(root, e))]
+    entries.sort(key=lambda e: os.path.getmtime(os.path.join(root, e)),
+                 reverse=True)
+    removed = []
+    for e in entries[keep:]:
+        shutil.rmtree(os.path.join(root, e))
+        removed.append(e)
+    return removed
 
 
 if __name__ == "__main__":

@@ -1,0 +1,144 @@
+"""Fused reverse-sweep soft-DTW backward vs grad-through-engine.
+
+The tentpole's perf claim: ``jax.grad`` of soft sDTW costs through the
+kernel backend's fused custom_vjp (checkpointed forward + reverse
+wavefront sweeps + tile-folded E, ``repro.kernels.backward``) against
+the oracle path that differentiates straight through the engine's
+O(M*N) cost-matrix sweep.  Two signals per shape:
+
+  * wall-clock of one gradient evaluation (block_until_ready), and
+  * a peak-memory proxy: how many buffers of >= B*M*N elements each
+    traced computation materializes (counted on the jaxpr, sub-jaxprs
+    included) plus the largest single buffer.  The fused path must
+    count ZERO such buffers — its residuals are boundary strips and
+    (B, M, W) tiles — while grad-through-engine necessarily holds the
+    skewed cost tensor.
+
+  PYTHONPATH=src python -m benchmarks.soft_backward
+  PYTHONPATH=src python -m benchmarks.soft_backward --ci   # tiny, asserts
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import time_fn
+
+
+def _iter_jaxprs(jaxpr):
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for val in eqn.params.values():
+            for leaf in (val if isinstance(val, (list, tuple)) else [val]):
+                inner = getattr(leaf, "jaxpr", leaf)
+                if hasattr(inner, "eqns"):
+                    yield from _iter_jaxprs(inner)
+
+
+def _buffer_stats(fn, arg, threshold: int):
+    """(number of traced buffers >= threshold elements, largest buffer)."""
+    import jax
+    closed = jax.make_jaxpr(fn)(arg)
+    count, biggest = 0, 0
+    for jx in _iter_jaxprs(closed.jaxpr):
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                shape = getattr(getattr(v, "aval", None), "shape", None)
+                if shape is None:
+                    continue
+                elems = int(np.prod(shape, dtype=int))
+                biggest = max(biggest, elems)
+                if elems >= threshold:
+                    count += 1
+    return count, biggest
+
+
+def run(*, full: bool = False, ci: bool = False, csv: list | None = None):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.engine import sdtw_engine
+    from repro.core.spec import DPSpec
+    from repro.kernels.backward import sdtw_soft_fused
+
+    # N is sized to span several kernel blocks (W = 128 * seg)
+    if ci:
+        shapes, seg, reps = [(4, 16, 600)], 2, 1
+    elif full:
+        shapes, seg, reps = [(64, 128, 4096), (256, 256, 8192)], 8, 3
+    else:
+        shapes, seg, reps = [(16, 64, 2048)], 4, 3
+    gamma = 0.5
+    spec = DPSpec(reduction="softmin", gamma=gamma)
+    rng = np.random.default_rng(0)
+
+    print(f"[soft_backward] gamma={gamma} seg={seg} "
+          f"({'ci' if ci else 'full' if full else 'reduced'})")
+    if jax.default_backend() == "cpu":
+        print("  [note] CPU run: the fused sweeps execute in Pallas "
+              "interpret mode (emulation), so wall-clock favors the "
+              "engine; the speedup column is meaningful on TPU only. "
+              "Parity and the O(M*N)-buffer counts hold everywhere.")
+    metrics: dict[str, float] = {}
+    for B, M, N in shapes:
+        q = jnp.asarray(rng.normal(size=(B, M)).astype(np.float32))
+        r = jnp.asarray(rng.normal(size=(N,)).astype(np.float32))
+
+        grad_fused = jax.jit(jax.grad(lambda x: sdtw_soft_fused(
+            x, r, spec=spec, segment_width=seg)[0].sum()))
+        grad_engine = jax.jit(jax.grad(lambda x: sdtw_engine(
+            x, r, spec=spec, return_end=False).sum()))
+
+        t_fused = time_fn(lambda: grad_fused(q), warmup=1, runs=reps)
+        t_engine = time_fn(lambda: grad_engine(q), warmup=1, runs=reps)
+        speedup = t_engine / t_fused if t_fused > 0 else float("nan")
+
+        mn = B * M * N
+        fused_bufs, fused_peak = _buffer_stats(
+            lambda x: jax.grad(lambda y: sdtw_soft_fused(
+                y, r, spec=spec, segment_width=seg)[0].sum())(x), q, mn)
+        eng_bufs, eng_peak = _buffer_stats(
+            lambda x: jax.grad(lambda y: sdtw_engine(
+                y, r, spec=spec, return_end=False).sum())(x), q, mn)
+
+        gf = np.asarray(grad_fused(q))
+        ge = np.asarray(grad_engine(q))
+        err = float(np.max(np.abs(gf - ge)))
+        print(f"  B={B:3d} M={M:3d} N={N:5d}: fused {t_fused * 1e3:8.2f} ms"
+              f"   engine-grad {t_engine * 1e3:8.2f} ms"
+              f"   speedup {speedup:5.2f}x   max|dg| {err:.2e}")
+        print(f"      >=MN buffers: fused {fused_bufs} "
+              f"(peak {fused_peak / mn:.2f} MN)   engine {eng_bufs} "
+              f"(peak {eng_peak / mn:.2f} MN)")
+        assert err < 1e-4, ("fused backward disagrees with the engine "
+                            "gradient oracle", err)
+        assert fused_bufs == 0, (
+            "fused gradient path materialized an O(M*N) buffer",
+            fused_bufs, fused_peak)
+        assert eng_bufs >= 1, "oracle lost its cost matrix? bench is stale"
+        if csv is not None:
+            csv.append({"bench": "soft_backward", "B": B, "M": M, "N": N,
+                        "ms_fused": round(t_fused * 1e3, 3),
+                        "ms_engine_grad": round(t_engine * 1e3, 3),
+                        "speedup": round(speedup, 3),
+                        "mn_buffers_fused": fused_bufs,
+                        "mn_buffers_engine": eng_bufs,
+                        "max_grad_err": err})
+        key = f"B{B}_M{M}_N{N}"
+        metrics[f"ms_fused_{key}"] = round(t_fused * 1e3, 3)
+        metrics[f"ms_engine_grad_{key}"] = round(t_engine * 1e3, 3)
+        metrics[f"speedup_{key}"] = round(speedup, 3)
+        metrics[f"mn_buffers_fused_{key}"] = fused_bufs
+    if ci:
+        print("  gradients == engine oracle, 0 O(M*N) fused buffers "
+              "(ci asserts)")
+    return metrics
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ci", action="store_true")
+    args = ap.parse_args()
+    run(full=args.full, ci=args.ci)

@@ -5,7 +5,7 @@ SearchService WHERE each query best aligns — every hit carries its
 matched reference window ``track[start..end]`` (start pointers riding
 the DP sweeps, repro.align), the pruning cascade skips most full DP
 sweeps, and the result is *exactly* the brute-force answer
-(cross-checked below against a plain sdtw_batch loop on every backend).
+(cross-checked below against a plain repro.sdtw loop on every backend).
 
   PYTHONPATH=src python examples/sdtw_search.py
   PYTHONPATH=src python examples/sdtw_search.py --backend kernel
@@ -56,7 +56,7 @@ def main():
     want = brute_force_topk(index, queries, k=args.k, backend=args.backend,
                             windows=True)
     assert matches == want, "service result differs from brute force!"
-    print(f"verified: identical to the brute-force sdtw_batch loop, "
+    print(f"verified: identical to the brute-force repro.sdtw loop, "
           f"windows included ({len(index)} refs x {len(queries)} queries, "
           f"k={args.k})")
 

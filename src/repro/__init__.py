@@ -17,13 +17,11 @@ until an entry point is actually touched.
 
 __version__ = "1.1.0"
 
-__all__ = ["sdtw", "sdtw_batch", "sdtw_search", "Aligner", "SDTWResult",
+__all__ = ["sdtw", "Aligner", "SDTWResult",
            "DPSpec", "ALL_OUTPUTS", "tune"]
 
 _LAZY = {
     "sdtw": ("repro.core.api", "sdtw"),
-    "sdtw_batch": ("repro.core.api", "sdtw_batch"),
-    "sdtw_search": ("repro.core.api", "sdtw_search"),
     "Aligner": ("repro.core.session", "Aligner"),
     "SDTWResult": ("repro.core.result", "SDTWResult"),
     "ALL_OUTPUTS": ("repro.core.result", "ALL_OUTPUTS"),

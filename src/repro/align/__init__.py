@@ -4,21 +4,21 @@ The layer that turns the repo from a distance calculator into an
 aligner.  Since the request/result front door, every artifact here is
 an ``outputs`` name on ``repro.sdtw`` / ``repro.Aligner`` — validated
 through the registry's ``Capabilities.outputs`` axis — and this module
-holds the machinery (plus the historical tuple entry points):
+holds the machinery:
 
-  * **windows** (``outputs=("cost", "start", "end")``; tuple shim
-    ``sdtw_window``) — start-pointer propagation inside the SAME
-    O(M)-memory fused sweep every backend already runs
-    (``DPSpec.start3``; int32 lanes riding the Pallas wavefront
-    carries on the kernel path);
+  * **windows** (``outputs=("cost", "start", "end")``) — start-pointer
+    propagation inside the SAME O(M)-memory fused sweep every backend
+    already runs (``DPSpec.start3``; int32 lanes riding the Pallas
+    wavefront carries on the kernel path);
   * **paths** (``outputs=("path",)``; ``warping_path`` /
     ``warping_paths``) — the full alignment via Hirschberg
     divide-and-conquer over the matched window, O(M + N) memory;
   * **soft alignments** (``outputs=("soft_alignment",)``;
     ``expected_alignment``) — the smoothed alignment matrix of softmin
-    specs via ``jax.grad`` through a cost-matrix engine sweep;
-    ``soft_costs`` is the registry-routed forward path (the Pallas
-    kernel's soft-min channel on TPU).
+    specs via ``jax.grad`` through a cost-matrix engine sweep on XLA
+    backends, or the fused forward+reverse wavefront pair
+    (``repro.kernels.backward``) on the Pallas kernel;
+    ``soft_costs`` is the registry-routed forward path.
 
 ``repro.align.oracle`` holds the full-matrix numpy backtrack ground
 truth the fast paths are tested against (shared tie-break contract).
@@ -29,10 +29,10 @@ from repro.align.soft import (cost_matrix, expected_alignment,
                               row_position_distribution,
                               sdtw_soft_from_costs, soft_costs)
 from repro.align.traceback import warping_path, warping_paths
-from repro.align.window import sdtw_window, window_arrays
+from repro.align.window import window_arrays
 
 __all__ = [
-    "sdtw_window", "window_arrays",
+    "window_arrays",
     "warping_path", "warping_paths",
     "expected_alignment", "row_position_distribution",
     "cost_matrix", "sdtw_soft_from_costs", "soft_costs",

@@ -20,8 +20,10 @@ where-is-row-i distribution over reference columns.
 indices through the backend registry, so TPU-capable configs
 auto-select the Pallas wavefront kernel's soft-min carry channel
 (``repro.kernels.wavefront.SoftMinFold``) and soft alignment scoring
-runs at kernel speed.  ``expected_alignment`` stays on the
-``jax.grad``-through-the-engine path — the kernel is forward-only.
+runs at kernel speed.  ``expected_alignment`` defaults to the
+``jax.grad``-through-the-engine path; ``backend="kernel"`` routes it
+through the fused forward+reverse wavefront pair instead
+(``repro.kernels.backward``) — same E, no O(M·N) engine sweep.
 """
 
 from __future__ import annotations
@@ -130,13 +132,20 @@ def _expected_alignment_jit(C, *, spec):
 
 def expected_alignment(queries, reference, *,
                        spec: DPSpec | None = None,
-                       normalize: bool = True) -> jnp.ndarray:
+                       normalize: bool = True,
+                       backend: str | None = None,
+                       segment_width: int = 8,
+                       interpret: bool | None = None) -> jnp.ndarray:
     """The (B, M, N) expected alignment matrices of a softmin spec.
 
     ``E[b, i, j]`` is the probability (Gibbs weight at temperature
     ``gamma``) that query ``b``'s alignment visits cell (i, j) — the
-    soft analogue of the hard path indicator, batched through one
-    ``jax.grad`` of the cost-matrix engine sweep.
+    soft analogue of the hard path indicator.  ``backend=None`` or
+    ``"engine"`` batches one ``jax.grad`` through the cost-matrix
+    engine sweep; ``backend="kernel"`` runs the fused checkpointed
+    forward+reverse wavefront pair (``repro.kernels.backward``) —
+    identical E at kernel speed (``segment_width`` / ``interpret``
+    apply there).
     """
     spec = DEFAULT_SPEC if spec is None else spec
     if not spec.soft:
@@ -144,11 +153,20 @@ def expected_alignment(queries, reference, *,
             "expected_alignment needs a softmin spec (reduction="
             "'softmin'); hard-min alignment lives in repro.align.window "
             "/ repro.align.traceback")
+    if backend not in (None, "engine", "kernel"):
+        raise ValueError(f"expected_alignment backend must be None, "
+                         f"'engine' or 'kernel', got {backend!r}")
     q = jnp.asarray(queries)
     r = jnp.asarray(reference)
     if normalize:
         q = normalize_batch(q)
         r = normalize_batch(r)
+    if backend == "kernel":
+        from repro.kernels.backward import soft_alignment_fused
+        _, _, E = soft_alignment_fused(q, r, spec=spec,
+                                       segment_width=segment_width,
+                                       interpret=interpret)
+        return E
     C = cost_matrix(q, r, spec).astype(spec.accum)
     return _expected_alignment_jit(C, spec=spec)
 

@@ -169,7 +169,7 @@ def warping_path(query, reference, *, spec: DPSpec | None = None,
 
     ``window=(start, end)`` skips the window sweep (e.g. when the
     endpoints already came from ``SearchService.topk`` hits or a batched
-    ``sdtw_window`` call); otherwise one window sweep runs through
+    window request); otherwise one window sweep runs through
     ``backend`` (None = first window-capable).  Hard-min specs only —
     soft-min paths are distributions, see ``repro.align.soft``.
     """

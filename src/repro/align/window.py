@@ -1,7 +1,6 @@
-"""Matched-window extraction — WHERE a query aligns, not just how well.
+"""Matched-window helpers — WHERE a query aligns, not just how well.
 
-``sdtw_window`` is the DEPRECATED tuple shim for window requests: the
-typed front door is
+Window requests go through the typed front door:
 
     res = repro.sdtw(queries, reference,
                      outputs=("cost", "start", "end"))
@@ -23,42 +22,6 @@ alignment matrix instead.
 from __future__ import annotations
 
 import jax.numpy as jnp
-
-from repro.core.api import sdtw
-from repro.core.spec import DPSpec, resolve_spec
-
-
-def sdtw_window(queries, reference, *, normalize: bool = True,
-                backend: str | None = None,
-                spec: DPSpec | None = None,
-                distance: str | None = None,
-                band: int | None = None,
-                segment_width: int = 8,
-                interpret: bool | None = None,
-                options: dict | None = None):
-    """DEPRECATED tuple shim over ``repro.sdtw(outputs=("cost",
-    "start", "end"))``.
-
-    queries: (B, M); reference: (N,).
-    Returns (costs (B,), starts (B,), ends (B,)): query ``b``'s best
-    alignment covers ``reference[starts[b] : ends[b] + 1]`` inclusive.
-
-    ``backend=None`` (the default) picks the first window-capable
-    backend so serving code never has to know which engines carry
-    start pointers.  Hard-min specs only.
-    """
-    resolved = resolve_spec(spec, distance=distance, band=band)
-    if resolved.soft:
-        raise ValueError(
-            "sdtw_window needs a hard-min spec: soft-min smooths over "
-            "every path, so there is no argmin window — use "
-            "repro.align.soft.expected_alignment for the smoothed "
-            "alignment matrix")
-    res = sdtw(queries, reference, outputs=("cost", "start", "end"),
-               normalize=normalize, backend=backend, spec=resolved,
-               segment_width=segment_width, interpret=interpret,
-               options=options)
-    return res.window()
 
 
 def window_arrays(starts, ends):

@@ -26,7 +26,8 @@ _BOTH = frozenset({"hardmin", "softmin"})
 # outputs tiers: every backend fulfills cost/end requests; window-capable
 # backends add start (+path, whose traceback is pinned by the window);
 # differentiable backends also serve soft_alignment (jax.grad through
-# the cost-matrix engine sweep in repro.align.soft).
+# the cost-matrix engine sweep in repro.align.soft, or the fused
+# reverse-sweep pair in repro.kernels.backward on the kernel backend).
 _COST_END = frozenset({"cost", "end"})
 _WINDOWED = _COST_END | {"start", "path"}
 _FULL = _WINDOWED | {"soft_alignment"}
@@ -90,6 +91,16 @@ def _exec_kernel(spec, plan):
             batch=int(plan.queries.shape[0]), spec=spec,
             outputs=plan.outputs, backends=("kernel",),
             interpret=plan.interpret).segment_width
+    if spec.soft and "start" not in plan.outputs:
+        # soft specs dispatch through the fused custom_vjp so jax.grad
+        # of the returned cost routes into the reverse-sweep backward
+        # instead of failing on the opaque pallas_call
+        from repro.kernels import backward
+        return from_sweep(
+            backward.sdtw_soft_fused(
+                plan.queries, plan.reference, spec=spec,
+                segment_width=width, interpret=plan.interpret),
+            plan.outputs)
     return from_sweep(
         ops.sdtw_wavefront(
             plan.queries, plan.reference,
@@ -104,15 +115,16 @@ register(Backend(
         # no cosine: PAD_VALUE reference padding only dominates costs
         # that grow with |q - r| (see the sentinel notes in core.spec).
         # soft-min runs the carry-channel executor's running-logsumexp
-        # fold (repro.kernels.wavefront.SoftMinFold) — forward only,
-        # so the backend still is not differentiable and cannot serve
-        # soft_alignment requests.
+        # fold (repro.kernels.wavefront.SoftMinFold); gradients and
+        # soft_alignment route through the fused reverse-sweep
+        # custom_vjp (repro.kernels.backward) — checkpointed forward +
+        # reverse wavefronts, never an O(M*N) buffer on the grad path.
         distances=frozenset({"sqeuclidean", "abs"}), reductions=_BOTH,
-        banding=True, differentiable=False, per_query_reference=False,
-        exact=True, outputs=_WINDOWED,
+        banding=True, differentiable=True, per_query_reference=False,
+        exact=True, outputs=_FULL,
         device="tpu (interpret=True elsewhere)",
-        notes="Pallas wavefront kernel (hard+soft, band-skip grids); "
-              "shared 1-D reference only"),
+        notes="Pallas wavefront kernel (hard+soft, band-skip grids, "
+              "fused reverse-sweep backward); shared 1-D reference only"),
     execute=_exec_kernel,
 ))
 

@@ -57,8 +57,9 @@ class Capabilities:
     #   produces "cost"/"end"; "start" means matched-window start
     #   pointers propagate through the SAME sweep (hard-min specs only);
     #   "path" rides on "start" (Hirschberg traceback above the sweep);
-    #   "soft_alignment" needs a differentiable engine underneath
-    #   (jax.grad through the cost-matrix sweep, soft-min specs only)
+    #   "soft_alignment" needs a differentiable backward underneath
+    #   (jax.grad through the cost-matrix sweep, or the kernel's fused
+    #   reverse sweep; soft-min specs only)
     device: str = "any"            # human-readable requirement
     notes: str = ""
 
@@ -216,9 +217,9 @@ def capable(spec: DPSpec, *, exact_only: bool = False,
     the kernel leads on TPU, the engine elsewhere).
 
     ``differentiable=True`` keeps only backends declaring NaN-free
-    gradients — gradient callers need this on TPU, where plain
-    auto-selection prefers the (forward-only) Pallas kernel for
-    soft-min specs.
+    gradients.  The Pallas kernel qualifies for soft-min specs: its
+    costs carry the fused reverse-sweep custom_vjp
+    (repro.kernels.backward), so jax.grad works at kernel speed.
     """
     _ensure_builtins()
     ordered = [n for n in _priority() if n in _REGISTRY]

@@ -6,7 +6,7 @@ One declarative recurrence (``DPSpec``), many engines (see
 ``repro`` top level).
 """
 
-from repro.core.api import sdtw, sdtw_batch, sdtw_search
+from repro.core.api import sdtw
 from repro.core.engine import sdtw_engine
 from repro.core.normalize import normalize_batch
 from repro.core.ref import sdtw_ref, sdtw_numpy, dtw_global_numpy
@@ -17,7 +17,7 @@ from repro.core.spec import DEFAULT_SPEC, DPSpec, resolve_spec
 
 __all__ = [
     "sdtw", "SDTWResult", "Aligner", "ALL_OUTPUTS",
-    "sdtw_batch", "sdtw_search", "sdtw_engine", "normalize_batch",
+    "sdtw_engine", "normalize_batch",
     "sdtw_ref", "sdtw_numpy", "dtw_global_numpy", "sdtw_soft",
     "DPSpec", "DEFAULT_SPEC", "resolve_spec",
 ]

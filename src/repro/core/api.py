@@ -33,19 +33,17 @@ the registry pick the first capable backend for the spec + outputs.
 
 The sweep-level outputs (cost, end, start) all come from a SINGLE
 fused sweep — requesting windows never runs a second pass after a cost
-pass.  ``path`` and ``soft_alignment`` are derived above the sweep
-(Hirschberg traceback over the matched window; ``jax.grad`` through
-the cost-matrix engine sweep).
+pass.  ``path`` is derived above the sweep (Hirschberg traceback over
+the matched window).  ``soft_alignment`` is ``jax.grad`` through the
+cost-matrix engine sweep — except on the kernel backend, where it
+comes from the fused forward+reverse wavefront pair
+(``repro.kernels.backward``) in the same dispatch as cost/end.
 
 Serving many batches against one reference?  Use
 :class:`repro.Aligner` (``repro.core.session``) — the precompiled
 session form of this call: the reference is normalized once, kernel
 layouts are cached, and jitted executables are memoized per
 (batch shape, outputs) so warm calls are dispatch-only.
-
-``sdtw_batch`` / ``sdtw_search`` (and ``repro.align.sdtw_window``)
-remain as thin deprecation shims over :func:`sdtw` returning the
-historical tuples.
 """
 
 from __future__ import annotations
@@ -87,7 +85,9 @@ def _derive_outputs(res: SDTWResult, req: frozenset, queries, reference,
             for b, (s, e) in enumerate(zip(np.asarray(res.start),
                                            np.asarray(res.end)))]
         res = res.replace(path=paths)
-    if "soft_alignment" in req:
+    if "soft_alignment" in req and res.soft_alignment is None:
+        # the kernel backend's fused dispatch already filled this in;
+        # everything else differentiates the engine's cost matrix
         from repro.align.soft import _expected_alignment_jit, cost_matrix
         C = cost_matrix(queries, reference, spec).astype(spec.accum)
         res = res.replace(
@@ -199,7 +199,17 @@ def sdtw(queries, reference, *,
     if normalize:
         queries = normalize_batch(queries)
         reference = normalize_batch(reference)
-    if req - {"soft_alignment"}:
+    fused_soft = (backend_impl.name == "kernel" and resolved.soft
+                  and "soft_alignment" in req)
+    if fused_soft:
+        # one fused forward+reverse dispatch fills cost, end AND the
+        # expected alignment — no engine cost matrix, no second sweep
+        from repro.kernels.backward import soft_alignment_fused
+        cost, end, E = soft_alignment_fused(
+            queries, reference, spec=resolved,
+            segment_width=segment_width, interpret=interpret)
+        res = SDTWResult(cost=cost, end=end, soft_alignment=E)
+    elif req - {"soft_alignment"}:
         plan = registry.ExecutionPlan(
             queries=queries, reference=reference,
             segment_width=segment_width, interpret=interpret,
@@ -211,54 +221,3 @@ def sdtw(queries, reference, *,
         res = SDTWResult()
     res = _derive_outputs(res, req, queries, reference, resolved)
     return res.restrict(req)
-
-
-# --------------------------------------------------- deprecation shims
-# The positional-tuple entry points the repo grew up with.  They are
-# thin shims over :func:`sdtw` now — same sweeps, same backends, same
-# numbers — kept so existing callers and tests work unchanged.  New
-# code should call ``repro.sdtw`` (or build a ``repro.Aligner``).
-
-def sdtw_batch(queries, reference, *, normalize: bool = True,
-               backend: str | None = "engine",
-               spec: DPSpec | None = None,
-               distance: str | None = None,
-               reduction: str | None = None,
-               gamma: float | None = None,
-               band: int | None = None,
-               segment_width: int | str = 8,
-               interpret: bool | None = None,
-               return_window: bool = False,
-               options: dict | None = None):
-    """DEPRECATED tuple shim over :func:`sdtw`.
-
-    Returns ``(costs (B,), end_idx (B,))`` — or
-    ``(costs, starts, ends)`` when ``return_window`` — exactly as it
-    always did.  Equivalent new call::
-
-        res = repro.sdtw(queries, reference,
-                         outputs=("cost", "start", "end"))   # windows
-        res.cost, res.start, res.end
-    """
-    res = sdtw(queries, reference,
-               outputs=(("cost", "start", "end") if return_window
-                        else ("cost", "end")),
-               normalize=normalize, backend=backend, spec=spec,
-               distance=distance, reduction=reduction, gamma=gamma,
-               band=band, segment_width=segment_width,
-               interpret=interpret, options=options)
-    if return_window:
-        return res.cost, res.start, res.end
-    return res.cost, res.end
-
-
-def sdtw_search(query, reference, **kw):
-    """DEPRECATED single-query tuple shim over :func:`sdtw_batch`.
-
-    Returns scalars — ``(cost, end)``, or ``(cost, start, end)`` when
-    ``return_window=True`` (this used to crash on the 3-tuple; it is
-    shape-stable through :class:`SDTWResult` now).
-    """
-    q = jnp.asarray(query)[None, :]
-    out = sdtw_batch(q, reference, **kw)
-    return tuple(x[0] for x in out)

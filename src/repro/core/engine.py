@@ -72,7 +72,7 @@ def sdtw_engine(queries: jnp.ndarray,
     returns:   costs (B,) [, end_indices (B,)], or (costs, starts, ends)
                when ``return_window``
 
-    Input validation lives in ``core.api.sdtw_batch`` /
+    Input validation lives in ``core.api.sdtw`` /
     ``search.SearchService`` (the shared validator in ``core.spec``);
     this function assumes well-shaped arrays.
     """

@@ -1,7 +1,7 @@
 """SDTWResult — ONE typed result for every sDTW request.
 
 The public surface used to speak in positional tuples whose arity
-depended on what was asked for: ``sdtw_batch`` returned ``(cost, end)``
+depended on what was asked for: the old tuple API returned ``(cost, end)``
 or ``(cost, start, end)`` depending on ``return_window``, and every
 additional artifact (paths, soft alignments) lived behind its own
 entry point.  :class:`SDTWResult` replaces all of that with a frozen

@@ -155,9 +155,8 @@ class Aligner:
         # ``outputs`` is a selection HINT: with backend=None it steers
         # auto-selection toward a backend that can fulfill the outputs
         # this session will be asked for (matching repro.sdtw's
-        # auto-fallback — e.g. soft_alignment requests skip the
-        # forward-only kernel on TPU).  Per-call requests still
-        # re-validate in _build.
+        # auto-fallback — e.g. path requests skip window-less
+        # backends).  Per-call requests still re-validate in _build.
         hint = None if outputs is None else normalize_outputs(outputs)
         if backend is None:
             self.backend, self.spec = registry.select(resolved,
@@ -289,11 +288,37 @@ class Aligner:
         sweep = sweep_outputs(req)
         stats = self.stats
         metrics = self._metrics
+        fused = self._fused(req)
         # derived requests (path / soft_alignment) get their queries
         # normalized ONCE, eagerly, in align() — both the sweep and the
         # derivation consume the same batch, so the closure must not
-        # normalize again
-        pre_normalized = bool(req & {"path", "soft_alignment"})
+        # normalize again.  The kernel's FUSED soft_alignment is not
+        # derived — it is its own executable, normalizing inside.
+        pre_normalized = bool(req & {"path", "soft_alignment"}) \
+            and not fused
+
+        if fused:
+            # soft_alignment on the kernel backend: ONE memoized
+            # executable runs the checkpointed forward+reverse pair
+            # (repro.kernels.backward) and fills cost/end/E together —
+            # no engine cost matrix, no derivation pass
+            from repro.kernels import backward
+            w = self.resolved_width(batch_shape, req)
+            interp, spec = self.interpret, self.spec
+            reference = self.reference
+            norm = self.normalize
+
+            def run_fused(q):
+                stats.traces += 1
+                metrics.inc("aligner.traces")
+                if norm:
+                    q = normalize_batch(q)
+                cost, end, E = backward.soft_alignment_fused(
+                    q, reference, spec=spec, segment_width=w,
+                    interpret=interp)
+                return SDTWResult(cost=cost, end=end, soft_alignment=E)
+
+            return jax.jit(run_fused), True
 
         if self.backend.name == "kernel":
             # the session's whole point on the kernel path: the layout
@@ -354,6 +379,12 @@ class Aligner:
 
         return jax.jit(run), True
 
+    def _fused(self, req: frozenset) -> bool:
+        """Does this request dispatch the kernel's fused forward+reverse
+        soft-alignment executable (vs deriving E above the sweep)?"""
+        return (self.backend.name == "kernel" and self.spec.soft
+                and "soft_alignment" in req)
+
     # -------------------------------------------------------- serving
     def align(self, queries, *, outputs=DEFAULT_OUTPUTS) -> SDTWResult:
         """Align one query batch. queries: (B, M).
@@ -370,13 +401,14 @@ class Aligner:
         self.stats.calls += 1
         m = self._metrics
         m.inc("aligner.calls")
-        derived = bool(req & {"path", "soft_alignment"})
+        fused = self._fused(req)
+        derived = bool(req & {"path", "soft_alignment"}) and not fused
         if derived and self.normalize:
             # normalize ONCE for both the sweep and the derivation
             # (the executable for a derived request skips its fused
             # normalize — see _build's pre_normalized)
             queries = normalize_batch(queries)
-        if req - {"soft_alignment"}:
+        if (req - {"soft_alignment"}) or fused:
             key = (queries.shape, jnp.dtype(queries.dtype).name, req)
             with self._fns_lock:
                 entry = self._fns.get(key)

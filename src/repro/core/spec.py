@@ -29,7 +29,7 @@ recurrence a *value* that every backend consumes:
   * ``accum_dtype``— the accumulator dtype of the DP sweep.
 
 Backends declare which corners of this space they support via
-``repro.backends.registry.Capabilities``; ``repro.core.api.sdtw_batch``
+``repro.backends.registry.Capabilities``; ``repro.core.api.sdtw``
 resolves a spec, asks the registry for a capable backend, and executes.
 
 The helpers here (``cell_cost``, ``reduce3``, ``cell_update``,
@@ -248,14 +248,14 @@ def resolve_spec(spec: DPSpec | None = None, *, distance: str | None = None,
 
 # --------------------------------------------------- shared validation
 # One home for the input checks that used to be duplicated between
-# ``core.api.sdtw_batch``, ``core.engine`` and ``search.SearchService``.
+# ``core.api.sdtw``, ``core.engine`` and ``search.SearchService``.
 
 def validate_batch_inputs(queries, reference, *, segment_width=None):
     """The public batch contract: queries (B, M), reference (N,) shared
     across the batch, non-empty everywhere.  (Per-query (B, N)
     references are a backend capability — engine/ref accept them when
     called directly, as the search service's pair sweeps do — but the
-    public ``sdtw_batch`` contract stays 1-D.)"""
+    public ``sdtw`` contract stays 1-D.)"""
     if queries.ndim != 2:
         raise ValueError(
             f"queries must be 2-D (batch, length), got shape {queries.shape}")

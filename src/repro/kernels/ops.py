@@ -104,6 +104,29 @@ def swizzle_reference(r: jnp.ndarray, segment_width: int) -> jnp.ndarray:
     return r.reshape(-1, LANES, w).transpose(0, 2, 1)
 
 
+def swizzle_reference_reverse(r: jnp.ndarray,
+                              segment_width: int) -> jnp.ndarray:
+    """(N,) -> (R, w, LANES) REVERSE layout for the soft-DTW backward
+    sweep: ``flip(r)`` LEFT-padded with PAD_VALUE to the same
+    ``R * LANES * w`` capacity as :func:`swizzle_reference`, then
+    swizzled identically.
+
+    Left-padding makes reverse layout block r' cover exactly the
+    columns of forward block ``R - 1 - r'`` (in flipped order), so the
+    forward and reverse sweeps' checkpoint strips line up
+    block-for-block (see ``kernels/backward.py``).  Flipped column j'
+    maps to original column ``n_pad - 1 - j'``; the pad cells sit at
+    flipped columns ``[0, n_pad - n)`` and behave exactly like the
+    forward right-pad — their ~1e12 costs carry weight
+    ``exp(-1e12/gamma) == 0`` in every soft fold."""
+    w = segment_width
+    n_pad = ceil_to(r.shape[0], LANES * w)
+    rflip = jnp.flip(r)
+    rflip = jnp.pad(rflip, (n_pad - r.shape[0], 0),
+                    constant_values=PAD_VALUE)
+    return rflip.reshape(-1, LANES, w).transpose(0, 2, 1)
+
+
 def unswizzle_reference(r_layout: jnp.ndarray) -> jnp.ndarray:
     """(R, w, LANES) -> (R*LANES*w,) inverse of :func:`swizzle_reference`
     (padded tail included). Used by the packing-invariant tests."""

@@ -311,6 +311,12 @@ class KernelPlan:
     compute_dtype_name: str = "float32"
     with_window: bool = False    # int32 start-pointer channel + output
     band_skip: bool = True       # trim the grid for Sakoe–Chiba specs
+    reverse: bool = False        # soft-DTW reverse sweep (B matrix):
+    #                              flipped operands, reversed boundary
+    #                              rules (see kernels/backward.py)
+    checkpoint: bool = False     # emit each block's entry boundary
+    #                              strip as an extra output (the fused
+    #                              backward's O(M * N/W) residual)
 
     def __post_init__(self):
         if self.spec.distance == "cosine":
@@ -326,6 +332,15 @@ class KernelPlan:
             raise ValueError(
                 "the soft-min channel accumulates logsumexp pairs in "
                 f"float32; got compute_dtype={self.compute_dtype_name}")
+        if self.reverse and not self.spec.soft:
+            raise ValueError(
+                "reverse sweeps exist for the soft-DTW backward (the "
+                "B matrix of the E-matrix identity); hard-min plans "
+                "have no reverse mode")
+        if self.checkpoint and self.with_window:
+            raise ValueError(
+                "checkpoint plans carry only the cost channel's "
+                "boundary strips; with_window is not supported")
 
     # -------------------------------------------------------- geometry
     @property
@@ -361,11 +376,18 @@ class KernelPlan:
 
     @property
     def num_outputs(self) -> int:
-        return 3 if self.with_window else 2
+        n = 3 if self.with_window else 2
+        return n + 1 if self.checkpoint else n
 
     @property
     def grid_blocks(self) -> int:
-        """Grid steps actually executed along the reference axis."""
+        """Grid steps actually executed along the reference axis.
+
+        Identical for forward and reverse sweeps: a band keeps
+        ``band_grid_blocks`` blocks alive in both directions (forward
+        trims TRAILING blocks, reverse — whose flipped column j' maps
+        to original column n_pad-1-j' — skips the same count of
+        LEADING flipped blocks via :attr:`block_offset`)."""
         if not self.band_skip:
             return self.num_ref_blocks
         return band_grid_blocks(self.m, self.spec.band,
@@ -374,6 +396,27 @@ class KernelPlan:
     @property
     def skipped_blocks(self) -> int:
         return self.num_ref_blocks - self.grid_blocks
+
+    @property
+    def block_offset(self) -> int:
+        """First reference-layout block the grid actually executes.
+
+        Forward band-skip drops trailing blocks (offset 0); a reverse
+        sweep's dead columns — original ``j > (m-1) + band`` — sit at
+        the LEADING flipped columns ``j' < n_pad - m - band``, so the
+        reverse grid starts ``skipped_blocks`` blocks in.  Grid step r
+        reads layout block ``r + block_offset``."""
+        return self.skipped_blocks if self.reverse else 0
+
+    @property
+    def band_shift(self) -> int:
+        """Column shift applied inside the band mask: a reverse sweep
+        computes in flipped coordinates (i' = m-1-i, j' = n_pad-1-j),
+        where ``i - j = (m - n_pad) - (i' - j')`` — so
+        ``|i' - j' + band_shift| <= band`` tests the ORIGINAL band."""
+        if not self.reverse:
+            return 0
+        return self.m - self.num_ref_blocks * LANES * self.segment_width
 
     def geometry(self) -> dict:
         """The plan's work shape as plain numbers — what a tuning trial
@@ -389,6 +432,7 @@ class KernelPlan:
             "num_ref_blocks": self.num_ref_blocks,
             "grid_blocks": self.grid_blocks,
             "skipped_blocks": self.skipped_blocks,
+            "block_offset": self.block_offset,
             "padded_cols": self.num_ref_blocks * block_cols,
         }
 
@@ -407,8 +451,28 @@ class KernelPlan:
         big = jnp.asarray(self.big, self.compute_dtype)
         left, up, upleft = vals3["cost"]
         cost = spec.cell_cost(qv, rv)
-        val = spec.cell_update(cost, left, up, upleft, free_start=is_row0)
-        in_band = spec.band_valid(i_l, j_col)
+        if self.reverse:
+            # the reverse recurrence B[i,j] = C[i,j] + smin(B[i,j+1],
+            # B[i+1,j], B[i+1,j+1]) run as a FORWARD sweep in flipped
+            # coordinates, with the forward convention's boundary rules
+            # mirrored (see kernels/backward.py for the derivation):
+            #   flipped row 0   (original m-1): no up/upleft
+            #     predecessor, but every cell may TERMINATE a path —
+            #     the 0-weight operand, the mirror of free_start;
+            #   flipped row m-1 (original 0): no horizontal operand —
+            #     forward row-0 cells never chain left-to-right
+            #     (free_start replaces their reduced predecessor).
+            # Order matters for m == 1 (both rules apply): left and up
+            # read big, upleft reads the termination 0 -> B == C.
+            is_rowlast = i_l == self.m - 1
+            val = cost + spec.reduce3(
+                jnp.where(is_rowlast, big, left),
+                jnp.where(is_row0, big, up),
+                jnp.where(is_row0, jnp.zeros_like(upleft), upleft))
+        else:
+            val = spec.cell_update(cost, left, up, upleft,
+                                   free_start=is_row0)
+        in_band = spec.band_valid(i_l, j_col + self.band_shift)
         if in_band is not None:
             # Sakoe–Chiba mask folded into the lane index math: lane l,
             # segment slot k owns global column j_col while computing
@@ -466,8 +530,22 @@ def _generic_kernel(q_ref, r_ref, *refs, plan: KernelPlan):
     def _init():
         fold.init(scr)
 
+    if plan.checkpoint:
+        # publish the block's ENTRY boundary: at this point the strip
+        # still holds the whole previous block's right column (the
+        # read pointer t+1 leads the write pointer t-127 by LANES rows,
+        # so nothing is overwritten yet).  At rblk == 0 the strip holds
+        # the previous batch group's garbage — the edge sentinel is the
+        # true boundary there.
+        refs[plan.num_outputs - 1][0, 0] = jnp.where(
+            rblk > 0, strip_refs[0][...].astype(jnp.float32),
+            jnp.full((SUBLANES, m), plan.big, jnp.float32))
+
     r_blk = r_ref[0]                      # (w, LANES)
-    j_base = (rblk * LANES + lane) * w    # global ref index of lane's k=0
+    # global ref index of lane's k=0 cell; a reverse band-skip grid
+    # starts block_offset layout blocks in (leading flipped columns are
+    # out of band for every row), forward grids start at 0
+    j_base = ((rblk + plan.block_offset) * LANES + lane) * w
 
     def step(t, carry):
         # lane l is computing query row i = t - l this step
@@ -540,10 +618,14 @@ def wavefront_call(plan: KernelPlan, q_rev_pad: jnp.ndarray,
 
     q_rev_pad: (G, SUBLANES, Mp) reversed queries from
                ``ops.prepare_queries``, Mp = m + 2*(LANES-1)
+               (a reverse plan takes the FLIPPED queries prepared the
+               same way, against ``ops.swizzle_reference_reverse``)
     r_layout:  (R, w, LANES) pre-swizzled reference blocks
     returns    (costs (G, SUBLANES) f32, ends (G, SUBLANES) i32), plus
-               starts in the middle for window plans — every channel
-               rides the SAME pallas_call, never a second sweep.
+               starts in the middle for window plans, plus a trailing
+               (G, grid_blocks, SUBLANES, m) f32 boundary-strip tensor
+               for checkpoint plans — every channel rides the SAME
+               pallas_call, never a second sweep.
     """
     G, S, Mp = q_rev_pad.shape
     R, w, L = r_layout.shape
@@ -570,9 +652,20 @@ def wavefront_call(plan: KernelPlan, q_rev_pad: jnp.ndarray,
     if plan.with_window:
         out_shape.append(jax.ShapeDtypeStruct((G, SUBLANES), jnp.int32))
         out_specs.append(pl.BlockSpec((1, SUBLANES), lambda b, r: (b, 0)))
+    if plan.checkpoint:
+        # one (SUBLANES, m) entry-boundary strip per executed block:
+        # the O(M * N/block) residual the fused soft backward
+        # re-materializes E tiles from (kernels/backward.py)
+        out_shape.append(jax.ShapeDtypeStruct(
+            (G, plan.grid_blocks, SUBLANES, plan.m), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, SUBLANES, plan.m),
+                                      lambda b, r: (b, r, 0, 0)))
+    off = plan.block_offset
     in_specs = [
         pl.BlockSpec((1, SUBLANES, Mp), lambda b, r: (b, 0, 0)),
-        pl.BlockSpec((1, w, LANES), lambda b, r: (r, 0, 0)),
+        # grid step r reads layout block r + offset (reverse band-skip
+        # grids start past the leading out-of-band flipped blocks)
+        pl.BlockSpec((1, w, LANES), lambda b, r: (r + off, 0, 0)),
     ]
     scratch = [ch.strip_shape(plan.m) for ch in plan.channels]
     scratch += plan.fold.scratch_shapes()
@@ -588,4 +681,4 @@ def wavefront_call(plan: KernelPlan, q_rev_pad: jnp.ndarray,
     if plan.with_window:
         costs, ends, starts = out
         return costs, starts, ends
-    return out
+    return out                    # (costs, ends[, checkpoints])

@@ -19,7 +19,7 @@ Per query batch the service runs a three-layer cascade:
 
 Skipping is *exact*: a pair is discarded only when a true lower bound
 strictly exceeds the k-th best true cost found so far, so ``topk``
-returns results identical to a brute-force ``sdtw_batch`` loop over
+returns results identical to a brute-force ``repro.sdtw`` loop over
 every registered reference (same costs and end indices, any backend).
 Ties break by registration order, matching the brute-force iteration.
 

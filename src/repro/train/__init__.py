@@ -1,3 +1,4 @@
-from repro.train.step import TrainState, make_train_step, train_state_init
+from repro.train.step import (TrainState, make_sdtw_loss, make_train_step,
+                              train_state_init)
 from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
                                     latest_step)

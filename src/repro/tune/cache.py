@@ -31,7 +31,10 @@ Hygiene: verdicts whose stored machine fingerprint no longer hashes to
 the section's :func:`machine_key` (jax upgraded in place, device set
 changed, hand-migrated files) are AGED OUT on load — counted in the
 ``tune.cache_expired`` obs counter and ``TuningCache.expired`` — so a
-stale measurement can never pick this machine's dispatch plan.
+stale measurement can never pick this machine's dispatch plan.  A
+``max_age_s`` bound (env: ``REPRO_TUNE_CACHE_MAX_AGE`` seconds for the
+default cache) additionally expires a section whose ``updated_unix``
+write stamp is older than the bound, through the same counters.
 """
 
 from __future__ import annotations
@@ -107,8 +110,13 @@ class TuningCache:
     """
 
     def __init__(self, path: str | None = None, *,
-                 fingerprint: dict | None = None):
+                 fingerprint: dict | None = None,
+                 max_age_s: float | None = None):
+        if max_age_s is not None and max_age_s <= 0:
+            raise ValueError(f"max_age_s must be positive or None, got "
+                             f"{max_age_s!r}")
         self.path = path
+        self.max_age_s = max_age_s
         self.fingerprint = (machine_fingerprint() if fingerprint is None
                             else fingerprint)
         self.machine = machine_key(self.fingerprint)
@@ -116,7 +124,8 @@ class TuningCache:
         self._entries: dict[str, dict] = {}
         self.rejected = False       # a corrupt/mismatched file was seen
         self.expired = 0            # verdicts aged out on load (stored
-        #                             fingerprint drifted off machine_key;
+        #                             fingerprint drifted off machine_key
+        #                             or section older than max_age_s;
         #                             mirrored in ``tune.cache_expired``)
         if path is not None:
             self._entries = self._load(path)
@@ -168,6 +177,25 @@ class TuningCache:
                 "fingerprint (%s) no longer matches this machine (%s)",
                 path, len(entries), machine_key(stored_fp), self.machine)
             return {}
+        # time-based expiry: the section's write stamp bounds the age of
+        # every verdict in it — past ``max_age_s`` the device clocks,
+        # thermals, or driver stack may have drifted enough that a
+        # re-measurement is cheaper than a mis-tuned dispatch plan
+        if entries and self.max_age_s is not None:
+            stamp = mine.get("updated_unix") if isinstance(mine, dict) \
+                else None
+            age = (time.time() - stamp) if isinstance(
+                stamp, (int, float)) and not isinstance(stamp, bool) \
+                else None
+            if age is None or age > self.max_age_s:
+                self.expired += len(entries)
+                self._count_expired(len(entries))
+                log.warning(
+                    "tuning cache %s: expired %d verdict(s) — section %s "
+                    "(max_age_s=%g)", path, len(entries),
+                    "has no updated_unix stamp" if age is None
+                    else f"is {age:.0f}s old", self.max_age_s)
+                return {}
         kept = {k: v for k, v in entries.items() if _valid_verdict(v)}
         dropped = len(entries) - len(kept)
         if dropped:
@@ -252,13 +280,30 @@ _default: TuningCache | None = None
 _default_lock = threading.Lock()
 
 
+def _default_max_age() -> float | None:
+    """``REPRO_TUNE_CACHE_MAX_AGE`` (seconds) for the default cache;
+    unset/empty/non-positive/garbage all mean no time-based expiry."""
+    raw = os.environ.get("REPRO_TUNE_CACHE_MAX_AGE", "").strip()
+    if not raw:
+        return None
+    try:
+        age = float(raw)
+    except ValueError:
+        log.warning("ignoring REPRO_TUNE_CACHE_MAX_AGE=%r (not a "
+                    "number)", raw)
+        return None
+    return age if age > 0 else None
+
+
 def default_cache() -> TuningCache:
     """The process-wide cache ``segment_width="auto"`` consults unless
-    handed an explicit one (env knob: ``REPRO_TUNE_CACHE``)."""
+    handed an explicit one (env knobs: ``REPRO_TUNE_CACHE`` for the
+    path, ``REPRO_TUNE_CACHE_MAX_AGE`` for time-based expiry)."""
     global _default
     with _default_lock:
         if _default is None:
-            _default = TuningCache(default_cache_path())
+            _default = TuningCache(default_cache_path(),
+                                   max_age_s=_default_max_age())
         return _default
 
 

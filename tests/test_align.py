@@ -14,8 +14,9 @@ import pytest
 
 import repro.align.traceback as traceback_mod
 from repro.align import (expected_alignment, oracle_path, oracle_window,
-                         row_position_distribution, sdtw_window,
-                         warping_path, warping_paths)
+                         row_position_distribution, warping_path,
+                         warping_paths)
+from repro.core.api import sdtw
 from repro.backends import registry
 from repro.core.normalize import normalize_batch
 from repro.core.spec import DPSpec
@@ -31,6 +32,12 @@ WINDOW_SPECS = [
     DPSpec(band=N + M),                      # band wider than the matrix
 ]
 BACKENDS = ("ref", "engine", "kernel")
+
+
+def sdtw_window(q, r, **kw):
+    # (cost, start, end) via the typed front door - what the removed
+    # tuple shim used to wrap
+    return sdtw(q, r, outputs=("cost", "start", "end"), **kw).window()
 
 
 @pytest.fixture(scope="module")
@@ -92,7 +99,7 @@ def test_windows_on_cbf_all_backends(cbf):
 def test_window_batch_against_batched_reference(data):
     """Per-query (B, N) references go through the engine's window path
     too — the search service's pair sweeps call the backend directly
-    (the public ``sdtw_batch``/``sdtw_window`` contract stays 1-D)."""
+    (the public ``sdtw`` contract stays 1-D)."""
     from repro.core.engine import sdtw_engine
     q, r = data
     rng = np.random.default_rng(3)
@@ -140,9 +147,8 @@ def test_window_capability_axis(data):
     window starts (loud error), backend=None auto-falls back to a
     capable one."""
     q, r = data
-    from repro.core.api import sdtw_batch
     with pytest.raises(ValueError, match=r"output\(s\) \['start'\]"):
-        sdtw_batch(q, r, backend="quantized", return_window=True)
+        sdtw(q, r, outputs=("cost", "start", "end"), backend="quantized")
     win = ("cost", "start", "end")
     assert registry.capable(DPSpec(), outputs=win) == \
         ["engine", "kernel", "ref"]
@@ -150,8 +156,8 @@ def test_window_capability_axis(data):
         "engine"
     rows = {row["backend"]: row["outputs"]
             for row in registry.capability_rows()}
-    assert rows["engine"] == rows["ref"] == "path,soft_alignment,start"
-    assert rows["kernel"] == "path,start"
+    assert rows["engine"] == rows["ref"] == rows["kernel"] == \
+        "path,soft_alignment,start"
     assert rows["quantized"] == rows["distributed"] == "-"
 
 

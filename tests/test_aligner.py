@@ -55,21 +55,27 @@ def test_warm_calls_do_not_retrace(data, backend):
 
 
 def test_outputs_hint_steers_auto_selection(data, monkeypatch):
-    """On TPU auto-selection prefers the (forward-only) kernel; an
-    outputs hint naming soft_alignment must steer a backend=None
-    session to a backend that can actually serve it."""
+    """On TPU auto-selection prefers the kernel; an outputs hint the
+    preferred backend cannot serve must steer a backend=None session
+    to one that can — and the kernel's fused reverse-sweep backward
+    means soft_alignment is no longer such a hint."""
     from repro.backends import registry
     _, r = data
     monkeypatch.setattr(registry, "_device_default", lambda: "tpu")
     plain = repro.Aligner(r, gamma=0.5)
     assert plain.backend.name == "kernel"
+    # soft_alignment stays on the kernel: the fused forward+reverse
+    # pair serves it directly
     hinted = repro.Aligner(r, gamma=0.5, outputs=("cost",
                                                   "soft_alignment"))
-    assert hinted.backend.name == "engine"
-    # a named backend + impossible hint fails at construction, loudly
-    with pytest.raises(ValueError, match="soft_alignment"):
-        repro.Aligner(r, gamma=0.5, backend="kernel",
-                      outputs=("soft_alignment",))
+    assert hinted.backend.name == "kernel"
+    # a hint the kernel genuinely cannot serve (cosine distance) still
+    # steers; a named backend + impossible hint fails at construction
+    steered = repro.Aligner(r, distance="cosine")
+    assert steered.backend.name == "engine"
+    with pytest.raises(ValueError, match="start"):
+        repro.Aligner(r, backend="quantized",
+                      outputs=("cost", "start", "end"))
 
 
 def test_outputs_key_is_order_insensitive(data):

@@ -2,9 +2,8 @@
 
 The outputs matrix (backend × requested outputs) must return exactly
 the requested fields (everything else ``None``), round-trip as a JAX
-pytree, raise the registry's loud capability errors for incapable
-combinations, and — bit-for-bit — agree with the deprecated tuple
-shims (``sdtw_batch`` / ``sdtw_search`` / ``sdtw_window``) on CBF data.
+pytree, and raise the registry's loud capability errors for incapable
+combinations — ``SDTWResult`` is the only public contract.
 """
 import jax
 import jax.numpy as jnp
@@ -12,8 +11,8 @@ import numpy as np
 import pytest
 
 import repro
-from repro.align import expected_alignment, sdtw_window, warping_paths
-from repro.core.api import sdtw, sdtw_batch, sdtw_search
+from repro.align import expected_alignment, warping_paths
+from repro.core.api import sdtw
 from repro.core.result import (ALL_OUTPUTS, SDTWResult, normalize_outputs,
                                sweep_outputs)
 from repro.core.spec import DPSpec
@@ -107,44 +106,22 @@ def test_capability_errors(data):
     # soft_alignment needs a softmin spec ...
     with pytest.raises(ValueError, match="softmin"):
         sdtw(q, r, backend="engine", outputs=("soft_alignment",))
-    # ... and a differentiable backend
-    with pytest.raises(ValueError, match="soft_alignment"):
-        sdtw(q, r, backend="kernel", reduction="softmin",
-             outputs=("soft_alignment",))
+    # ... and the kernel's fused reverse sweep serves it now
+    fused = sdtw(q, r, backend="kernel", reduction="softmin",
+                 outputs=("soft_alignment",), segment_width=2)
+    assert fused.soft_alignment.shape == (B, M, N)
     with pytest.raises(ValueError, match="unknown output"):
         sdtw(q, r, outputs=("cost", "bogus"))
 
 
-# ------------------------------------------------- shim <-> new equality
-@pytest.mark.parametrize("backend", WINDOW_BACKENDS)
-def test_shims_equal_new_api(data, backend):
-    """Acceptance: sdtw(outputs=("cost","start","end")) == the
-    sdtw_window shim bit-for-bit on every window-capable backend, and
-    sdtw_batch == sdtw(outputs=("cost","end"))."""
-    q, r = data
-    res = sdtw(q, r, backend=backend, outputs=("cost", "start", "end"),
-               segment_width=2)
-    c, s, e = sdtw_window(q, r, backend=backend, segment_width=2)
-    np.testing.assert_array_equal(np.asarray(res.cost), np.asarray(c))
-    np.testing.assert_array_equal(np.asarray(res.start), np.asarray(s))
-    np.testing.assert_array_equal(np.asarray(res.end), np.asarray(e))
-    c2, e2 = sdtw_batch(q, r, backend=backend, segment_width=2)
-    res2 = sdtw(q, r, backend=backend, outputs=("cost", "end"),
-                segment_width=2)
-    np.testing.assert_array_equal(np.asarray(res2.cost), np.asarray(c2))
-    np.testing.assert_array_equal(np.asarray(res2.end), np.asarray(e2))
-
-
-def test_sdtw_search_both_shapes(data):
-    """The satellite fix: sdtw_search used to unpack a 2-tuple
-    unconditionally, so return_window=True crashed."""
-    q, r = data
-    cost, end = sdtw_search(q[0], r)
-    assert np.ndim(cost) == 0 and np.ndim(end) == 0
-    cost3, start3, end3 = sdtw_search(q[0], r, return_window=True)
-    assert float(cost3) == float(cost)
-    assert int(end3) == int(end)
-    assert 0 <= int(start3) <= int(end3)
+def test_shims_removed():
+    """The deprecated tuple entry points are gone: SDTWResult is the
+    only public contract."""
+    for name in ("sdtw_batch", "sdtw_search"):
+        with pytest.raises(AttributeError):
+            getattr(repro, name)
+    import repro.align as _align
+    assert not hasattr(_align, "sdtw_window")
 
 
 def test_top_level_exports():

@@ -1,0 +1,52 @@
+"""benchmarks.run history pruning: --ci archives one
+benchmarks/history/<sha>/ entry per run, and prune_history caps the
+directory at the newest N entries (by mtime — shas don't sort) so the
+archive can't grow without bound across CI runs."""
+
+import os
+
+import pytest
+
+run_mod = pytest.importorskip("benchmarks.run")
+
+
+def _mk_history(root, names):
+    """Synthetic history: one dir per sha, mtimes strictly increasing
+    in list order (later name == newer entry)."""
+    for i, name in enumerate(names):
+        d = os.path.join(root, name)
+        os.makedirs(d)
+        with open(os.path.join(d, "BENCH_unit.json"), "w") as f:
+            f.write("{}")
+        t = 1_700_000_000 + i * 60
+        os.utime(d, (t, t))
+
+
+def test_prune_keeps_newest_n(tmp_path):
+    root = str(tmp_path / "history")
+    shas = ["aaa1111", "bbb2222", "ccc3333", "ddd4444", "eee5555"]
+    _mk_history(root, shas)
+    removed = run_mod.prune_history(root=root, keep=2)
+    assert sorted(removed) == sorted(shas[:3])
+    assert sorted(os.listdir(root)) == sorted(shas[3:])
+    # the survivors' contents are untouched
+    for s in shas[3:]:
+        assert os.path.exists(os.path.join(root, s, "BENCH_unit.json"))
+
+
+def test_prune_noop_cases(tmp_path):
+    root = str(tmp_path / "history")
+    # missing root: nothing to do
+    assert run_mod.prune_history(root=root, keep=3) == []
+    _mk_history(root, ["aaa1111", "bbb2222"])
+    # fewer entries than keep: nothing removed
+    assert run_mod.prune_history(root=root, keep=5) == []
+    # keep <= 0 disables pruning entirely
+    assert run_mod.prune_history(root=root, keep=0) == []
+    assert sorted(os.listdir(root)) == ["aaa1111", "bbb2222"]
+    # stray files (not dirs) under root are ignored, not deleted
+    with open(os.path.join(root, "README.md"), "w") as f:
+        f.write("x")
+    removed = run_mod.prune_history(root=root, keep=1)
+    assert removed == ["aaa1111"]
+    assert sorted(os.listdir(root)) == ["README.md", "bbb2222"]

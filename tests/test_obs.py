@@ -419,10 +419,10 @@ def test_aligner_failed_build_ticks_nothing():
     r = rng.normal(size=64).astype(np.float32)
     q = rng.normal(size=(2, 8)).astype(np.float32)
     m = MetricsRegistry()
-    aligner = repro.Aligner(r, backend="kernel", reduction="softmin",
+    aligner = repro.Aligner(r, backend="quantized",
                             metrics=m, tracer=Tracer())
     with pytest.raises(ValueError):
-        aligner(q, outputs=("cost", "soft_alignment"))
+        aligner(q, outputs=("cost", "start", "end"))
     # the failed build left no executable and no compile tick
     assert aligner.stats.compiles == 0 and aligner.executables() == 0
     assert m.value("aligner.compiles") == 0

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.api import sdtw_batch
+from repro.core.api import sdtw
 from repro.core.ref import sdtw_ref
 from repro.kernels import ops
 from repro.kernels.sdtw_wavefront import LANES, SUBLANES
@@ -79,20 +79,20 @@ def test_pad_columns_never_win_and_ends_clamped(rng):
         assert int(np.asarray(e)[0]) == n - 1
 
 
-def test_sdtw_batch_validates_inputs(rng):
+def test_sdtw_validates_inputs(rng):
     q = rng.normal(size=(2, 8)).astype(np.float32)
     r = rng.normal(size=(64,)).astype(np.float32)
     with pytest.raises(ValueError, match="2-D"):
-        sdtw_batch(q[0], r)
+        sdtw(q[0], r)
     with pytest.raises(ValueError, match="1-D"):
-        sdtw_batch(q, np.stack([r, r]))
+        sdtw(q, np.stack([r, r]))
     with pytest.raises(ValueError, match="empty query batch"):
-        sdtw_batch(q[:0], r)
+        sdtw(q[:0], r)
     with pytest.raises(ValueError, match="zero-length"):
-        sdtw_batch(q[:, :0], r)
+        sdtw(q[:, :0], r)
     with pytest.raises(ValueError, match="empty reference"):
-        sdtw_batch(q, r[:0])
+        sdtw(q, r[:0])
     with pytest.raises(ValueError, match="segment_width"):
-        sdtw_batch(q, r, segment_width=0)
+        sdtw(q, r, segment_width=0)
     with pytest.raises(ValueError, match="unknown backend"):
-        sdtw_batch(q, r, backend="gpu")
+        sdtw(q, r, backend="gpu")

@@ -4,7 +4,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.api import sdtw_batch
+from repro.core.api import sdtw
 from repro.core.normalize import normalize_batch
 from repro.core.quantized import (build_codebook, decode, encode,
                                   sdtw_quantized)
@@ -26,7 +26,8 @@ def test_quantized_costs_track_fp32():
     rng = np.random.default_rng(1)
     q = jnp.asarray(make_cylinder_bell_funnel(rng, 8, 96))
     r = jnp.asarray(make_cylinder_bell_funnel(rng, 1, 1024)[0])
-    c32, e32 = sdtw_batch(q, r)
+    res32 = sdtw(q, r, backend="engine")
+    c32 = res32.cost
     c8, e8 = sdtw_quantized(q, r)
     c32, c8 = np.asarray(c32), np.asarray(c8)
     rel = np.abs(c8 - c32) / np.maximum(c32, 1e-6)

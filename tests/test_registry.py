@@ -5,7 +5,7 @@ import pytest
 
 from repro.backends import registry
 from repro.backends.registry import Backend, Capabilities
-from repro.core.api import sdtw_batch
+from repro.core.api import sdtw
 from repro.core.spec import DEFAULT_SPEC, DPSpec
 
 
@@ -46,9 +46,9 @@ def test_outputs_axis_validation():
     with pytest.raises(ValueError, match="soft_alignment"):
         registry.resolve("engine", DEFAULT_SPEC,
                          outputs=("soft_alignment",))
-    with pytest.raises(ValueError, match="soft_alignment"):
-        registry.resolve("kernel", DPSpec(reduction="softmin"),
-                         outputs=("soft_alignment",))
+    # the kernel's fused reverse-sweep backward serves soft_alignment
+    assert registry.supports("kernel", DPSpec(reduction="softmin"),
+                             outputs=("cost", "soft_alignment"))
     # spec-level impossibility with auto-select: nobody can
     with pytest.raises(ValueError, match="no registered backend"):
         registry.select(DPSpec(reduction="softmin"), outputs=("start",))
@@ -127,10 +127,11 @@ def test_select_prefers_kernel_on_tpu(monkeypatch):
     assert registry.select(DPSpec(reduction="softmin"))[0].name == "kernel"
     # specs the kernel cannot run still fall through to the engine
     assert registry.select(DPSpec(distance="cosine"))[0].name == "engine"
-    # gradient callers opt out of the forward-only kernel explicitly
+    # the fused reverse-sweep backward makes the kernel differentiable,
+    # so gradient callers keep the kernel on TPU too
     soft = DPSpec(reduction="softmin")
-    assert registry.select(soft, differentiable=True)[0].name == "engine"
-    assert "kernel" not in registry.capable(soft, differentiable=True)
+    assert registry.select(soft, differentiable=True)[0].name == "kernel"
+    assert "kernel" in registry.capable(soft, differentiable=True)
     monkeypatch.setattr(registry, "_device_default", lambda: "cpu")
     assert registry.select(DEFAULT_SPEC)[0].name == "engine"
 
@@ -167,14 +168,14 @@ def test_unsupported_reason_banding():
 def test_api_backend_none_selects(rng):
     q = rng.normal(size=(2, 8)).astype(np.float32)
     r = rng.normal(size=(64,)).astype(np.float32)
-    c0, e0 = sdtw_batch(q, r, backend=None)
-    c1, e1 = sdtw_batch(q, r, backend="engine")
-    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
-    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+    r0 = sdtw(q, r, backend=None)
+    r1 = sdtw(q, r, backend="engine")
+    np.testing.assert_array_equal(np.asarray(r0.cost), np.asarray(r1.cost))
+    np.testing.assert_array_equal(np.asarray(r0.end), np.asarray(r1.end))
 
 
 def test_api_distributed_without_mesh_errors(rng):
     q = rng.normal(size=(2, 8)).astype(np.float32)
     r = rng.normal(size=(64,)).astype(np.float32)
     with pytest.raises(ValueError, match="mesh"):
-        sdtw_batch(q, r, backend="distributed")
+        sdtw(q, r, backend="distributed")

@@ -209,7 +209,7 @@ def test_batcher_validation(rng):
 @pytest.mark.parametrize("k", [1, 2])
 def test_service_equals_brute_force(workload, backend, k):
     """The acceptance contract: same costs and end indices as a full
-    sdtw_batch loop over all registered references — in particular the
+    repro.sdtw loop over all registered references — in particular the
     cascade never discards a pair the oracle would rank in the top-k."""
     index, queries, _ = workload
     for prune in (True, False):

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.backends import registry
-from repro.core.api import sdtw_batch
+from repro.core.api import sdtw
 from repro.core.engine import sdtw_engine
 from repro.core.ref import sdtw_numpy
 from repro.core.spec import DPSpec
@@ -48,8 +48,9 @@ def test_capable_backends_match_oracle(data, spec):
                 if n != "distributed"]      # needs a multi-device mesh
     assert "ref" in backends and "engine" in backends
     for name in backends:
-        c, e = sdtw_batch(q, r, backend=name, spec=spec, normalize=False,
-                          segment_width=2)
+        res = sdtw(q, r, backend=name, spec=spec, normalize=False,
+                   segment_width=2)
+        c, e = res.cost, res.end
         for b in range(B):
             c0, e0 = oracle[b]
             np.testing.assert_allclose(
@@ -80,10 +81,10 @@ def test_band_infinite_matches_unbanded(data):
     q, r = data
     wide = DPSpec(band=M + N)
     for name in ("ref", "engine", "kernel"):
-        c0, e0 = sdtw_batch(q, r, backend=name, normalize=False,
-                            segment_width=2)
-        c1, e1 = sdtw_batch(q, r, backend=name, spec=wide, normalize=False,
-                            segment_width=2)
+        r0 = sdtw(q, r, backend=name, normalize=False, segment_width=2)
+        r1 = sdtw(q, r, backend=name, spec=wide, normalize=False,
+                  segment_width=2)
+        c0, e0, c1, e1 = r0.cost, r0.end, r1.cost, r1.end
         np.testing.assert_allclose(np.asarray(c1), np.asarray(c0),
                                    rtol=1e-6, atol=1e-7)
         np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
@@ -110,8 +111,8 @@ def test_band_blocking_entire_bottom_row_is_inf(rng):
         c_np = [sdtw_numpy(q[b], r, spec=spec)[0] for b in range(2)]
         assert all(np.isinf(c) for c in c_np)
         c_eng = np.asarray(sdtw_engine(q, r, spec=spec, return_end=False))
-        c_ref = np.asarray(sdtw_batch(q, r, backend="ref", spec=spec,
-                                      normalize=False)[0])
+        c_ref = np.asarray(sdtw(q, r, backend="ref", spec=spec,
+                                normalize=False).cost)
         assert np.isinf(c_eng).all(), (spec.describe(), c_eng)
         assert np.isinf(c_ref).all(), (spec.describe(), c_ref)
 
@@ -135,8 +136,8 @@ def test_quantized_follows_spec(data):
     selects (here: abs distance) rather than hard-coding its own."""
     q, r = data
     spec = DPSpec(distance="abs")
-    c8, e8 = sdtw_batch(q, r, backend="quantized", spec=spec)
-    c32, _ = sdtw_batch(q, r, backend="engine", spec=spec)
+    c8 = sdtw(q, r, backend="quantized", spec=spec).cost
+    c32 = sdtw(q, r, backend="engine", spec=spec).cost
     c8, c32 = np.asarray(c8), np.asarray(c32)
     assert np.isfinite(c8).all()
     rel = np.abs(c8 - c32) / np.maximum(c32, 1e-6)

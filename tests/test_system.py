@@ -4,22 +4,26 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import sdtw_batch, sdtw_search
+from repro import sdtw
 from repro.data.cbf import make_cylinder_bell_funnel
 
 
 def test_backends_agree(rng):
     q = rng.normal(size=(6, 40)).astype(np.float32) * 3 + 1
     r = rng.normal(size=(400,)).astype(np.float32) * 2 - 5
-    c_ref, e_ref = sdtw_batch(q, r, backend="ref")
-    c_eng, e_eng = sdtw_batch(q, r, backend="engine")
-    c_k, e_k = sdtw_batch(q, r, backend="kernel", segment_width=2)
-    np.testing.assert_allclose(np.asarray(c_eng), np.asarray(c_ref),
+    res_ref = sdtw(q, r, backend="ref")
+    res_eng = sdtw(q, r, backend="engine")
+    res_k = sdtw(q, r, backend="kernel", segment_width=2)
+    np.testing.assert_allclose(np.asarray(res_eng.cost),
+                               np.asarray(res_ref.cost),
                                rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_ref),
+    np.testing.assert_allclose(np.asarray(res_k.cost),
+                               np.asarray(res_ref.cost),
                                rtol=2e-3, atol=2e-3)
-    np.testing.assert_array_equal(np.asarray(e_eng), np.asarray(e_ref))
-    np.testing.assert_array_equal(np.asarray(e_k), np.asarray(e_ref))
+    np.testing.assert_array_equal(np.asarray(res_eng.end),
+                                  np.asarray(res_ref.end))
+    np.testing.assert_array_equal(np.asarray(res_k.end),
+                                  np.asarray(res_ref.end))
 
 
 def test_planted_pattern_is_found(rng):
@@ -31,17 +35,18 @@ def test_planted_pattern_is_found(rng):
     # time-stretch the (normalized) query ~1.5x and plant it at [500, 596)
     idx = np.clip((np.arange(96) / 96 * 64).astype(int), 0, 63)
     r[500:596] = qn[idx] + rng.normal(size=(96,)).astype(np.float32) * 0.02
-    cost, end = sdtw_search(q, r, normalize=True)
-    assert 560 <= int(end) <= 620, int(end)
+    res = sdtw(q[None, :], r, backend="engine", normalize=True)
+    assert 560 <= int(res.end[0]) <= 620, int(res.end[0])
     # and the planted match must beat pure-noise alignment by a wide margin
-    cost_noise, _ = sdtw_search(q, r[:400], normalize=True)
-    assert float(cost) < 0.3 * float(cost_noise), (float(cost),
-                                                   float(cost_noise))
+    res_noise = sdtw(q[None, :], r[:400], backend="engine", normalize=True)
+    assert float(res.cost[0]) < 0.3 * float(res_noise.cost[0]), (
+        float(res.cost[0]), float(res_noise.cost[0]))
 
 
 def test_search_shape():
     q = jnp.sin(jnp.linspace(0, 6, 50))
     r = jnp.sin(jnp.linspace(0, 60, 512))
-    c, e = sdtw_search(q, r)
+    res = sdtw(q[None, :], r, backend="engine")
+    c, e = res.cost[0], res.end[0]
     assert c.shape == () and e.shape == ()
     assert float(c) >= 0

@@ -215,6 +215,59 @@ def test_stale_fingerprint_entries_expire(tmp_path):
     assert list(tune.TuningCache(str(path)).entries()) == ["w1"]
 
 
+def test_stale_by_age_entries_expire(tmp_path, monkeypatch):
+    """max_age_s: a section whose ``updated_unix`` write stamp is older
+    than the bound ages out on load — same ``expired`` /
+    ``tune.cache_expired`` accounting as fingerprint drift."""
+    import time as _time
+    from repro.obs.bench import machine_fingerprint
+    path = tmp_path / "tuning.json"
+    mkey = tune.machine_key()
+
+    def write(stamp):
+        doc = {"schema": tune.TUNE_SCHEMA,
+               "machines": {mkey: {
+                   "fingerprint": dict(machine_fingerprint()),
+                   "entries": {
+                       "w1": {"backend": "kernel", "segment_width": 4},
+                       "w2": {"backend": "engine", "segment_width": 2},
+                   }}}}
+        if stamp is not None:
+            doc["machines"][mkey]["updated_unix"] = stamp
+        path.write_text(json.dumps(doc))
+
+    from repro import obs
+    write(_time.time() - 3600)               # written an hour ago
+    before = obs.default_registry().value("tune.cache_expired")
+    stale = tune.TuningCache(str(path), max_age_s=60.0)
+    assert len(stale) == 0 and stale.expired == 2
+    assert not stale.rejected                # hygiene, not corruption
+    assert obs.default_registry().value("tune.cache_expired") \
+        == before + 2
+    # a fresh-enough stamp is trusted; no bound means no expiry
+    fresh = tune.TuningCache(str(path), max_age_s=7200.0)
+    assert fresh.expired == 0 and len(fresh) == 2
+    unbounded = tune.TuningCache(str(path))
+    assert unbounded.expired == 0 and len(unbounded) == 2
+    # a stamp-less section cannot prove its age: expired under a bound
+    write(None)
+    assert tune.TuningCache(str(path), max_age_s=60.0).expired == 2
+    # a put() refreshes the stamp, so the rewritten file loads clean
+    stale.put("w3", {"backend": "kernel", "segment_width": 8})
+    reloaded = tune.TuningCache(str(path), max_age_s=60.0)
+    assert reloaded.expired == 0 and list(reloaded.entries()) == ["w3"]
+    with pytest.raises(ValueError, match="max_age_s"):
+        tune.TuningCache(str(path), max_age_s=0)
+    # env knob: the default cache picks the bound up from the process
+    # environment (garbage is ignored, seconds are parsed)
+    monkeypatch.setenv("REPRO_TUNE_CACHE_MAX_AGE", "86400")
+    assert tune.cache._default_max_age() == 86400.0
+    monkeypatch.setenv("REPRO_TUNE_CACHE_MAX_AGE", "soon")
+    assert tune.cache._default_max_age() is None
+    monkeypatch.setenv("REPRO_TUNE_CACHE_MAX_AGE", "-5")
+    assert tune.cache._default_max_age() is None
+
+
 def test_cache_preserves_other_machines(tmp_path):
     path = str(tmp_path / "tuning.json")
     other = tune.TuningCache(path, fingerprint={"platform": "mars"})
