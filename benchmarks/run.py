@@ -39,6 +39,7 @@ def main(argv=None):
     from benchmarks import search_throughput, backend_matrix
     from benchmarks import align_throughput, band_skip, aligner_session
     from benchmarks import serve_stream, soft_backward
+    from benchmarks import family_matrix
 
     # (name, thunk(rows)) — in --ci mode only benches with a tiny
     # asserting mode run; the paper-workload sweeps are bench-only
@@ -59,6 +60,10 @@ def main(argv=None):
         ("search_throughput", lambda rows: search_throughput.run(
             full=full, ci=ci, csv=rows)),
         ("backend_matrix", lambda rows: backend_matrix.run(
+            full=full, ci=ci, csv=rows)),
+        # family_matrix runs in --ci too: every repro.dp family is
+        # oracle-checked and kernel-vs-engine parity-asserted per run
+        ("family_matrix", lambda rows: family_matrix.run(
             full=full, ci=ci, csv=rows)),
         ("align_throughput", lambda rows: align_throughput.run(
             full=full, ci=ci, csv=rows)),

@@ -18,7 +18,7 @@ until an entry point is actually touched.
 __version__ = "1.1.0"
 
 __all__ = ["sdtw", "Aligner", "SDTWResult",
-           "DPSpec", "ALL_OUTPUTS", "tune"]
+           "DPSpec", "ALL_OUTPUTS", "tune", "dp"]
 
 _LAZY = {
     "sdtw": ("repro.core.api", "sdtw"),
@@ -27,6 +27,7 @@ _LAZY = {
     "ALL_OUTPUTS": ("repro.core.result", "ALL_OUTPUTS"),
     "DPSpec": ("repro.core.spec", "DPSpec"),
     "tune": ("repro.tune", None),    # the autotuner subpackage itself
+    "dp": ("repro.dp", None),        # the recurrence-algebra subpackage
 }
 
 

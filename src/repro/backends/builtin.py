@@ -32,6 +32,13 @@ _COST_END = frozenset({"cost", "end"})
 _WINDOWED = _COST_END | {"start", "path"}
 _FULL = _WINDOWED | {"soft_alignment"}
 
+# recurrence families (repro.dp): the three exact executors run every
+# family through the shared DPSpec.family_cell definition; the
+# approximate/sharded backends stay sdtw-only (the registry default),
+# so a family request can never silently downgrade onto them.
+_ALL_FAMILIES = frozenset({"sdtw", "twed", "erp", "local"})
+_GLOBAL_WINDOWS = frozenset({"sdtw", "twed", "erp"})   # start output
+
 
 # ------------------------------------------------------------------ ref
 def _exec_ref(spec, plan):
@@ -47,7 +54,8 @@ register(Backend(
     capabilities=Capabilities(
         distances=_ALL, reductions=_BOTH, banding=True,
         differentiable=True, per_query_reference=True, exact=True,
-        outputs=_FULL, device="any",
+        outputs=_FULL, families=_ALL_FAMILIES,
+        window_families=_GLOBAL_WINDOWS, device="any",
         notes="trusted row-scan oracle; slow, for validation"),
     execute=_exec_ref,
 ))
@@ -67,7 +75,8 @@ register(Backend(
     capabilities=Capabilities(
         distances=_ALL, reductions=_BOTH, banding=True,
         differentiable=True, per_query_reference=True, exact=True,
-        outputs=_FULL, device="any",
+        outputs=_FULL, families=_ALL_FAMILIES,
+        window_families=_GLOBAL_WINDOWS, device="any",
         notes="anti-diagonal XLA wavefront; the default"),
     execute=_exec_engine,
 ))
@@ -91,7 +100,8 @@ def _exec_kernel(spec, plan):
             batch=int(plan.queries.shape[0]), spec=spec,
             outputs=plan.outputs, backends=("kernel",),
             interpret=plan.interpret).segment_width
-    if spec.soft and "start" not in plan.outputs:
+    if spec.soft and "start" not in plan.outputs \
+            and spec.family == "sdtw":
         # soft specs dispatch through the fused custom_vjp so jax.grad
         # of the returned cost routes into the reverse-sweep backward
         # instead of failing on the opaque pallas_call
@@ -121,7 +131,7 @@ register(Backend(
         # reverse wavefronts, never an O(M*N) buffer on the grad path.
         distances=frozenset({"sqeuclidean", "abs"}), reductions=_BOTH,
         banding=True, differentiable=True, per_query_reference=False,
-        exact=True, outputs=_FULL,
+        exact=True, outputs=_FULL, families=_ALL_FAMILIES,
         device="tpu (interpret=True elsewhere)",
         notes="Pallas wavefront kernel (hard+soft, band-skip grids, "
               "fused reverse-sweep backward); shared 1-D reference only"),

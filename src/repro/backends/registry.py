@@ -60,6 +60,17 @@ class Capabilities:
     #   "soft_alignment" needs a differentiable backward underneath
     #   (jax.grad through the cost-matrix sweep, or the kernel's fused
     #   reverse sweep; soft-min specs only)
+    families: frozenset = frozenset({"sdtw"})
+    #   recurrence families (repro.core.spec.FAMILIES) the backend
+    #   executes.  Default sdtw-only: a backend must OPT IN to a family
+    #   — auto-selection can therefore never silently downgrade a
+    #   family request onto a backend that would run the sdtw
+    #   recurrence instead.
+    window_families: frozenset = frozenset({"sdtw"})
+    #   families the "start" output is served for.  Global families
+    #   (twed/erp) have trivial starts (column 0, NO_WINDOW when the
+    #   band blocks the corner); the local family has no window lane
+    #   anywhere yet.
     device: str = "any"            # human-readable requirement
     notes: str = ""
 
@@ -67,6 +78,8 @@ class Capabilities:
                            outputs=None) -> str | None:
         """None when the spec (and every requested output, if any) is
         executable, else a short reason."""
+        if spec.family not in self.families:
+            return f"family {spec.family!r}"
         if spec.distance not in self.distances:
             return f"distance {spec.distance!r}"
         if spec.reduction not in self.reductions:
@@ -81,6 +94,18 @@ class Capabilities:
             missing = req - self.outputs
             if missing:
                 return f"output(s) {sorted(missing)}"
+            if "start" in req and spec.family not in self.window_families:
+                return (f"output 'start' for family {spec.family!r} "
+                        f"(window starts ride families "
+                        f"{sorted(self.window_families)} here)")
+            if "path" in req and spec.family != "sdtw":
+                return (f"output 'path' for family {spec.family!r}: the "
+                        "Hirschberg traceback recovers sdtw warping "
+                        "paths only")
+            if "soft_alignment" in req and spec.family != "sdtw":
+                return ("output 'soft_alignment' for family "
+                        f"{spec.family!r}: the soft-alignment backward "
+                        "serves the sdtw recurrence only")
             argmin = req & {"start", "path"}
             if argmin and spec.soft:
                 return (f"output(s) {sorted(argmin)} under soft-min: no "
@@ -354,6 +379,7 @@ def capability_rows() -> list[dict]:
         c = _REGISTRY[name].capabilities
         rows.append({
             "backend": name,
+            "families": ",".join(sorted(c.families)),
             "distances": ",".join(sorted(c.distances)),
             "reductions": ",".join(sorted(c.reductions)),
             "banding": c.banding,

@@ -137,6 +137,12 @@ def sdtw(queries, reference, *,
          reduction: str | None = None,
          gamma: float | None = None,
          band: int | None = None,
+         family: str | None = None,
+         nu: float | None = None,
+         lam: float | None = None,
+         gap: float | None = None,
+         gap_penalty: float | None = None,
+         match_reward: float | None = None,
          segment_width: int | str = 8,
          interpret: bool | None = None,
          options: dict | None = None) -> SDTWResult:
@@ -160,7 +166,11 @@ def sdtw(queries, reference, *,
     the resolved spec.  ``spec`` carries the recurrence; the
     ``distance`` / ``reduction`` / ``gamma`` / ``band`` kwargs are
     per-call overrides of its fields (``gamma`` alone implies
-    ``reduction="softmin"``).  ``backend=None`` (the default) asks the
+    ``reduction="softmin"``).  ``family`` picks the recurrence family
+    (``repro.dp``: ``"sdtw"`` default / ``"twed"`` / ``"erp"`` /
+    ``"local"``) with its parameters ``nu``/``lam`` (twed), ``gap``
+    (erp), ``gap_penalty``/``match_reward`` (local); plain sdtw calls
+    are byte-identical to before the family axis existed.  ``backend=None`` (the default) asks the
     registry for the first backend capable of the spec AND the
     requested outputs; naming an incapable backend raises the
     registry's loud who-can-instead error.  ``interpret=None``
@@ -182,7 +192,10 @@ def sdtw(queries, reference, *,
                           segment_width=None if auto_width
                           else segment_width)
     resolved = resolve_spec(spec, distance=distance, reduction=reduction,
-                            gamma=gamma, band=band)
+                            gamma=gamma, band=band, family=family,
+                            nu=nu, lam=lam, gap=gap,
+                            gap_penalty=gap_penalty,
+                            match_reward=match_reward)
     req = normalize_outputs(outputs)
     workload = (int(queries.shape[1]), int(reference.shape[0]),
                 int(queries.shape[0]))

@@ -81,6 +81,11 @@ def sdtw_engine(queries: jnp.ndarray,
         raise ValueError(
             "return_window needs a hard-min spec: soft-min has no argmin "
             "path (use repro.align.soft.expected_alignment)")
+    if spec.family != "sdtw":
+        return _dp_engine(queries, reference, spec=spec,
+                          return_end=return_end,
+                          return_window=return_window,
+                          accum_dtype=accum_dtype)
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
     B, M = queries.shape
@@ -198,4 +203,149 @@ def sdtw_engine(queries: jnp.ndarray,
         _, _, cost_out, best_j = carry
     if return_end:
         return cost_out, best_j
+    return cost_out
+
+
+def _dp_engine(queries, reference, *, spec: DPSpec, return_end: bool,
+               return_window: bool, accum_dtype):
+    """Anti-diagonal sweep of the non-sdtw recurrence families.
+
+    Same wavefront as :func:`sdtw_engine` — (M + N - 1) scan steps over
+    rotating diagonal buffers — but every cell goes through
+    ``spec.family_cell`` (the single definition the rowscan ref and the
+    Pallas kernel also execute) and the fold follows the family's
+    :class:`~repro.core.spec.RecurrenceSpec`: the global families
+    (twed / erp) read the single corner cell ``D[M-1, N-1]``, the local
+    family streams a lexicographic ``(value, column)`` minimum (plus a
+    running logsumexp for soft) over EVERY valid cell.  Boundary
+    conditions live inside ``family_cell``, so the wrap-around of the
+    rolled diagonal buffers at row 0 is overwritten, never read.
+    """
+    fam = spec.family
+    local = fam == "local"
+    if return_window and local:
+        raise ValueError(
+            "return_window is undefined for the local family: a local "
+            "alignment's span needs a full backtrack, not a start lane")
+    queries = jnp.asarray(queries)
+    reference = jnp.asarray(reference)
+    B, M = queries.shape
+    shared_ref = reference.ndim == 1
+    N = reference.shape[-1]
+    dt = jnp.dtype(accum_dtype) if accum_dtype is not None else spec.accum
+    soft = spec.soft
+
+    q = queries.astype(dt)
+    r = reference.astype(dt)
+    pad = ((M - 1, M - 1),) if shared_ref else ((0, 0), (M - 1, M - 1))
+
+    def ext(x):
+        """Reversed + padded reference-like array: one contiguous
+        diagonal slice per step (same layout trick as sdtw_engine)."""
+        return jnp.pad(jnp.flip(x, axis=-1), pad)
+
+    r_ext = ext(r)
+    if fam == "twed":
+        zero_col = jnp.zeros(r.shape[:-1] + (1,), dt)
+        r_prev_ext = ext(jnp.concatenate([zero_col, r[..., :-1]], axis=-1))
+        q_prev = jnp.concatenate([jnp.zeros((B, 1), dt), q[:, :-1]],
+                                 axis=-1)
+        bt_ext, bl = None, None
+    elif fam == "erp":
+        bt_ext = ext(jnp.cumsum(spec.cell_cost(r, spec.gap), axis=-1))
+        bl = jnp.cumsum(spec.cell_cost(q, spec.gap), axis=-1)   # (B, M)
+        r_prev_ext, q_prev = None, None
+    else:
+        r_prev_ext, q_prev, bt_ext, bl = None, None, None, None
+
+    ii = jnp.arange(M)
+    j_max = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+    big = jnp.asarray(spec.big, dt)
+    corner_t = (M - 1) + (N - 1)
+
+    def diag_vals(x_ext, t):
+        start = N - 1 - t + (M - 1)
+        if shared_ref:
+            return lax.dynamic_slice(x_ext, (start,), (M,))
+        return lax.dynamic_slice(x_ext, (0, start), (B, M))
+
+    def step(carry, t):
+        if local and soft:
+            d1, d2, best, best_j, m_run, s_run = carry
+        else:
+            d1, d2, best, best_j = carry
+        rv = diag_vals(r_ext, t)
+        rpv = diag_vals(r_prev_ext, t) if fam == "twed" else None
+        btv = diag_vals(bt_ext, t) if fam == "erp" else None
+        up = jnp.roll(d1, 1, axis=-1)
+        upleft = jnp.roll(d2, 1, axis=-1)
+        j = t - ii
+        d0 = spec.family_cell(q, rv, d1, up, upleft, i=ii, j=j,
+                              is_row0=ii == 0, is_col0=j == 0,
+                              q_prev=q_prev, r_prev=rpv,
+                              top_boundary=btv, left_boundary=bl)
+        valid = (j >= 0) & (j < N)
+        in_band = spec.band_valid(ii, j)
+        if in_band is not None:
+            valid = valid & in_band
+        d0 = jnp.where(valid, d0, big)
+        if local:
+            # lexicographic (value, column) streaming minimum over every
+            # valid cell; diagonals ascend in t, so equal (value, column)
+            # ties keep the first-seen row automatically.  The big/2
+            # guard drops fully-masked diagonals (band=0 odd t), whose
+            # "minimum" is the sentinel at a garbage column.
+            v = jnp.min(d0, axis=-1)
+            jm = jnp.min(jnp.where(d0 == v[..., None],
+                                   j.astype(jnp.int32), j_max), axis=-1)
+            take = ((v < best) | ((v == best) & (jm < best_j))) \
+                & (v < big / 2)
+            best = jnp.where(take, v, best)
+            best_j = jnp.where(take, jm, best_j)
+            if soft:
+                x = -d0 / spec.gamma    # masked cells underflow to 0
+                m_new = jnp.maximum(m_run, jnp.max(x, axis=-1))
+                s_run = s_run * jnp.exp(m_run - m_new) \
+                    + jnp.sum(jnp.exp(x - m_new[..., None]), axis=-1)
+                return (d0, d1, best, best_j, m_new, s_run), None
+        else:
+            # corner fold: the single cell (M-1, N-1) lives on the last
+            # diagonal's bottom lane; a masked corner never takes
+            # (strict <), leaving the blocked sentinel + end 0
+            cand = jnp.where(t == corner_t, d0[..., M - 1], big)
+            take = cand < best
+            best = jnp.where(take, cand, best)
+            best_j = jnp.where(take, N - 1, best_j)
+        return (d0, d1, best, best_j), None
+
+    d_init = jnp.full((B, M), big, dt)
+    best0 = jnp.full((B,), big, dt)
+    bj0 = (jnp.full((B,), j_max, jnp.int32) if local
+           else jnp.zeros((B,), jnp.int32))
+    ts = jnp.arange(M + N - 1)
+    if local and soft:
+        m0 = jnp.full((B,), -jnp.inf, dt)
+        s0 = jnp.zeros((B,), dt)
+        carry, _ = lax.scan(step, (d_init, d_init, best0, bj0, m0, s0), ts)
+        _, _, best, best_j, m_run, s_run = carry
+        cost_out = -spec.gamma * (m_run + jnp.log(s_run))
+        end = best_j
+    else:
+        carry, _ = lax.scan(step, (d_init, d_init, best0, bj0), ts)
+        _, _, best, best_j = carry
+        if local:
+            cost_out, end = best, best_j
+        elif soft:
+            # blocked corner: either never taken (best == big) or a
+            # sum-of-sentinels value — both read as >= big/2 -> +inf
+            blocked = best >= big / 2
+            cost_out = jnp.where(blocked, jnp.asarray(INF, dt), best)
+            end = jnp.where(blocked, 0, best_j)
+        else:
+            cost_out, end = best, best_j    # blocked corner is inf already
+    if return_window:
+        start = jnp.where(jnp.isinf(cost_out), NO_WINDOW, 0)
+        return cost_out, start, end
+    if return_end:
+        return cost_out, end
     return cost_out

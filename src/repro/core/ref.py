@@ -195,6 +195,106 @@ def _sdtw_rowscan_single(q: jnp.ndarray, r: jnp.ndarray,
     return last_row[end], end
 
 
+def _dp_rowscan_single(q: jnp.ndarray, r: jnp.ndarray, spec: DPSpec,
+                       return_window: bool = False):
+    """Row-by-row scan of the non-sdtw recurrence families (twed / erp
+    / local) for one (query, reference) pair.
+
+    Same shape as :func:`_sdtw_rowscan_single` — sequential over both
+    axes — but every cell goes through ``spec.family_cell``, the single
+    definition the engine and the Pallas kernel also execute, so the
+    three sweeps agree bit-for-bit on hard objectives.  Boundary
+    conditions are injected by ``family_cell`` itself (the scan seeds
+    carries with ``big`` garbage that every family overwrites at
+    row/column 0), and the fold follows the family's
+    :class:`~repro.core.spec.RecurrenceSpec`:
+
+    * ``corner`` (twed / erp): the answer is ``D[m-1, n-1]``; a band
+      that disconnects the corner reads as blocked -> ``(inf, 0)``;
+    * ``cells`` (local): the lexicographic ``(value, column)`` minimum
+      over every valid cell (hard), or the soft-min over all valid
+      cells with the hard minimizer's column as the end (soft).
+    """
+    fam = spec.family
+    local = fam == "local"
+    if return_window and local:
+        raise ValueError(
+            "return_window is undefined for the local family: a local "
+            "alignment's span needs a full backtrack, not a start lane")
+    big = jnp.asarray(spec.big, q.dtype)
+    banded = spec.band is not None
+    m, n = q.shape[0], r.shape[0]
+    jj = jnp.arange(n)
+    zero_r = jnp.zeros_like(r)
+    zero_q = jnp.zeros_like(q)
+    if fam == "twed":
+        r_prev = jnp.concatenate([jnp.zeros((1,), r.dtype), r[:-1]])
+        q_prev = jnp.concatenate([jnp.zeros((1,), q.dtype), q[:-1]])
+        bt, bl = zero_r, zero_q
+    elif fam == "erp":
+        bt = jnp.cumsum(spec.cell_cost(r, spec.gap))
+        bl = jnp.cumsum(spec.cell_cost(q, spec.gap))
+        r_prev, q_prev = zero_r, zero_q
+    else:
+        r_prev, q_prev, bt, bl = zero_r, zero_q, zero_r, zero_q
+    j_max = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+
+    def row_step(carry, xs):
+        prev_row, best, best_j, mx, s = carry
+        qi, qpi, bli, i = xs
+
+        def col_step(c, cxs):
+            left, upleft = c
+            rj, rpj, btj, up, j = cxs[:5]
+            val = spec.family_cell(qi, rj, left, up, upleft, i=i, j=j,
+                                   is_row0=i == 0, is_col0=j == 0,
+                                   q_prev=qpi, r_prev=rpj,
+                                   top_boundary=btj, left_boundary=bli)
+            if banded:
+                val = jnp.where(cxs[5], val, big)
+            return (val, up), val
+
+        cxs = (r, r_prev, bt, prev_row, jj)
+        if banded:
+            cxs = cxs + (spec.band_valid(i, jj),)
+        (_, _), row = lax.scan(col_step, (big, big), cxs)
+        if local:
+            # lexicographic (value, column) streaming minimum; rows
+            # ascend, so ties keep the first-seen row automatically
+            v = jnp.min(row)
+            jm = jnp.min(jnp.where(row == v, jj.astype(jnp.int32), j_max))
+            take = (v < best) | ((v == best) & (jm < best_j))
+            best = jnp.where(take, v, best)
+            best_j = jnp.where(take, jm, best_j)
+            if spec.soft:
+                x = -row / spec.gamma       # masked cells underflow to 0
+                row_mx = jnp.max(x)
+                m_new = jnp.maximum(mx, row_mx)
+                s = s * jnp.exp(mx - m_new) + jnp.sum(jnp.exp(x - m_new))
+                mx = m_new
+        return (row, best, best_j, mx, s), None
+
+    init = (jnp.full((n,), big, q.dtype), big,
+            j_max, jnp.asarray(-INF, q.dtype),
+            jnp.zeros((), q.dtype))
+    xs = (q, q_prev, bl, jnp.arange(m))
+    (last_row, best, best_j, mx, s), _ = lax.scan(row_step, init, xs)
+    if local:
+        end = best_j
+        if spec.soft:
+            return -spec.gamma * (mx + jnp.log(s)), end
+        return best, end
+    # corner fold (global families)
+    corner = last_row[n - 1]
+    blocked = corner >= big / 2 if spec.soft else jnp.isinf(corner)
+    cost = jnp.where(blocked, jnp.asarray(jnp.inf, corner.dtype), corner)
+    end = jnp.where(blocked, 0, n - 1)
+    if return_window:
+        start = jnp.where(blocked, NO_WINDOW, 0)
+        return cost, start, end
+    return cost, end
+
+
 def sdtw_ref(queries: jnp.ndarray, reference: jnp.ndarray,
              spec: DPSpec | None = None, *,
              return_window: bool = False):
@@ -215,8 +315,10 @@ def sdtw_ref(queries: jnp.ndarray, reference: jnp.ndarray,
             "path (use repro.align.soft.expected_alignment)")
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
-    single = functools.partial(_sdtw_rowscan_single, spec=spec,
-                               return_window=return_window)
+    single = functools.partial(
+        _sdtw_rowscan_single if spec.family == "sdtw"
+        else _dp_rowscan_single,
+        spec=spec, return_window=return_window)
     if reference.ndim == 1:
         fn = jax.vmap(single, in_axes=(0, None))
     else:

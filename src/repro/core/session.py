@@ -332,17 +332,27 @@ class Aligner:
             n = self.length
             interp, spec = self.interpret, self.spec
             norm = self.normalize and not pre_normalized
+            # non-sdtw families ride extra operands through the same
+            # pallas_call; the reference-derived ones (twed's shifted
+            # layout, erp's bt prefix) are computed ONCE here — eagerly,
+            # by the same standalone jit every path uses, so the
+            # session's grids stay bit-identical to the one-shot call —
+            # and closed over next to r_layout
+            extras_ref = _ops.family_extras_ref(spec, self.reference,
+                                                segment_width=w)
 
             def run(q):
                 stats.traces += 1
                 metrics.inc("aligner.traces")
                 if norm:
                     q = normalize_batch(q)
-                qk = _ops.prepare_queries(q.astype(jnp.float32))
+                q32 = q.astype(jnp.float32)
+                qk = _ops.prepare_queries(q32)
+                extras = extras_ref + _ops.family_extras_query(spec, q32)
                 out = _ops.sdtw_wavefront_prepped(
                     qk, r_layout, batch=B, m=m, n=n, segment_width=w,
                     interpret=interp, spec=spec,
-                    return_window="start" in sweep)
+                    return_window="start" in sweep, extras=extras)
                 return from_sweep(out, sweep)
 
             return jax.jit(run), True

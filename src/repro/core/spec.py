@@ -49,6 +49,7 @@ import jax.numpy as jnp
 
 DISTANCES = ("sqeuclidean", "abs", "cosine")
 REDUCTIONS = ("hardmin", "softmin")
+FAMILIES = ("sdtw", "twed", "erp", "local")
 
 # ----------------------------------------------------------- sentinels
 # The one home of every "effectively infinite" constant in the repo.
@@ -97,6 +98,84 @@ NO_WINDOW = -1
 #   compares equal across every layer.
 
 
+# ---------------------------------------------------------- recurrences
+@dataclasses.dataclass(frozen=True)
+class RecurrenceSpec:
+    """The declarative shape of one banded-DP recurrence family.
+
+    ``repro.dp``'s algebra axis: every family the executors serve is a
+    frozen value of this class, describing WHICH recurrence sweeps —
+    boundary conditions, per-predecessor transition costs, objective —
+    while ``DPSpec`` keeps the orthogonal knobs (distance, reduction,
+    band, dtype) and the family's numeric parameters.  The executors
+    (``core.ref``, ``core.engine``, ``kernels.wavefront``) branch on
+    these *static* flags, never on family names, so a new family is a
+    new table entry plus a ``DPSpec.transition3`` case — not a new
+    sweep.
+
+    Fields:
+
+    * ``objective``  — ``"min"`` (distances: sdtw/twed/erp) or ``"max"``
+      (similarities: local alignment).  Max-objective families run
+      NEGATED in min-space — every executor still minimizes, and the
+      reported cost is the negated similarity score — so one fold
+      machinery serves both;
+    * ``free_start`` / ``free_end`` — subsequence boundary freedom: a
+      free start zeroes virtual row -1, a free end folds the bottom row
+      instead of the corner;
+    * ``local_floor`` — Smith–Waterman restart: the cell value is
+      floored at 0 (in min-space: ``min(value, 0)``) and the fold runs
+      over EVERY valid cell, not a row or corner;
+    * ``uses_transitions`` — the recurrence adds per-predecessor
+      transition costs (``DPSpec.transition3``) instead of one local
+      cell cost;
+    * ``needs_shifted`` — cells read the PREVIOUS sample of each series
+      (TWED's ``d(q_i, q_{i-1})`` / ``d(r_j, r_{j-1})`` terms), so the
+      kernel plan carries a shifted reference layout;
+    * ``needs_prefix`` — boundary rows/columns are gap-cost prefix sums
+      (ERP), carried as extra swizzled operands.
+    """
+
+    name: str
+    objective: str = "min"
+    free_start: bool = False
+    free_end: bool = False
+    local_floor: bool = False
+    uses_transitions: bool = False
+    needs_shifted: bool = False
+    needs_prefix: bool = False
+
+    @property
+    def fold(self) -> str:
+        """Where the answer lives: ``row`` (free end: fold the bottom
+        row), ``cells`` (local floor: fold every valid cell) or
+        ``corner`` (global: the single cell (m-1, n-1))."""
+        if self.local_floor:
+            return "cells"
+        return "row" if self.free_end else "corner"
+
+
+FAMILY_RECURRENCES = {
+    "sdtw": RecurrenceSpec(name="sdtw", free_start=True, free_end=True),
+    "twed": RecurrenceSpec(name="twed", uses_transitions=True,
+                           needs_shifted=True),
+    "erp": RecurrenceSpec(name="erp", uses_transitions=True,
+                          needs_prefix=True),
+    "local": RecurrenceSpec(name="local", objective="max",
+                            free_start=True, free_end=True,
+                            local_floor=True, uses_transitions=True),
+}
+
+
+def recurrence(family: str) -> RecurrenceSpec:
+    """The frozen :class:`RecurrenceSpec` of a family name."""
+    try:
+        return FAMILY_RECURRENCES[family]
+    except KeyError:
+        raise ValueError(f"unknown recurrence family {family!r}; "
+                         f"choose from {FAMILIES}") from None
+
+
 @dataclasses.dataclass(frozen=True)
 class DPSpec:
     """Frozen, hashable recurrence spec — safe as a jit static argument."""
@@ -106,6 +185,15 @@ class DPSpec:
     gamma: float = 1.0           # softmin temperature (static; > 0)
     band: int | None = None      # Sakoe–Chiba radius, None = unbanded
     accum_dtype: str = "float32"
+    # ------------------------------------------------ recurrence family
+    family: str = "sdtw"         # one of FAMILIES
+    nu: float = 1.0              # TWED stiffness (>= 0)
+    lam: float = 1.0             # TWED deletion penalty (>= 0)
+    gap: float = 0.0             # ERP gap value g (cost of deleting x
+    #                              is d(x, g))
+    gap_penalty: float = 1.0     # local alignment gap penalty (> 0)
+    match_reward: float = 1.0    # local alignment match reward mu (> 0):
+    #                              cell similarity is mu - d(q_i, r_j)
 
     def __post_init__(self):
         if self.distance not in DISTANCES:
@@ -118,6 +206,19 @@ class DPSpec:
             raise ValueError(f"softmin needs gamma > 0, got {self.gamma}")
         if self.band is not None and self.band < 0:
             raise ValueError(f"band must be >= 0 or None, got {self.band}")
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown recurrence family {self.family!r}; "
+                             f"choose from {FAMILIES}")
+        if self.family == "twed" and (self.nu < 0 or self.lam < 0):
+            raise ValueError(f"twed needs nu >= 0 and lam >= 0, got "
+                             f"nu={self.nu}, lam={self.lam}")
+        if self.family == "local":
+            if not self.gap_penalty > 0:
+                raise ValueError(f"local alignment needs gap_penalty > 0, "
+                                 f"got {self.gap_penalty}")
+            if not self.match_reward > 0:
+                raise ValueError(f"local alignment needs match_reward > 0, "
+                                 f"got {self.match_reward}")
         jnp.dtype(self.accum_dtype)   # fail fast on bogus dtype strings
 
     # ------------------------------------------------------- properties
@@ -140,8 +241,30 @@ class DPSpec:
         sentinel notes above)."""
         return SOFT_BIG if self.soft else INF
 
+    @property
+    def recurrence(self) -> RecurrenceSpec:
+        """The frozen :class:`RecurrenceSpec` of this spec's family."""
+        return FAMILY_RECURRENCES[self.family]
+
+    def family_describe(self) -> str:
+        """The family component of :meth:`describe` — the family name
+        plus its live numeric parameters (``sdtw`` has none)."""
+        if self.family == "twed":
+            return f"twed(nu={self.nu:g},lam={self.lam:g})"
+        if self.family == "erp":
+            return f"erp(gap={self.gap:g})"
+        if self.family == "local":
+            return (f"local(gap={self.gap_penalty:g},"
+                    f"match={self.match_reward:g})")
+        return "sdtw"
+
     def describe(self) -> str:
+        # the default family is deliberately silent so every pre-family
+        # sdtw description (tune cache keys, logs, test ids) is
+        # byte-identical to what earlier releases produced
         parts = [self.distance, self.reduction]
+        if self.family != "sdtw":
+            parts.insert(0, self.family_describe())
         if self.soft:
             parts.append(f"gamma={self.gamma:g}")
         if self.band is not None:
@@ -195,6 +318,118 @@ class DPSpec:
             prev = jnp.where(free_start, jnp.zeros_like(prev), prev)
         return cost + prev
 
+    def reduce2(self, a, b):
+        """Two-way companion of :meth:`reduce3` — same hard/soft split,
+        same min-shifted logsumexp form.  The local-alignment restart
+        floor ``min(value, 0)`` runs through this so the soft local
+        objective stays differentiable."""
+        if not self.soft:
+            return jnp.minimum(a, b)
+        mn = jnp.minimum(a, b)
+        s = (jnp.exp(-(a - mn) / self.gamma)
+             + jnp.exp(-(b - mn) / self.gamma))
+        return mn - self.gamma * jnp.log(s)
+
+    def transition3(self, qv, rv, *, q_prev=None, r_prev=None,
+                    i=None, j=None):
+        """Per-predecessor transition costs ``(t_left, t_up, t_diag)``
+        of the non-sdtw families, added to the (left, up, upleft)
+        predecessors before :meth:`reduce3`.
+
+        * TWED (Marteau 2009, anti-diagonal form of arxiv 2007.16135),
+          with the ``q[-1] = r[-1] = 0`` padding convention:
+          delete-in-r (left) pays ``d(r_j, r_{j-1}) + nu + lam``,
+          delete-in-q (up) pays ``d(q_i, q_{i-1}) + nu + lam``, and
+          match (diag) pays ``d(q_i, r_j) + d(q_{i-1}, r_{j-1})
+          + 2·nu·|i - j|``;
+        * ERP (Chen & Ng 2004): gap moves pay the distance to the gap
+          value ``g`` (``d(r_j, g)`` / ``d(q_i, g)``), the diagonal
+          pays ``d(q_i, r_j)``;
+        * local (Smith–Waterman in min-space): gap moves pay
+          ``gap_penalty``, the diagonal pays ``d(q_i, r_j) -
+          match_reward`` (the NEGATED similarity score).
+
+        Every executor calls this with the same operand order, so f32
+        sweeps agree bit-for-bit across ref / engine / kernel.
+        """
+        if self.family == "twed":
+            nl = self.nu + self.lam
+            t_left = self.cell_cost(rv, r_prev) + nl
+            t_up = self.cell_cost(qv, q_prev) + nl
+            t_diag = (self.cell_cost(qv, rv)
+                      + self.cell_cost(q_prev, r_prev)
+                      + (2.0 * self.nu) * jnp.abs(i - j))
+            return t_left, t_up, t_diag
+        if self.family == "erp":
+            return (self.cell_cost(rv, self.gap),
+                    self.cell_cost(qv, self.gap),
+                    self.cell_cost(qv, rv))
+        if self.family == "local":
+            gp = self.gap_penalty
+            return gp, gp, self.cell_cost(qv, rv) - self.match_reward
+        raise ValueError(f"family {self.family!r} has no transition "
+                         f"costs (sdtw uses cell_update)")
+
+    def family_cell(self, qv, rv, left, up, upleft, *, i, j,
+                    is_row0, is_col0, q_prev=None, r_prev=None,
+                    top_boundary=None, left_boundary=None, big=None):
+        """One non-sdtw DP cell — the single definition the rowscan
+        ref, the anti-diagonal engine AND the Pallas kernel all execute,
+        so their f32 grids agree bit-for-bit.
+
+        ``left``/``up``/``upleft`` are the raw neighbor reads (garbage
+        on grid edges — e.g. wrap-around rolls); the family's boundary
+        conditions are injected HERE via ``is_row0``/``is_col0`` masks:
+
+        * TWED (global): virtual row/col -1 are unreachable (``big``)
+          except the origin corner ``D[-1,-1] = 0``;
+        * ERP (global): virtual row -1 holds the reference gap-cost
+          prefix ``top_boundary[j] = Σ_{k<=j} d(r_k, g)`` and virtual
+          col -1 the query prefix ``left_boundary[i]``; the diagonal
+          boundary is recovered by peeling one gap cost off the prefix
+          (``B[j-1] = B[j] - d(r_j, g)`` — computed in exactly this
+          form by every executor AND the oracle, so f32 rounding
+          agrees);
+        * local: virtual boundaries are 0 (a fresh alignment may start
+          anywhere) and the restart floor ``reduce2(value, 0)`` caps
+          the cell.
+
+        ``big`` overrides the masked-cell sentinel (the kernel passes
+        its finite ``KERNEL_BIG``).  Band masking stays with the
+        caller.
+        """
+        if big is None:
+            big = self.big
+        t_left, t_up, t_diag = self.transition3(
+            qv, rv, q_prev=q_prev, r_prev=r_prev, i=i, j=j)
+        if self.family == "twed":
+            up_b = jnp.where(is_row0, big, up)
+            left_b = jnp.where(is_col0, big, left)
+            upleft_b = jnp.where(
+                is_row0 | is_col0,
+                jnp.where(is_row0 & is_col0, jnp.zeros_like(upleft), big),
+                upleft)
+        elif self.family == "erp":
+            up_b = jnp.where(is_row0, top_boundary, up)
+            left_b = jnp.where(is_col0, left_boundary, left)
+            upleft_b = jnp.where(
+                is_row0, top_boundary - self.cell_cost(rv, self.gap),
+                jnp.where(is_col0,
+                          left_boundary - self.cell_cost(qv, self.gap),
+                          upleft))
+        elif self.family == "local":
+            up_b = jnp.where(is_row0, jnp.zeros_like(up), up)
+            left_b = jnp.where(is_col0, jnp.zeros_like(left), left)
+            upleft_b = jnp.where(is_row0 | is_col0,
+                                 jnp.zeros_like(upleft), upleft)
+        else:
+            raise ValueError("family_cell serves non-sdtw families only; "
+                             "sdtw cells go through cell_update")
+        val = self.reduce3(left_b + t_left, up_b + t_up, upleft_b + t_diag)
+        if self.family == "local":
+            val = self.reduce2(val, jnp.zeros_like(val))
+        return val
+
     def band_valid(self, i, j):
         """Sakoe–Chiba validity mask ``|i - j| <= band`` (None when
         unbanded, so callers can skip the op entirely)."""
@@ -228,7 +463,11 @@ DEFAULT_SPEC = DPSpec()
 def resolve_spec(spec: DPSpec | None = None, *, distance: str | None = None,
                  reduction: str | None = None, gamma: float | None = None,
                  band: int | None = None,
-                 accum_dtype: str | None = None) -> DPSpec:
+                 accum_dtype: str | None = None,
+                 family: str | None = None, nu: float | None = None,
+                 lam: float | None = None, gap: float | None = None,
+                 gap_penalty: float | None = None,
+                 match_reward: float | None = None) -> DPSpec:
     """Merge convenience kwargs over an optional base spec.
 
     ``resolve_spec()`` is the default spec; kwargs override individual
@@ -241,7 +480,11 @@ def resolve_spec(spec: DPSpec | None = None, *, distance: str | None = None,
     updates = {k: v for k, v in [("distance", distance),
                                  ("reduction", reduction),
                                  ("gamma", gamma), ("band", band),
-                                 ("accum_dtype", accum_dtype)]
+                                 ("accum_dtype", accum_dtype),
+                                 ("family", family), ("nu", nu),
+                                 ("lam", lam), ("gap", gap),
+                                 ("gap_penalty", gap_penalty),
+                                 ("match_reward", match_reward)]
                if v is not None}
     return dataclasses.replace(base, **updates) if updates else base
 

@@ -1,0 +1,64 @@
+"""``repro.dp`` — the banded-DP recurrence algebra.
+
+One wavefront executor family (scan ref → anti-diagonal engine →
+Pallas wavefront kernel) serving FOUR recurrences over the same
+(distance × reduction × band × dtype) spec space:
+
+* ``sdtw``  — subsequence DTW (the paper's recurrence; free start,
+  free end, bottom-row fold);
+* ``twed``  — Time-Warp Edit Distance (Marteau 2009; global, stiffness
+  ``nu``, deletion penalty ``lam``, the ``q[-1] = r[-1] = 0`` padding
+  convention);
+* ``erp``   — Edit distance with Real Penalty (Chen & Ng 2004; global,
+  gap value ``gap``);
+* ``local`` — Smith–Waterman-style local alignment (max-objective, run
+  negated in min-space: the reported cost is MINUS the best local
+  similarity score; ``gap_penalty``/``match_reward`` knobs).
+
+The family is a frozen :class:`~repro.core.spec.RecurrenceSpec` axis on
+:class:`~repro.core.spec.DPSpec` — pick one with ``family=`` on
+:func:`repro.sdtw`, :class:`repro.Aligner`, or the :func:`score` front
+door here::
+
+    import repro.dp as dp
+    res = dp.score(queries, reference, family="twed", nu=0.5, lam=1.0)
+    res.cost, res.end                       # SDTWResult, same contract
+
+Backends declare which families they execute via the registry's
+``Capabilities.families`` axis; an unsupported (family × backend) pair
+raises the registry's who-can-instead error.  Validation baselines live
+in :mod:`repro.dp.oracle` (full-matrix numpy, float64).
+"""
+
+from __future__ import annotations
+
+from repro.core.spec import (FAMILIES, FAMILY_RECURRENCES,  # noqa: F401
+                             DPSpec, RecurrenceSpec, recurrence)
+from repro.dp.oracle import dp_matrix, dp_oracle
+
+
+def score(queries, reference, *, family: str = "sdtw", **kwargs):
+    """Score a query batch under any recurrence family.
+
+    A thin front door over :func:`repro.sdtw` (same kwargs: ``outputs``,
+    ``distance``, ``reduction``, ``gamma``, ``band``, ``backend``,
+    family parameters ``nu``/``lam``/``gap``/``gap_penalty``/
+    ``match_reward``, ...) returning the same
+    :class:`~repro.core.result.SDTWResult` pytree — ``cost`` is the
+    family's score (negated similarity for max-objective families) and
+    ``end`` the matched reference column.
+    """
+    from repro.core.api import sdtw
+    return sdtw(queries, reference, family=family, **kwargs)
+
+
+__all__ = [
+    "DPSpec",
+    "FAMILIES",
+    "FAMILY_RECURRENCES",
+    "RecurrenceSpec",
+    "dp_matrix",
+    "dp_oracle",
+    "recurrence",
+    "score",
+]

@@ -185,10 +185,62 @@ def kernel_plan(spec: DPSpec | None = None, *, m: int, n: int,
     these (unpadded) shapes executes — band-skip geometry included, so
     callers (search stats, benchmarks) can read ``plan.grid_blocks``
     vs ``plan.num_ref_blocks`` without running the kernel."""
+    sp = DEFAULT_SPEC if spec is None else spec
     blocks = ceil_to(n, LANES * segment_width) // (LANES * segment_width)
-    return build_plan(DEFAULT_SPEC if spec is None else spec, m=m,
+    return build_plan(sp, m=m,
                       segment_width=segment_width, num_ref_blocks=blocks,
-                      compute_dtype=compute_dtype, with_window=with_window)
+                      compute_dtype=compute_dtype, with_window=with_window,
+                      n=n if sp.family != "sdtw" else None)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "segment_width",
+                                             "compute_dtype"))
+def family_extras_ref(spec: DPSpec, reference, *, segment_width,
+                      compute_dtype=jnp.float32) -> tuple:
+    """The reference-derived family operands: twed's shifted reference
+    ``r[j-1]`` (``r[-1] = 0`` convention), erp's gap-cost prefix
+    ``bt[j] = cumsum d(r_k, gap)`` — both swizzled like the reference
+    layout.  Depend only on (reference, segment_width): an
+    :class:`repro.Aligner` session computes them ONCE next to its
+    cached layout, as closed-over constants (bit-identical to the
+    one-shot path — this standalone jit is the single compilation of
+    the prefix arithmetic)."""
+    if spec.family == "twed":
+        r = jnp.asarray(reference).astype(compute_dtype)
+        r_prev = jnp.concatenate([jnp.zeros((1,), r.dtype), r[:-1]])
+        return (swizzle_reference(r_prev, segment_width),)
+    if spec.family == "erp":
+        r = jnp.asarray(reference).astype(compute_dtype)
+        bt = jnp.cumsum(spec.cell_cost(r, spec.gap))
+        return (swizzle_reference(bt, segment_width),)
+    return ()
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "compute_dtype"))
+def family_extras_query(spec: DPSpec, queries, *,
+                        compute_dtype=jnp.float32) -> tuple:
+    """The query-derived family operands: erp's gap-cost prefix
+    ``bl[i] = cumsum d(q_k, gap)``, packed like the prepared queries."""
+    if spec.family == "erp":
+        q = jnp.asarray(queries).astype(compute_dtype)
+        bl = jnp.cumsum(spec.cell_cost(q, spec.gap), axis=-1)
+        return (prepare_queries(bl),)
+    return ()
+
+
+def family_extras(spec: DPSpec, queries, reference, *, segment_width,
+                  compute_dtype=jnp.float32) -> tuple:
+    """The family's extra kernel operands (``plan.extra_inputs`` order),
+    packed for :func:`sdtw_wavefront_prepped` — empty for sdtw/local.
+
+    All prefix arithmetic runs in the kernel's f32, through the same
+    two jitted helpers every caller uses, so the prefix-peeled
+    boundaries match the engine grid bit-for-bit.
+    """
+    return (family_extras_ref(spec, reference, segment_width=segment_width,
+                              compute_dtype=compute_dtype)
+            + family_extras_query(spec, queries,
+                                  compute_dtype=compute_dtype))
 
 
 @functools.partial(jax.jit, static_argnames=("segment_width", "compute_dtype"))
@@ -197,15 +249,15 @@ def _prep(queries, reference, *, segment_width, compute_dtype):
             swizzle_reference(reference.astype(compute_dtype), segment_width))
 
 
-@functools.partial(jax.jit, static_argnames=("m", "segment_width",
+@functools.partial(jax.jit, static_argnames=("m", "n", "segment_width",
                                              "interpret", "compute_dtype",
                                              "spec", "with_window"))
-def _dispatch(q_prepped, r_layout, *, m, segment_width, compute_dtype,
-              interpret, spec, with_window=False):
+def _dispatch(q_prepped, r_layout, extras=(), *, m, segment_width,
+              compute_dtype, interpret, spec, with_window=False, n=None):
     out = sdtw_wavefront_pallas(
-        q_prepped, r_layout, m=m, segment_width=segment_width,
+        q_prepped, r_layout, *extras, m=m, segment_width=segment_width,
         compute_dtype=compute_dtype, interpret=interpret, spec=spec,
-        with_window=with_window)
+        with_window=with_window, n=n)
     return tuple(x.reshape(-1) for x in out)
 
 
@@ -215,11 +267,17 @@ def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
                            compute_dtype=jnp.float32,
                            interpret: bool | None = None,
                            spec: DPSpec | None = None,
-                           return_window: bool = False):
+                           return_window: bool = False,
+                           extras: tuple = ()):
     """Dispatch the wavefront kernel on pre-packed operands.
 
     q_prepped: (G, SUBLANES, m + 2*(LANES-1)) from :func:`prepare_queries`
     r_layout:  (R, w, LANES) from :func:`swizzle_reference`
+    extras:    the spec family's packed extra operands from
+               :func:`family_extras` (required iff the plan's
+               ``extra_inputs`` is non-empty; sdtw/local take none).
+               Families ride the SAME single pallas_call — the plan
+               only adds operands and swaps the stream fold.
     batch:     true (un-padded) query count; m: query length; n: true
                reference length (pre-swizzle-padding).
     interpret: None = auto (:func:`default_interpret`).
@@ -257,20 +315,32 @@ def sdtw_wavefront_prepped(q_prepped: jnp.ndarray, r_layout: jnp.ndarray, *,
     validate_prepped(q_prepped, r_layout, m=m, n=n,
                      segment_width=segment_width)
     sp = DEFAULT_SPEC if spec is None else spec
-    if sp.band is not None and m - 1 - sp.band > n - 1:
-        # the band excludes every real bottom-row cell: no alignment
-        # exists.  Static in (m, n, band), so answer without touching
-        # the kernel — engine parity (+inf, end 0, NO_WINDOW start)
-        costs = jnp.full((batch,), jnp.inf, jnp.float32)
-        ends = jnp.zeros((batch,), jnp.int32)
-        if return_window:
-            return costs, jnp.full((batch,), NO_WINDOW, jnp.int32), ends
-        return costs, ends
-    out = _dispatch(q_prepped, r_layout, m=m,
+    if sp.band is not None:
+        if sp.family in ("twed", "erp"):
+            # global families: the corner (m-1, n-1) sits |m-n| off the
+            # diagonal — a tighter band disconnects the global path
+            blocked = sp.band < abs(m - n)
+        elif sp.family == "local":
+            blocked = False              # cell (0, 0) is always in band
+        else:
+            blocked = m - 1 - sp.band > n - 1
+        if blocked:
+            # the band excludes every fold-eligible cell: no alignment
+            # exists.  Static in (m, n, band), so answer without
+            # touching the kernel — engine parity (+inf, end 0,
+            # NO_WINDOW start)
+            costs = jnp.full((batch,), jnp.inf, jnp.float32)
+            ends = jnp.zeros((batch,), jnp.int32)
+            if return_window:
+                return (costs, jnp.full((batch,), NO_WINDOW, jnp.int32),
+                        ends)
+            return costs, ends
+    out = _dispatch(q_prepped, r_layout, tuple(extras), m=m,
                     segment_width=segment_width,
                     compute_dtype=compute_dtype,
                     interpret=_resolve_interpret(interpret),
-                    spec=sp, with_window=return_window)
+                    spec=sp, with_window=return_window,
+                    n=n if sp.family != "sdtw" else None)
     if return_window:
         costs, starts, ends = out
         # clamp padded-column starts like the ends, but keep the
@@ -300,10 +370,14 @@ def sdtw_wavefront(queries: jnp.ndarray, reference: jnp.ndarray, *,
     N = reference.shape[0]
     qk, rk = _prep(queries, reference, segment_width=segment_width,
                    compute_dtype=compute_dtype)
+    sp = DEFAULT_SPEC if spec is None else spec
+    extras = family_extras(sp, queries, reference,
+                           segment_width=segment_width,
+                           compute_dtype=compute_dtype)
     return sdtw_wavefront_prepped(
         qk, rk, batch=B, m=M, n=N, segment_width=segment_width,
         compute_dtype=compute_dtype, interpret=interpret, spec=spec,
-        return_window=return_window)
+        return_window=return_window, extras=extras)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "interpret"))

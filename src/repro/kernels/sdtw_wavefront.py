@@ -28,11 +28,13 @@ BIG = KERNEL_BIG   # likewise (value + dtype rationale in core/spec.py)
 
 def sdtw_wavefront_pallas(q_rev_pad: jnp.ndarray,
                           r_layout: jnp.ndarray,
-                          *, m: int, segment_width: int,
+                          *extras: jnp.ndarray,
+                          m: int, segment_width: int,
                           compute_dtype=jnp.float32,
                           interpret: bool = True,
                           spec: DPSpec = DEFAULT_SPEC,
-                          with_window: bool = False):
+                          with_window: bool = False,
+                          n: int | None = None):
     """Raw pallas_call wrapper. Use ``repro.kernels.ops.sdtw_wavefront``.
 
     q_rev_pad: (G, SUBLANES, Mp) reversed queries, Mp = m + 2*(LANES-1)
@@ -53,5 +55,7 @@ def sdtw_wavefront_pallas(q_rev_pad: jnp.ndarray,
     plan = build_plan(spec, m=m, segment_width=segment_width,
                       num_ref_blocks=r_layout.shape[0],
                       compute_dtype=compute_dtype,
-                      with_window=with_window)
-    return wavefront_call(plan, q_rev_pad, r_layout, interpret=interpret)
+                      with_window=with_window,
+                      n=n if spec.family != "sdtw" else None)
+    return wavefront_call(plan, q_rev_pad, r_layout, *extras,
+                          interpret=interpret)

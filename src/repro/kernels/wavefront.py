@@ -83,6 +83,21 @@ from repro.core.spec import (KERNEL_BIG, NO_WINDOW, SOFT_BIG, DPSpec)
 LANES = 128          # TPU VPU lane count (the paper's wavefront width = 64)
 SUBLANES = 8         # queries processed per grid step (sublane packing)
 
+_J_MAX = 2 ** 31 - 1   # lexicographic-min column sentinel (int32 max):
+#                        any real column index beats it, so it doubles
+#                        as "no eligible cell seen yet" in the local
+#                        (value, column) fold
+
+# Extra kernel operands the non-sdtw recurrence families ride along the
+# ONE pallas_call: 'r'-kind arrays are swizzled like the reference (one
+# (w, LANES) tile per grid block), 'q'-kind like the prepared queries
+# (one reversed+padded row pack per batch group).
+_EXTRA_KIND = {
+    "r_prev": "r",   # twed: r[j-1] with the r[-1] = 0 convention
+    "bt": "r",       # erp: gap-cost prefix over the reference
+    "bl": "q",       # erp: gap-cost prefix over each query
+}
+
 
 # ------------------------------------------------------------- channels
 @dataclasses.dataclass(frozen=True)
@@ -197,7 +212,7 @@ class MinArgminFold:
                 best_s = jnp.where(take, rows["start"][k], best_s)
         return best_v, j_base + best_k, best_s
 
-    def update(self, scr, *, at_bottom, rows, j_base, plan):
+    def update(self, scr, *, at_bottom, rows, j_base, plan, in_grid=None):
         best_v, best_j, best_s = self._segment_best(
             rows, j_base, plan.segment_width)
         cand = best_v.astype(jnp.float32)
@@ -247,7 +262,7 @@ class SoftMinFold:
         scr[2][...] = jnp.full((SUBLANES, LANES), -SOFT_BIG, jnp.float32)
         scr[3][...] = jnp.zeros((SUBLANES, LANES), jnp.float32)
 
-    def update(self, scr, *, at_bottom, rows, j_base, plan):
+    def update(self, scr, *, at_bottom, rows, j_base, plan, in_grid=None):
         MinArgminFold().update(scr[:2], at_bottom=at_bottom, rows=rows,
                                j_base=j_base, plan=plan)
         gamma = plan.spec.gamma
@@ -285,6 +300,148 @@ class SoftMinFold:
         outs[1][0, :] = idx
 
 
+@dataclasses.dataclass(frozen=True)
+class CornerFold:
+    """Global-corner fold for the twed/erp families: the answer is the
+    single cell ``(m-1, n-1)``, captured as the wavefront produces it.
+
+    Works for hard and soft reductions alike — the corner VALUE already
+    carries the reduction; the fold only has to find the one (lane,
+    segment-slot, step) triple that computes it.  A corner still holding
+    ~``plan.big`` at finalize means the band disconnected the global
+    path (every operand masked): report ``(+inf, end 0)``, engine
+    parity.  Pad columns (j >= n) can never pollute the corner — the DP
+    flows strictly left-to-right, so cell (m-1, n-1) never reads them.
+    """
+
+    def scratch_shapes(self):
+        return [pltpu.VMEM((SUBLANES, LANES), jnp.float32)]
+
+    def init(self, scr):
+        scr[0][...] = jnp.full((SUBLANES, LANES), KERNEL_BIG, jnp.float32)
+
+    def update(self, scr, *, at_bottom, rows, j_base, plan, in_grid=None):
+        acc = scr[0][...]
+        for k in range(plan.segment_width):
+            hit = at_bottom & (j_base + k == plan.n - 1)
+            acc = jnp.where(hit, rows["cost"][k].astype(jnp.float32), acc)
+        scr[0][...] = acc
+
+    def finalize(self, scr, outs, plan):
+        # exactly one lane ever wrote the corner; min() selects it
+        corner = jnp.min(scr[0][...], axis=1)                 # (S,)
+        blocked = corner >= jnp.asarray(plan.big / 2, jnp.float32)
+        outs[0][0, :] = jnp.where(
+            blocked, jnp.asarray(jnp.inf, jnp.float32), corner)
+        outs[1][0, :] = jnp.where(blocked, jnp.asarray(0, jnp.int32),
+                                  jnp.asarray(plan.n - 1, jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalCellsFold:
+    """Every-valid-cell lexicographic ``(value, column)`` minimum — the
+    local-alignment family's free-end fold.
+
+    Unlike the bottom-row folds, EVERY in-grid cell with a real column
+    (``j < n``) is a candidate end.  Per lane a streaming lex pair
+    (best value, best column) accumulates; finalize takes the cross-
+    lane min value and then the smallest column among the lanes
+    achieving it — lane order is NOT column order on a wavefront, so an
+    argmin-by-lane would break engine tie parity.  Cells still holding
+    ~``plan.big`` (band-masked) never take, mirroring the engine's
+    ``v < big/2`` guard.
+    """
+
+    def scratch_shapes(self):
+        return [pltpu.VMEM((SUBLANES, LANES), jnp.float32),   # lex value
+                pltpu.VMEM((SUBLANES, LANES), jnp.int32)]     # lex column
+
+    def init(self, scr):
+        scr[0][...] = jnp.full((SUBLANES, LANES), KERNEL_BIG, jnp.float32)
+        scr[1][...] = jnp.full((SUBLANES, LANES), _J_MAX, jnp.int32)
+
+    def update(self, scr, *, at_bottom, rows, j_base, plan, in_grid=None):
+        big_half = jnp.asarray(plan.big / 2, jnp.float32)
+        bv, bj = scr[0][...], scr[1][...]
+        for k in range(plan.segment_width):
+            j = j_base + k
+            cand = rows["cost"][k].astype(jnp.float32)
+            elig = in_grid & (j < plan.n) & (cand < big_half)
+            take = elig & ((cand < bv) | ((cand == bv) & (j < bj)))
+            bv = jnp.where(take, cand, bv)
+            bj = jnp.where(take, j, bj)
+        scr[0][...] = bv
+        scr[1][...] = bj
+
+    def _cross_lane(self, scr):
+        mv = scr[0][...]                                      # (S, L)
+        best = jnp.min(mv, axis=1)                            # (S,)
+        js = jnp.where(mv == best[:, None], scr[1][...], _J_MAX)
+        return best, jnp.min(js, axis=1)
+
+    def finalize(self, scr, outs, plan):
+        best, end = self._cross_lane(scr)
+        outs[0][0, :] = best
+        outs[1][0, :] = end
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftCellsFold:
+    """Soft local-alignment fold: a running logsumexp over EVERY valid
+    cell, next to the hard lex twin (end index, gamma -> 0 limit).
+
+    Eligibility must exclude pad columns explicitly: a PAD_VALUE
+    column's local cell floors to exactly 0 (``min(~1e12, 0)``), which
+    would weigh ``exp(0/gamma) = 1`` in the logsumexp — unlike the
+    bottom-row folds, padding is NOT self-masking here.  Ineligible
+    cells contribute ``exp(-inf) = 0`` exactly; the running max starts
+    at the FINITE ``-SOFT_BIG`` so ``-inf - m_run`` stays ``-inf``
+    (never the ``-inf - -inf = nan`` trap).  Band-masked in-band cells
+    carry ~``SOFT_BIG`` and underflow to weight 0, exactly like the
+    engine's masked diagonals.
+    """
+
+    def scratch_shapes(self):
+        return LocalCellsFold().scratch_shapes() + [
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),   # running max m
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32)]   # scaled sum s
+
+    def init(self, scr):
+        LocalCellsFold().init(scr[:2])
+        scr[2][...] = jnp.full((SUBLANES, LANES), -SOFT_BIG, jnp.float32)
+        scr[3][...] = jnp.zeros((SUBLANES, LANES), jnp.float32)
+
+    def update(self, scr, *, at_bottom, rows, j_base, plan, in_grid=None):
+        LocalCellsFold().update(scr[:2], at_bottom=at_bottom, rows=rows,
+                                j_base=j_base, plan=plan, in_grid=in_grid)
+        gamma = plan.spec.gamma
+        neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
+        xs = []
+        for k in range(plan.segment_width):
+            elig = in_grid & (j_base + k < plan.n)
+            xs.append(jnp.where(
+                elig, -(rows["cost"][k].astype(jnp.float32)) / gamma,
+                neg_inf))
+        mx = xs[0]
+        for x in xs[1:]:
+            mx = jnp.maximum(mx, x)
+        m_run, s_run = scr[2][...], scr[3][...]
+        m_safe = jnp.maximum(m_run, mx)
+        add = jnp.zeros_like(m_safe)
+        for x in xs:
+            add = add + jnp.exp(x - m_safe)
+        scr[2][...] = m_safe
+        scr[3][...] = s_run * jnp.exp(m_run - m_safe) + add
+
+    def finalize(self, scr, outs, plan):
+        _, end = LocalCellsFold()._cross_lane(scr[:2])
+        m_l, s_l = scr[2][...], scr[3][...]                   # (S, L)
+        m_g = jnp.max(m_l, axis=1)                            # (S,)
+        s_g = jnp.sum(s_l * jnp.exp(m_l - m_g[:, None]), axis=1)
+        outs[0][0, :] = -plan.spec.gamma * (m_g + jnp.log(s_g))
+        outs[1][0, :] = end
+
+
 # ----------------------------------------------------------------- plan
 def band_grid_blocks(m: int, band: int | None, num_ref_blocks: int,
                      segment_width: int) -> int:
@@ -317,8 +474,39 @@ class KernelPlan:
     checkpoint: bool = False     # emit each block's entry boundary
     #                              strip as an extra output (the fused
     #                              backward's O(M * N/W) residual)
+    n: int | None = None         # TRUE reference length (pre-padding);
+    #                              required by the non-sdtw families,
+    #                              whose folds are defined by it (the
+    #                              global corner j == n-1, the local
+    #                              valid-cell set j < n).  sdtw plans
+    #                              leave it None so their jit cache
+    #                              stays keyed on padded shapes alone.
 
     def __post_init__(self):
+        if self.spec.family != "sdtw":
+            if self.n is None:
+                raise ValueError(
+                    f"a {self.spec.family!r}-family plan needs the true "
+                    "reference length: its fold is defined by n (the "
+                    "global corner / the valid-cell set) — pass n= to "
+                    "build_plan")
+            if self.with_window:
+                raise ValueError(
+                    f"family {self.spec.family!r} has no matched-window "
+                    "start pointers on the kernel backend (window "
+                    "outputs ride the sdtw free-start recurrence); use "
+                    "engine or ref for family window outputs")
+            if self.reverse or self.checkpoint:
+                raise ValueError(
+                    "reverse/checkpoint sweeps implement the soft-DTW "
+                    f"backward; family {self.spec.family!r} plans do "
+                    "not support them")
+            if self.compute_dtype_name != "float32":
+                raise ValueError(
+                    f"family {self.spec.family!r} runs the kernel in "
+                    "float32 (transition costs and boundary prefixes "
+                    "must match the engine grid bit-for-bit); got "
+                    f"compute_dtype={self.compute_dtype_name}")
         if self.spec.distance == "cosine":
             raise ValueError(
                 "kernel backend does not support cosine (PAD_VALUE "
@@ -355,6 +543,22 @@ class KernelPlan:
         return SOFT_BIG if self.spec.soft else KERNEL_BIG
 
     @property
+    def family(self) -> str:
+        return self.spec.family
+
+    @property
+    def extra_inputs(self) -> tuple[str, ...]:
+        """Names of the family's extra kernel operands, in pallas_call
+        order (kinds in ``_EXTRA_KIND``): twed rides the shifted
+        reference, erp its two gap-cost prefixes; sdtw and local need
+        none."""
+        if self.family == "twed":
+            return ("r_prev",)
+        if self.family == "erp":
+            return ("bt", "bl")
+        return ()
+
+    @property
     def channels(self) -> tuple[CarryChannel, ...]:
         cost = CarryChannel(name="cost", prev_init=0.0,
                             edge_init=self.big,
@@ -370,6 +574,11 @@ class KernelPlan:
 
     @property
     def fold(self):
+        fold_kind = self.spec.recurrence.fold
+        if fold_kind == "corner":
+            return CornerFold()
+        if fold_kind == "cells":
+            return SoftCellsFold() if self.spec.soft else LocalCellsFold()
         if self.spec.soft:
             return SoftMinFold()
         return MinArgminFold(with_window=self.with_window)
@@ -437,7 +646,7 @@ class KernelPlan:
         }
 
     # ------------------------------------------------------------ cell
-    def cell(self, qv, rv, *, is_row0, i_l, j_col, vals3):
+    def cell(self, qv, rv, *, is_row0, i_l, j_col, vals3, extras=None):
         """One DP cell across every channel.
 
         ``vals3`` maps channel name -> (left, up, upleft) carries; the
@@ -446,10 +655,30 @@ class KernelPlan:
         (with the free-start row-0 boundary) for the cost channel,
         ``start3`` (the shared strict-< tie-break) for the start
         channel, ``band_valid`` masking both.
+
+        Non-sdtw families route through the ONE shared
+        :meth:`DPSpec.family_cell` definition instead (the same f32
+        graph the rowscan ref and the anti-diagonal engine run), fed
+        from ``extras``: per-cell values of the family's extra operands
+        (``q_prev``/``r_prev`` for twed, ``bt``/``bl`` prefixes for
+        erp).  The boundary injection lives inside ``family_cell``, so
+        the carries' edge sentinels are simply overridden at row/col 0.
         """
         spec = self.spec
         big = jnp.asarray(self.big, self.compute_dtype)
         left, up, upleft = vals3["cost"]
+        if spec.family != "sdtw":
+            ex = extras or {}
+            val = spec.family_cell(
+                qv, rv, left, up, upleft, i=i_l, j=j_col,
+                is_row0=is_row0, is_col0=(j_col == 0),
+                q_prev=ex.get("q_prev"), r_prev=ex.get("r_prev"),
+                top_boundary=ex.get("bt"), left_boundary=ex.get("bl"),
+                big=big)
+            in_band = spec.band_valid(i_l, j_col)
+            if in_band is not None:
+                val = jnp.where(in_band, val, big)
+            return {"cost": val}
         cost = spec.cell_cost(qv, rv)
         if self.reverse:
             # the reverse recurrence B[i,j] = C[i,j] + smin(B[i,j+1],
@@ -495,12 +724,13 @@ class KernelPlan:
 def build_plan(spec: DPSpec, *, m: int, segment_width: int,
                num_ref_blocks: int, compute_dtype=jnp.float32,
                with_window: bool = False,
-               band_skip: bool = True) -> KernelPlan:
+               band_skip: bool = True,
+               n: int | None = None) -> KernelPlan:
     """Convenience constructor accepting a jnp dtype object."""
     return KernelPlan(spec=spec, m=m, segment_width=segment_width,
                       num_ref_blocks=num_ref_blocks,
                       compute_dtype_name=jnp.dtype(compute_dtype).name,
-                      with_window=with_window, band_skip=band_skip)
+                      with_window=with_window, band_skip=band_skip, n=n)
 
 
 # ------------------------------------------------------------- executor
@@ -511,12 +741,17 @@ def _generic_kernel(q_ref, r_ref, *refs, plan: KernelPlan):
     q_ref:  (1, SUBLANES, Mp)  reversed+padded queries (see ops.py)
     r_ref:  (1, w, LANES)      reference block,
                                [k, l] = r[blk*LANES*w + l*w + k]
-    refs:   plan.num_outputs output refs, one boundary strip per
-            channel, then the fold's scratch accumulators.
+    refs:   ``plan.extra_inputs`` family operand refs (laid out like
+            q_ref or r_ref per ``_EXTRA_KIND``), then plan.num_outputs
+            output refs, one boundary strip per channel, then the
+            fold's scratch accumulators.
     """
     channels = plan.channels
     fold = plan.fold
     n_out, n_ch = plan.num_outputs, len(channels)
+    n_ex = len(plan.extra_inputs)
+    ex_refs = dict(zip(plan.extra_inputs, refs[:n_ex]))
+    refs = refs[n_ex:]
     out_refs = refs[:n_out]
     strip_refs = refs[n_out:n_out + n_ch]
     scr = refs[n_out + n_ch:]
@@ -559,6 +794,25 @@ def _generic_kernel(q_ref, r_ref, *refs, plan: KernelPlan):
                                        LANES)))[0]   # (S, L)
         qv = qv.astype(cdt)
 
+        # per-step family operand values, laid out exactly like qv /
+        # r_blk.  q_prev = q[i_l - 1] is the t-1 slice of the same
+        # reversed pack (start clamped so t = 0 never reads past the
+        # pad; lane 0's masked convention value 0 is injected instead).
+        ex_step = {}
+        if plan.family == "twed":
+            qp = pl.load(q_ref, (pl.dslice(0, 1), slice(None),
+                                 pl.dslice(m - 1 + LANES - 1
+                                           - jnp.maximum(t - 1, 0),
+                                           LANES)))[0].astype(cdt)
+            ex_step["q_prev"] = jnp.where(is_row0, jnp.zeros_like(qp), qp)
+            rp_blk = ex_refs["r_prev"][0]                 # (w, LANES)
+        elif plan.family == "erp":
+            bt_blk = ex_refs["bt"][0]                     # (w, LANES)
+            ex_step["bl"] = pl.load(
+                ex_refs["bl"], (pl.dslice(0, 1), slice(None),
+                                pl.dslice(m - 1 + LANES - 1 - t,
+                                          LANES)))[0].astype(cdt)
+
         rows = {ch.name: [] for ch in channels}
         lefts = {ch.name: c[1] for ch, c in zip(channels, carry)}
         for k in range(w):
@@ -567,15 +821,24 @@ def _generic_kernel(q_ref, r_ref, *refs, plan: KernelPlan):
                 up = prev_row[k]
                 upleft = prev_left if k == 0 else prev_row[k - 1]
                 vals3[ch.name] = (lefts[ch.name], up, upleft)
+            ex_k = None
+            if plan.family == "twed":
+                ex_k = dict(ex_step, r_prev=rp_blk[k].astype(cdt))
+            elif plan.family == "erp":
+                ex_k = dict(ex_step, bt=bt_blk[k].astype(cdt))
             new = plan.cell(qv, r_blk[k].astype(cdt), is_row0=is_row0,
-                            i_l=i_l, j_col=j_base + k, vals3=vals3)
+                            i_l=i_l, j_col=j_base + k, vals3=vals3,
+                            extras=ex_k)
             for ch in channels:
                 rows[ch.name].append(new[ch.name])
                 lefts[ch.name] = new[ch.name]
 
-        # streaming fold when a lane finishes its bottom row
+        # streaming fold when a lane finishes its bottom row (the
+        # family folds additionally see the in-grid mask: the local
+        # valid-cell fold is not a bottom-row fold)
         fold.update(scr, at_bottom=(i_l == m - 1), rows=rows,
-                    j_base=j_base, plan=plan)
+                    j_base=j_base, plan=plan,
+                    in_grid=(i_l >= 0) & (i_l < m))
 
         # lane roll + boundary-strip read, mechanically per channel
         t_next = jnp.minimum(t + 1, m - 1)
@@ -613,7 +876,8 @@ def _generic_kernel(q_ref, r_ref, *refs, plan: KernelPlan):
 
 
 def wavefront_call(plan: KernelPlan, q_rev_pad: jnp.ndarray,
-                   r_layout: jnp.ndarray, *, interpret: bool = True):
+                   r_layout: jnp.ndarray, *extras: jnp.ndarray,
+                   interpret: bool = True):
     """Execute a :class:`KernelPlan` as one ``pallas_call``.
 
     q_rev_pad: (G, SUBLANES, Mp) reversed queries from
@@ -621,6 +885,11 @@ def wavefront_call(plan: KernelPlan, q_rev_pad: jnp.ndarray,
                (a reverse plan takes the FLIPPED queries prepared the
                same way, against ``ops.swizzle_reference_reverse``)
     r_layout:  (R, w, LANES) pre-swizzled reference blocks
+    extras:    ``plan.extra_inputs`` family operands, in order, each
+               packed like q_rev_pad ('q'-kind) or r_layout ('r'-kind)
+               — see ``ops.family_extras``.  They ride the SAME
+               pallas_call through plan-driven in_specs; no family
+               adds a second kernel.
     returns    (costs (G, SUBLANES) f32, ends (G, SUBLANES) i32), plus
                starts in the middle for window plans, plus a trailing
                (G, grid_blocks, SUBLANES, m) f32 boundary-strip tensor
@@ -629,6 +898,11 @@ def wavefront_call(plan: KernelPlan, q_rev_pad: jnp.ndarray,
     """
     G, S, Mp = q_rev_pad.shape
     R, w, L = r_layout.shape
+    if len(extras) != len(plan.extra_inputs):
+        raise ValueError(
+            f"family {plan.family!r} plans take extra operands "
+            f"{plan.extra_inputs} (got {len(extras)}): build them with "
+            "ops.family_extras(spec, queries, reference, ...)")
     if S != SUBLANES or L != LANES:
         raise ValueError(
             f"operand layout mismatch: queries packed {S} per group "
@@ -667,6 +941,23 @@ def wavefront_call(plan: KernelPlan, q_rev_pad: jnp.ndarray,
         # grids start past the leading out-of-band flipped blocks)
         pl.BlockSpec((1, w, LANES), lambda b, r: (r + off, 0, 0)),
     ]
+    for name, arr in zip(plan.extra_inputs, extras):
+        if _EXTRA_KIND[name] == "r":
+            if arr.shape != r_layout.shape:
+                raise ValueError(
+                    f"family operand {name!r} {tuple(arr.shape)} must "
+                    f"be swizzled like the reference layout "
+                    f"{tuple(r_layout.shape)}")
+            in_specs.append(
+                pl.BlockSpec((1, w, LANES), lambda b, r: (r + off, 0, 0)))
+        else:
+            if arr.shape != q_rev_pad.shape:
+                raise ValueError(
+                    f"family operand {name!r} {tuple(arr.shape)} must "
+                    f"be packed like the prepared queries "
+                    f"{tuple(q_rev_pad.shape)}")
+            in_specs.append(
+                pl.BlockSpec((1, SUBLANES, Mp), lambda b, r: (b, 0, 0)))
     scratch = [ch.strip_shape(plan.m) for ch in plan.channels]
     scratch += plan.fold.scratch_shapes()
     kwargs = {}
@@ -677,7 +968,7 @@ def wavefront_call(plan: KernelPlan, q_rev_pad: jnp.ndarray,
         kernel, grid=grid, in_specs=in_specs, out_specs=tuple(out_specs),
         out_shape=tuple(out_shape), scratch_shapes=scratch,
         interpret=interpret, **kwargs,
-    )(q_rev_pad, r_layout)
+    )(q_rev_pad, r_layout, *extras)
     if plan.with_window:
         costs, ends, starts = out
         return costs, starts, ends

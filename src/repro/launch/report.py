@@ -23,6 +23,13 @@
     ``--compare``: 1 when anything is flagged, 2 on schema errors.
 
       python -m repro.launch.report --history benchmarks/history --last 5
+
+  * ``--plot DIR`` — render the same history archive as per-metric
+    trend SVGs (one ``<bench>__<metric>.svg`` sparkline per directional
+    metric series, dependency-free hand-rolled SVG) into ``--plot-out``
+    (default ``benchmarks/out/plots``):
+
+      python -m repro.launch.report --plot benchmarks/history
 """
 
 from __future__ import annotations
@@ -204,6 +211,103 @@ def history_trends(root: str, *, last: int = 5,
     return len(flagged)
 
 
+# --------------------------------------------------------------- plots
+def _slug(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9._-]+", "-", name)
+
+
+def _svg_sparkline(bench: str, metric: str,
+                   points: list[tuple[str, float]]) -> str:
+    """One metric series -> a self-contained SVG trend chart.
+
+    Hand-rolled (no matplotlib in the toolchain): a polyline over the
+    history entries oldest -> newest, per-entry dots, min/max/latest
+    annotations, and the latest point tinted by the metric's direction
+    (green when the latest value is on the good side of the series
+    median, red when on the bad side, gray for untracked metrics).
+    """
+    W, H = 520, 170
+    left, right, top, bottom = 56, 16, 34, 34
+    pw, ph = W - left - right, H - top - bottom
+    vals = [v for _, v in points]
+    lo, hi = min(vals), max(vals)
+    if hi == lo:                      # flat series: pad so it centers
+        pad = abs(hi) * 0.05 or 1.0
+        lo, hi = lo - pad, hi + pad
+    n = len(points)
+
+    def x(i):
+        return left + (pw * i / (n - 1) if n > 1 else pw / 2)
+
+    def y(v):
+        return top + ph * (1 - (v - lo) / (hi - lo))
+
+    direction = metric_direction(metric)
+    med = _median(vals)
+    latest = vals[-1]
+    if direction == 0 or latest == med:
+        tint = "#888888"
+    else:
+        good = (latest - med) * direction > 0
+        tint = "#2e7d32" if good else "#c62828"
+
+    pts = " ".join(f"{x(i):.1f},{y(v):.1f}"
+                   for i, (_, v) in enumerate(points))
+    dots = "\n  ".join(
+        f'<circle cx="{x(i):.1f}" cy="{y(v):.1f}" r="2.5" '
+        f'fill="{tint if i == n - 1 else "#1565c0"}">'
+        f"<title>{name}: {v:.6g}</title></circle>"
+        for i, (name, v) in enumerate(points))
+    first, last = points[0][0], points[-1][0]
+    return f"""<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}">
+  <rect width="{W}" height="{H}" fill="white"/>
+  <text x="{left}" y="16" font-family="monospace" font-size="12" fill="#333">{bench}: {metric}</text>
+  <text x="{W - right}" y="16" text-anchor="end" font-family="monospace" font-size="12" fill="{tint}">latest {latest:.6g}</text>
+  <text x="{left - 6}" y="{y(hi):.1f}" text-anchor="end" dominant-baseline="middle" font-family="monospace" font-size="10" fill="#777">{hi:.4g}</text>
+  <text x="{left - 6}" y="{y(lo):.1f}" text-anchor="end" dominant-baseline="middle" font-family="monospace" font-size="10" fill="#777">{lo:.4g}</text>
+  <line x1="{left}" y1="{top}" x2="{left}" y2="{top + ph}" stroke="#ccc"/>
+  <line x1="{left}" y1="{top + ph}" x2="{left + pw}" y2="{top + ph}" stroke="#ccc"/>
+  <polyline points="{pts}" fill="none" stroke="#1565c0" stroke-width="1.5"/>
+  {dots}
+  <text x="{left}" y="{H - 10}" font-family="monospace" font-size="10" fill="#777">{first}</text>
+  <text x="{left + pw:.0f}" y="{H - 10}" text-anchor="end" font-family="monospace" font-size="10" fill="#777">{last}</text>
+</svg>
+"""
+
+
+def write_plots(root: str, out_dir: str, *, last: int = 20,
+                out=None) -> list[str]:
+    """Render every metric series in the history archive under ``root``
+    (the ``benchmarks/history`` layout ``--history`` reads) to
+    ``out_dir/<bench>__<metric>.svg``; returns the written paths."""
+    out = sys.stdout if out is None else out
+    entries = load_history(root)
+    if not entries:
+        raise BenchSchemaError(f"{root}: no history entries with "
+                               f"BENCH_*.json files")
+    entries = entries[-last:]
+    series: dict[tuple[str, str], list[tuple[str, float]]] = {}
+    for name, docs in entries:
+        for bench, doc in sorted(docs.items()):
+            for key, val in sorted(doc["metrics"].items()):
+                if isinstance(val, bool) or \
+                        not isinstance(val, (int, float)):
+                    continue
+                series.setdefault((bench, key), []).append(
+                    (name, float(val)))
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for (bench, key), points in sorted(series.items()):
+        path = os.path.join(out_dir, f"{_slug(bench)}__{_slug(key)}.svg")
+        with open(path, "w") as f:
+            f.write(_svg_sparkline(bench, key, points))
+        written.append(path)
+    print(f"wrote {len(written)} trend SVG(s) over {len(entries)} "
+          f"history entr{'y' if len(entries) == 1 else 'ies'} -> "
+          f"{out_dir}", file=out)
+    return written
+
+
 def dryrun_table(args) -> int:
     rows = []
     for p in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
@@ -233,15 +337,34 @@ def main(argv=None):
     ap.add_argument("--history", metavar="DIR",
                     help="trend view over a benchmarks/history archive "
                          "(one <git-sha>/ entry per --ci run)")
-    ap.add_argument("--last", type=int, default=5,
-                    help="history entries to consider (default 5)")
+    ap.add_argument("--plot", metavar="DIR",
+                    help="render per-metric trend SVGs from a "
+                         "benchmarks/history archive")
+    ap.add_argument("--plot-out", default="benchmarks/out/plots",
+                    help="directory the --plot SVGs land in "
+                         "(default benchmarks/out/plots)")
+    ap.add_argument("--last", type=int, default=None,
+                    help="history entries to consider (default: 5 for "
+                         "--history, 20 for --plot)")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="relative worsening that counts as a "
                          "regression (default 0.10 = 10%%)")
     args = ap.parse_args(argv)
     obs.configure_logging()
-    if args.compare and args.history:
-        ap.error("--compare and --history are mutually exclusive")
+    if sum(map(bool, (args.compare, args.history, args.plot))) > 1:
+        ap.error("--compare, --history and --plot are mutually "
+                 "exclusive")
+
+    if args.plot:
+        if args.last is not None and args.last < 1:
+            ap.error("--last must be >= 1")
+        try:
+            write_plots(args.plot, args.plot_out,
+                        last=args.last or 20)
+        except (BenchSchemaError, OSError) as e:
+            log.error("%s", e)
+            return 2
+        return 0
 
     if args.compare:
         try:
@@ -252,10 +375,10 @@ def main(argv=None):
             return 2
         return 1 if n else 0
     if args.history:
-        if args.last < 1:
+        if args.last is not None and args.last < 1:
             ap.error("--last must be >= 1")
         try:
-            n = history_trends(args.history, last=args.last,
+            n = history_trends(args.history, last=args.last or 5,
                                threshold=args.threshold)
         except (BenchSchemaError, OSError) as e:
             log.error("%s", e)

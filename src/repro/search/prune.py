@@ -61,8 +61,16 @@ _COS_EPS = 1e-8          # must match spec.cell_cost's cosine epsilon
 def prune_admissible(spec: DPSpec) -> bool:
     """True when the cascade's bounds are true lower bounds of the
     spec'd sweep. Banding is always fine: a band only shrinks the path
-    set, so the unbanded bound still lower-bounds the banded cost."""
-    return (spec.reduction == "hardmin"
+    set, so the unbanded bound still lower-bounds the banded cost.
+
+    Only the sdtw family qualifies: the envelope bound lower-bounds the
+    SUBSEQUENCE-DTW path cost specifically — twed/erp add per-step
+    transition penalties the coarse DP does not model, and the local
+    family's negated-similarity costs are not even sign-compatible with
+    a gap bound.  Non-sdtw searches take exact full sweeps (the
+    service's pending list counts them as unpruned candidates)."""
+    return (spec.family == "sdtw"
+            and spec.reduction == "hardmin"
             and spec.distance in PRUNABLE_DISTANCES)
 
 

@@ -77,9 +77,19 @@ def machine_key(fingerprint: dict | None = None) -> str:
 
 def workload_key(*, spec, m: int, n: int, batch_bucket: int,
                  outputs) -> str:
-    """One tuning key per (recurrence, shape, outputs) workload."""
+    """One tuning key per (recurrence, shape, outputs) workload.
+
+    The recurrence FAMILY is part of the key: a twed and an sdtw
+    workload over identical (m, n, bucket, outputs) tune — and cache —
+    independently (their kernels run different folds and operand
+    sets).  The explicit ``fam=`` component rides next to
+    ``spec.describe()`` (which also spells the family parameters) for
+    every non-sdtw family; sdtw keys keep their historical form so
+    existing tuning caches stay warm.
+    """
     out = "+".join(sorted(outputs))
-    return (f"{spec.describe()}|accum={spec.accum_dtype}|m={m}|n={n}|"
+    fam = "" if spec.family == "sdtw" else f"fam={spec.family}|"
+    return (f"{fam}{spec.describe()}|accum={spec.accum_dtype}|m={m}|n={n}|"
             f"b={batch_bucket}|out={out}")
 
 

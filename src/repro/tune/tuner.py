@@ -15,9 +15,13 @@ keep winning), and records the argmin as a verdict in the
 ``tune.trials`` counter and runs under a ``tune.search`` tracer span; a
 warm cache answers with ``tune.cache_hits`` and ZERO trials.
 
-The default width always gets measured first among the kernel
-candidates, so the tuned plan can never be slower than
-``segment_width=8`` on the measurements it was chosen by.
+A cold key additionally consults the cache's OTHER shapes: when a
+nearby (m, n, bucket) of the same spec + outputs was already tuned,
+its winning width seeds the hill-climb start (``tune.seeded_starts``),
+so shape sweeps converge in fewer trials.  The default width still
+always gets measured among the kernel candidates, so the tuned plan
+can never be slower than ``segment_width=8`` on the measurements it
+was chosen by.
 
 Determinism for tests: pass ``timer=lambda label, make_fn: seconds`` to
 replace wall-clock measurement with a fake — same fake timings, same
@@ -28,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import re
 import time
 from typing import Callable, Mapping, Sequence
 
@@ -38,7 +43,7 @@ from repro.core.result import normalize_outputs, sweep_outputs
 from repro.core.spec import DEFAULT_SPEC, DPSpec
 from repro.kernels import ops
 from repro.kernels.wavefront import SUBLANES
-from repro.tune.cache import TuningCache, default_cache
+from repro.tune.cache import TuningCache, default_cache, workload_key
 
 log = logging.getLogger(__name__)
 
@@ -136,6 +141,45 @@ def _seeded_queries(batch: int, m: int) -> np.ndarray:
     tunes of the same key measure the same arithmetic."""
     rng = np.random.default_rng(0)
     return rng.standard_normal((batch, m)).astype(np.float32)
+
+
+_KEY_SHAPE = re.compile(r"\|m=(\d+)\|n=(\d+)\|b=(\d+)\|out=")
+
+
+def _seed_width(cache: TuningCache, spec: DPSpec, *, m: int, n: int,
+                bucket: int, outputs) -> int | None:
+    """Cross-shape seeding: the hill-climb start for a COLD key borrows
+    the winning width of the nearest already-tuned shape of the same
+    spec + outputs, so a 480x2000 tune that follows a 512x2000 tune
+    starts at the proven width instead of the blind default.
+
+    A candidate entry only counts when re-deriving its key through
+    :func:`workload_key` from the shape fields reproduces the stored
+    key byte-for-byte — that round-trip proves the entry belongs to
+    THIS spec (family included) and outputs, with no reliance on
+    parsing the spec part of the key.  Nearest = smallest L1 distance
+    over (m, n, bucket); ties break toward the smaller shape and then
+    the key string, so seeding is deterministic.
+    """
+    best = None   # ((distance, m', n', b', key), width)
+    for key, verdict in cache.entries().items():
+        mt = _KEY_SHAPE.search(key)
+        if not mt:
+            continue
+        mp, np_, bp = (int(g) for g in mt.groups())
+        if (mp, np_, bp) == (m, n, bucket):
+            continue            # the exact key already missed: stale row
+        if workload_key(spec=spec, m=mp, n=np_, batch_bucket=bp,
+                        outputs=outputs) != key:
+            continue            # other spec/outputs (or a parse alias)
+        w = verdict.get("segment_width")
+        if isinstance(w, bool) or not isinstance(w, int) or w < 1:
+            continue
+        rank = (abs(mp - m) + abs(np_ - n) + abs(bp - bucket),
+                mp, np_, bp, key)
+        if best is None or rank < best[0]:
+            best = (rank, w)
+    return None if best is None else best[1]
 
 
 def _candidate_backends(spec: DPSpec, req: frozenset,
@@ -269,13 +313,23 @@ def autotune(reference, *, m: int, batch: int,
         if "engine" in names:
             trial("engine", engine_fn)
         if "kernel" in names:
-            # hill-climb from the default width: measure it, then keep
-            # expanding to unmeasured neighbors of the current best
-            # until the best stops moving or the budget runs out
+            # hill-climb start: the default width, unless a neighboring
+            # shape of the same spec+outputs was already tuned — then
+            # its winning width seeds the climb (tune.seeded_starts);
+            # the default still gets measured, so the tuned plan can
+            # never lose to segment_width=8 on its own evidence.  From
+            # the start, keep expanding to unmeasured neighbors of the
+            # current best until it stops moving or the budget runs out.
             order = list(widths)
             start = (ops.DEFAULT_SEGMENT_WIDTH
                      if ops.DEFAULT_SEGMENT_WIDTH in order
                      else order[len(order) // 2])
+            seed = _seed_width(cache, spec, m=m, n=n, bucket=bucket,
+                               outputs=req)
+            if seed is not None and seed in order:
+                metrics.inc("tune.seeded_starts")
+                sp.set(seeded_start=seed)
+                trial(f"kernel:w{seed}", kernel_fn(seed))
             trial(f"kernel:w{start}", kernel_fn(start))
             while not exhausted():
                 kern = {int(lb.split("w", 1)[1]): t

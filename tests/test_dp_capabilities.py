@@ -1,0 +1,112 @@
+"""Recurrence-family capability gating (repro.dp satellite).
+
+The families axis is opt-in per backend: asking an incapable
+(backend x family) pair must fail LOUDLY with the registry's
+who-can-instead error — naming at least one backend that can run the
+request — and auto-selection must land on a family-capable backend,
+never silently downgrade to plain sdtw.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.backends import registry
+from repro.core.spec import resolve_spec
+
+FAMS = ("twed", "erp", "local")
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(3)
+    return (rng.standard_normal((3, 12)).astype(np.float32),
+            rng.standard_normal(30).astype(np.float32))
+
+
+# ----------------------------------------------- loud family rejection
+@pytest.mark.parametrize("family", FAMS)
+def test_quantized_family_raises_who_can_instead(family):
+    spec = resolve_spec(None, family=family)
+    with pytest.raises(ValueError) as e:
+        registry.resolve("quantized", spec)
+    msg = str(e.value)
+    assert f"family {family!r}" in msg
+    # the error names at least one backend that CAN run the family
+    assert "use one of" in msg
+    assert "engine" in msg
+
+
+def test_quantized_twed_front_door_raises(data):
+    q, r = data
+    with pytest.raises(ValueError, match="family 'twed'"):
+        repro.sdtw(q, r, backend="quantized", family="twed")
+
+
+@pytest.mark.parametrize("family", FAMS)
+def test_distributed_family_raises(family):
+    spec = resolve_spec(None, family=family)
+    with pytest.raises(ValueError, match=f"family {family!r}"):
+        registry.resolve("distributed", spec)
+
+
+# ------------------------------------------- no silent family downgrade
+@pytest.mark.parametrize("family", FAMS)
+def test_auto_select_preserves_family(family):
+    """backend=None lands on a family-capable backend and the resolved
+    spec still carries the requested family — never a silent sdtw."""
+    spec = resolve_spec(None, family=family)
+    backend, resolved = registry.select(spec)
+    assert resolved.family == family
+    assert family in backend.capabilities.families
+    assert backend.capabilities.unsupported_reason(resolved) is None
+
+
+@pytest.mark.parametrize("family", FAMS)
+def test_auto_select_front_door_matches_pinned_engine(data, family):
+    """The auto-selected backend computes the FAMILY's answer: it
+    agrees exactly with the pinned engine, so no path through selection
+    can have quietly run the sdtw recurrence instead."""
+    q, r = data
+    auto = repro.sdtw(q, r, family=family)
+    eng = repro.sdtw(q, r, family=family, backend="engine")
+    np.testing.assert_array_equal(np.asarray(auto.cost),
+                                  np.asarray(eng.cost))
+    np.testing.assert_array_equal(np.asarray(auto.end),
+                                  np.asarray(eng.end))
+    # and the family answer differs from plain sdtw on the same data
+    sdtw = repro.sdtw(q, r, backend="engine")
+    assert not np.allclose(np.asarray(auto.cost), np.asarray(sdtw.cost))
+
+
+# ------------------------------------------------ output-axis gating
+def test_kernel_window_request_names_window_capable_backend():
+    """The kernel runs every family but only folds sdtw windows:
+    twed+start on the kernel must point at ref/engine."""
+    spec = resolve_spec(None, family="twed")
+    with pytest.raises(ValueError) as e:
+        registry.resolve("kernel", spec, outputs=frozenset({"cost",
+                                                            "start"}))
+    assert "engine" in str(e.value)
+
+
+def test_local_start_unsupported_everywhere():
+    """Local alignment has no global start column semantics: no backend
+    claims it, and selection says so instead of guessing."""
+    spec = resolve_spec(None, family="local")
+    with pytest.raises(ValueError, match="no registered backend"):
+        registry.select(spec, outputs=frozenset({"cost", "start"}))
+
+
+@pytest.mark.parametrize("out", ["path", "soft_alignment"])
+def test_sdtw_only_outputs_gated(out):
+    spec = resolve_spec(None, family="twed",
+                        reduction="softmin" if out == "soft_alignment"
+                        else "hardmin")
+    with pytest.raises(ValueError, match="sdtw"):
+        registry.resolve("engine", spec, outputs=frozenset({out}))
+
+
+def test_capability_rows_spell_families():
+    rows = {r["backend"]: r for r in registry.capability_rows()}
+    assert rows["engine"]["families"] == "erp,local,sdtw,twed"
+    assert rows["quantized"]["families"] == "sdtw"

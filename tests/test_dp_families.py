@@ -1,0 +1,227 @@
+"""repro.dp — the recurrence-family validation matrix.
+
+Every family (twed / erp / local) x distance x band runs against the
+full-matrix float64 numpy oracle (``repro.dp.oracle``) on the ref and
+engine backends, with engine == ref BIT-identical; the kernel executes
+the same families through its derived ``KernelPlan`` and must be
+bit-identical to the engine on hard-min specs (<= 1e-4 relative on
+soft-min, where the kernel's streaming logsumexp reassociates).  Bands
+that disconnect a global family's corner short-circuit to (inf, 0) on
+every backend, Aligner sessions agree with one-shot dispatch, and the
+search cascade falls back to exact full sweeps for non-sdtw specs.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro import dp
+from repro.core.spec import resolve_spec
+from repro.dp.oracle import dp_oracle
+
+FAMS = ("twed", "erp", "local")
+PARAMS = dict(nu=0.5, lam=0.75, gap=0.25, gap_penalty=0.6,
+              match_reward=1.1, gamma=0.7)
+B, M, N = 3, 26, 30          # |M - N| = 4: band=8 keeps the corner
+#                              reachable, band=2 disconnects it
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(11)
+    return (rng.standard_normal((B, M)).astype(np.float32),
+            rng.standard_normal(N).astype(np.float32))
+
+
+def spec_for(family, distance="sqeuclidean", reduction="hardmin",
+             band=None):
+    return resolve_spec(None, family=family, distance=distance,
+                        reduction=reduction, band=band, **PARAMS)
+
+
+def run(q, r, spec, backend, **kw):
+    res = repro.sdtw(q, r, spec=spec, backend=backend, normalize=False,
+                     outputs=("cost", "end"), **kw)
+    return np.asarray(res.cost), np.asarray(res.end)
+
+
+# ------------------------------------------- oracle matrix: ref, engine
+@pytest.mark.parametrize("band", [None, 8])
+@pytest.mark.parametrize("reduction", ["hardmin", "softmin"])
+@pytest.mark.parametrize("distance", ["sqeuclidean", "abs", "cosine"])
+@pytest.mark.parametrize("family", FAMS)
+def test_ref_engine_match_oracle(data, family, distance, reduction, band):
+    q, r = data
+    spec = spec_for(family, distance, reduction, band)
+    want = [dp_oracle(q[b], r, spec) for b in range(B)]
+    want_c = np.array([c for c, _ in want])
+    want_e = np.array([e for _, e in want])
+
+    ref_c, ref_e = run(q, r, spec, "ref")
+    eng_c, eng_e = run(q, r, spec, "engine")
+
+    # engine is the scan ref re-ordered into anti-diagonals: same f32
+    # operations against the same shared reference -> same bits
+    np.testing.assert_array_equal(eng_c, ref_c)
+    np.testing.assert_array_equal(eng_e, ref_e)
+
+    # f32 executors vs the f64 oracle
+    assert np.array_equal(np.isinf(ref_c), np.isinf(want_c))
+    fin = ~np.isinf(want_c)
+    np.testing.assert_allclose(ref_c[fin], want_c[fin],
+                               rtol=1e-5, atol=1e-5)
+    if family == "local" and distance == "cosine":
+        # cosine's tiny cell costs make near-ties: f32 vs f64 can pick
+        # different (equal-valued) end columns; the cost already agreed
+        return
+    np.testing.assert_array_equal(ref_e, want_e)
+
+
+# ------------------------------------------------- kernel vs engine
+@pytest.mark.parametrize("width", [2, 8])
+@pytest.mark.parametrize("band", [None, 8])
+@pytest.mark.parametrize("reduction", ["hardmin", "softmin"])
+@pytest.mark.parametrize("distance", ["sqeuclidean", "abs"])
+@pytest.mark.parametrize("family", FAMS)
+def test_kernel_matches_engine(data, family, distance, reduction, band,
+                               width):
+    """The single pallas_call executes every family through its derived
+    KernelPlan: bit-identical to the engine on hard-min, <= 1e-4
+    relative on soft-min, end columns always exact."""
+    q, r = data
+    spec = spec_for(family, distance, reduction, band)
+    eng_c, eng_e = run(q, r, spec, "engine")
+    ker_c, ker_e = run(q, r, spec, "kernel", segment_width=width,
+                       interpret=True)
+    if reduction == "hardmin":
+        np.testing.assert_array_equal(ker_c, eng_c)
+    else:
+        both_inf = np.isinf(eng_c) & np.isinf(ker_c)
+        fin = ~both_inf
+        np.testing.assert_allclose(ker_c[fin], eng_c[fin],
+                                   rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(ker_e, eng_e)
+
+
+# ----------------------------------------------------- blocked bands
+@pytest.mark.parametrize("backend", ["ref", "engine", "kernel"])
+@pytest.mark.parametrize("family", ["twed", "erp"])
+def test_band_disconnects_global_corner(data, family, backend):
+    """band < |M - N| leaves no in-band path to the corner of a global
+    family: every backend reports (inf, 0), matching the oracle."""
+    q, r = data
+    spec = spec_for(family, band=2)
+    for b in range(B):
+        c, e = dp_oracle(q[b], r, spec)
+        assert np.isinf(c) and e == 0
+    kw = {"interpret": True} if backend == "kernel" else {}
+    cost, end = run(q, r, spec, backend, **kw)
+    assert np.all(np.isinf(cost)) and np.all(end == 0)
+
+
+def test_local_never_blocked(data):
+    """Local alignment folds over every valid cell — a narrow band
+    shrinks the cell set but can't disconnect anything."""
+    q, r = data
+    spec = spec_for("local", band=2)
+    for backend in ("ref", "engine"):
+        cost, _ = run(q, r, spec, backend)
+        assert np.all(np.isfinite(cost)) and np.all(cost <= 0)
+
+
+# -------------------------------------------------------- front doors
+def test_dp_score_front_door(data):
+    q, r = data
+    got = dp.score(q, r, family="erp", gap=0.25, backend="engine",
+                   normalize=False)
+    want = repro.sdtw(q, r, family="erp", gap=0.25, backend="engine",
+                      normalize=False)
+    np.testing.assert_array_equal(np.asarray(got.cost),
+                                  np.asarray(want.cost))
+    np.testing.assert_array_equal(np.asarray(got.end),
+                                  np.asarray(want.end))
+
+
+def test_plain_sdtw_unchanged_by_family_axis(data):
+    """The default spec IS sdtw: no family kwarg, no behavior change."""
+    q, r = data
+    assert resolve_spec(None).family == "sdtw"
+    a = repro.sdtw(q, r, backend="engine")
+    b = repro.sdtw(q, r, backend="engine", family="sdtw")
+    np.testing.assert_array_equal(np.asarray(a.cost), np.asarray(b.cost))
+
+
+# ----------------------------------------------------- Aligner sessions
+@pytest.mark.parametrize("family", FAMS)
+def test_aligner_session_family_parity(data, family):
+    """Precompiled sessions serve every family.  The engine session is
+    bit-identical to one-shot dispatch; the kernel session runs the
+    Pallas body inlined into one jit graph (interpret mode), so twed's
+    multi-term transitions may fuse a ulp differently — tight allclose
+    there, ends always exact."""
+    q, r = data
+    spec = spec_for(family)
+    one_e = run(q, r, spec, "engine")
+    sess_e = repro.Aligner(r, spec=spec, backend="engine",
+                           normalize=False)(q, outputs=("cost", "end"))
+    np.testing.assert_array_equal(np.asarray(sess_e.cost), one_e[0])
+    np.testing.assert_array_equal(np.asarray(sess_e.end), one_e[1])
+
+    one_k = run(q, r, spec, "kernel", interpret=True)
+    sess_k = repro.Aligner(r, spec=spec, backend="kernel",
+                           interpret=True,
+                           normalize=False)(q, outputs=("cost", "end"))
+    np.testing.assert_allclose(np.asarray(sess_k.cost), one_k[0],
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sess_k.end), one_k[1])
+
+
+# ------------------------------------------------- search: full sweeps
+def test_search_families_take_exact_full_sweeps(data):
+    """Non-sdtw families are outside the cascade's bound admissibility:
+    the service runs them as exact full sweeps (nothing pruned) and its
+    answers equal per-reference brute force."""
+    from repro.search import ReferenceIndex, SearchConfig, SearchService
+    from repro.search.prune import prune_admissible
+    q, _ = data
+    rng = np.random.default_rng(5)
+    spec = spec_for("twed")
+    assert not prune_admissible(spec)
+
+    index = ReferenceIndex(normalize=False, spec=spec)
+    refs = {f"r{i}": rng.standard_normal(N + 4 * i).astype(np.float32)
+            for i in range(3)}
+    for name, series in refs.items():
+        index.add(name, series)
+    svc = SearchService(index, SearchConfig(normalize=False))
+    assert not svc.prune_active
+    hits = svc.topk(q, k=1)
+    assert svc.last.dp_pairs == B * len(refs)     # every pair swept
+    assert svc.last.pruned_stage0 == svc.last.pruned_later == 0
+
+    for b in range(B):
+        best = min(
+            ((name, float(np.asarray(
+                repro.sdtw(q[b:b + 1], series, spec=spec,
+                           backend="engine",
+                           normalize=False).cost)[0]))
+             for name, series in refs.items()),
+            key=lambda t: t[1])
+        assert hits[b][0].reference == best[0]
+        assert np.isclose(hits[b][0].cost, best[1], rtol=1e-6)
+
+
+# -------------------------------------------------- plan-level guards
+def test_kernel_plan_family_validation():
+    from repro.kernels.wavefront import build_plan
+    spec = spec_for("twed")
+    with pytest.raises(ValueError, match="n"):
+        build_plan(spec, m=M, segment_width=8, num_ref_blocks=1)
+    with pytest.raises(ValueError, match="window"):
+        build_plan(spec, m=M, segment_width=8, num_ref_blocks=1, n=N,
+                   with_window=True)
+    plan = build_plan(spec, m=M, segment_width=8, num_ref_blocks=1, n=N)
+    assert plan.family == "twed"
+    assert plan.extra_inputs == ("r_prev",)
+    erp = build_plan(spec_for("erp"), m=M, segment_width=8,
+                     num_ref_blocks=1, n=N)
+    assert erp.extra_inputs == ("bt", "bl")

@@ -520,3 +520,29 @@ def test_traced_search_and_aligner_end_to_end(tmp_path):
     assert m.value("search.pruned_stage0") > 0   # cascade did something
     assert m.value("aligner.cache_hits") == 1
     assert m.histogram("span.search.topk.ms").count == 1
+
+
+# ---------------------------------------------------------- report plots
+
+def test_report_plot_writes_trend_svgs(tmp_path):
+    from repro.launch import report
+    root, out = tmp_path / "history", tmp_path / "plots"
+    for sha, ms in (("aaa1111", 10.0), ("bbb2222", 12.0)):
+        obench.write_bench("u", out_dir=str(root / sha),
+                           rows=[{"ms": ms, "qps": 100.0}])
+    paths = report.write_plots(str(root), str(out))
+    import os
+    assert sorted(os.path.basename(p) for p in paths) == \
+        ["u__ms.svg", "u__qps.svg"]
+    svg = (out / "u__ms.svg").read_text()
+    assert svg.startswith("<svg") and "u: ms" in svg
+    assert "latest 12" in svg
+    # one point per history entry
+    assert svg.count("<circle") == 2
+    # CLI round trip, and schema errors exit 2
+    assert report.main(["--plot", str(root),
+                        "--plot-out", str(out)]) == 0
+    empty = tmp_path / "nohistory"
+    empty.mkdir()
+    assert report.main(["--plot", str(empty),
+                        "--plot-out", str(out)]) == 2

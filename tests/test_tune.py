@@ -476,3 +476,100 @@ def test_layout_requires_width_under_auto(data, mem_cache):
     with pytest.raises(ValueError, match="auto"):
         a.layout()
     assert a.layout(segment_width=4).shape[1] == 4
+
+
+# -------------------------------------- recurrence families in the key
+def test_workload_key_family_component():
+    """Two recurrence families over identical (m, n, bucket, outputs)
+    tune independently: the family is spelled in the workload key."""
+    from repro.core.spec import resolve_spec
+    shapes = dict(m=512, n=2000, batch_bucket=8,
+                  outputs=frozenset({"cost", "end"}))
+    keys = {fam: tune.workload_key(spec=resolve_spec(None, family=fam),
+                                   **shapes)
+            for fam in ("sdtw", "twed", "erp", "local")}
+    assert len(set(keys.values())) == 4
+    # sdtw keys keep their historical (pre-family) form: existing
+    # tuning caches stay warm across the upgrade
+    assert "fam=" not in keys["sdtw"]
+    for fam in ("twed", "erp", "local"):
+        assert f"fam={fam}|" in keys[fam]
+
+
+def test_family_cache_sections_distinct(data):
+    """Regression: a twed tune and an sdtw tune of the SAME shapes land
+    in distinct cache entries, each answering warm with its own
+    verdict."""
+    from repro.core.spec import resolve_spec
+    _, r = data
+    cache = tune.TuningCache(None)
+    sdtw_spec = resolve_spec(None)
+    twed_spec = resolve_spec(None, family="twed")
+    tune.autotune(r, m=20, batch=5, spec=sdtw_spec, candidates=WIDTHS,
+                  interpret=True, cache=cache, metrics=MetricsRegistry(),
+                  timer=fake_timer({"engine": 5.0, "kernel:w8": 3.0,
+                                    "kernel:w4": 1.0}))
+    tune.autotune(r, m=20, batch=5, spec=twed_spec, candidates=WIDTHS,
+                  interpret=True, cache=cache, metrics=MetricsRegistry(),
+                  timer=fake_timer({"engine": 5.0, "kernel:w8": 3.0,
+                                    "kernel:w14": 1.0}))
+    assert len(cache) == 2
+    req = frozenset({"cost", "end"})
+    k_sdtw = cache.key(spec=sdtw_spec, m=20, n=len(r), batch_bucket=8,
+                       outputs=req)
+    k_twed = cache.key(spec=twed_spec, m=20, n=len(r), batch_bucket=8,
+                       outputs=req)
+    assert cache.get(k_sdtw)["segment_width"] == 4
+    assert cache.get(k_twed)["segment_width"] == 14
+    # both answer warm from their own section
+    for spec, width in ((sdtw_spec, 4), (twed_spec, 14)):
+        m = MetricsRegistry()
+        res = tune.autotune(r, m=20, batch=5, spec=spec,
+                            candidates=WIDTHS, interpret=True,
+                            cache=cache, metrics=m,
+                            timer=fake_timer({}))
+        assert res.from_cache and res.segment_width == width
+        assert m.value("tune.trials") == 0
+
+
+# ------------------------------------------------- cross-shape seeding
+def test_cross_shape_seeding(data):
+    """A cold tune of a NEARBY shape starts the hill-climb at the
+    cached winner's width (tune.seeded_starts), while the default
+    width still gets measured."""
+    _, r = data
+    cache = tune.TuningCache(None)
+    times = {"engine": 5.0, "kernel:w8": 3.0, "kernel:w4": 2.0,
+             "kernel:w2": 2.5, "kernel:w14": 4.0}
+    m1 = MetricsRegistry()
+    res1 = tune.autotune(r, m=20, batch=5, candidates=WIDTHS,
+                         interpret=True, cache=cache, metrics=m1,
+                         timer=fake_timer(times))
+    assert (res1.segment_width, m1.value("tune.seeded_starts")) == (4, 0)
+    # same spec+outputs, nearby m: the climb starts at w=4, not w=8
+    m2 = MetricsRegistry()
+    timer = fake_timer(times)
+    res2 = tune.autotune(r, m=24, batch=5, candidates=WIDTHS,
+                         interpret=True, cache=cache, metrics=m2,
+                         timer=timer)
+    assert m2.value("tune.seeded_starts") == 1
+    assert res2.segment_width == 4 and not res2.from_cache
+    kernel_calls = [c for c in timer.calls if c.startswith("kernel:")]
+    assert kernel_calls[0] == "kernel:w4"
+    assert "kernel:w8" in res2.measured     # default still measured
+
+
+def test_seeding_skips_other_spec_and_outputs(data):
+    """Verdicts recorded for another family never seed this one: the
+    reconstructed-key match must be exact."""
+    from repro.core.spec import resolve_spec
+    _, r = data
+    times = {"engine": 5.0, "kernel:w8": 3.0, "kernel:w4": 2.0}
+    cache = tune.TuningCache(None)
+    tune.autotune(r, m=20, batch=5, spec=resolve_spec(None, family="erp"),
+                  candidates=WIDTHS, interpret=True, cache=cache,
+                  metrics=MetricsRegistry(), timer=fake_timer(times))
+    m2 = MetricsRegistry()
+    tune.autotune(r, m=24, batch=5, candidates=WIDTHS, interpret=True,
+                  cache=cache, metrics=m2, timer=fake_timer(times))
+    assert m2.value("tune.seeded_starts") == 0
